@@ -1,0 +1,79 @@
+"""Fig. 12 analogue — DLRM inference throughput, native vs MERCI reduction.
+
+Measured: end-to-end inference time (embedding reduction + interactions +
+MLPs) for raw queries vs host-rewritten MERCI queries, across synthetic
+"datasets" of increasing pair co-occurrence (the Amazon-Review clusters of
+the paper). Also reported: the bandwidth model for the paper's ORCA-LD /
+ORCA-LH arms (2xDDR4 ~36 GB/s vs HBM2 ~425 GB/s vs host 120 GB/s), which is
+what inverts the result in the paper's favor on accelerator-attached
+memory — on TPU the tables live in HBM natively (DESIGN.md §9.4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import measure, row
+from repro.core import dlrm
+
+CFG = dlrm.DLRMConfig(num_tables=8, rows=16384, dim=64, lookups=32,
+                      cluster=4, memo_ratio=0.25)
+BW = {"cpu8": 120e9, "orca_ld": 36e9, "orca_lh": 425e9}
+
+
+def run():
+    rows = []
+    params = dlrm.init_params(jax.random.key(0), CFG)
+    merci = dlrm.MerciIndex(CFG, seed=0)
+    ext = merci.build_tables(params["tables"])
+    fwd_raw = jax.jit(lambda d, i: dlrm.forward(params, d, i, CFG))
+    fwd_mem = jax.jit(lambda d, i: dlrm.forward(params, d, i, CFG, tables_ext=ext))
+    rng = np.random.default_rng(1)
+    b = 64
+
+    for name, hit in (("books", 0.35), ("electronics", 0.55), ("sports", 0.75)):
+        dense, idx = dlrm.gen_queries(CFG, b, merci, hit_rate=hit, rng=rng)
+        new_idx, saved = merci.rewrite_query(idx)
+        dj, ij, nj = jnp.asarray(dense), jnp.asarray(idx), jnp.asarray(new_idx)
+        t_raw = measure(fwd_raw, dj, ij)
+        t_mem = measure(fwd_mem, dj, nj)
+        gather_cut = saved / idx.size
+        # bandwidth model: reduction bytes = live gathers * dim * 4B
+        live = idx.size - saved
+        red_bytes_raw = idx.size * CFG.dim * 4
+        red_bytes_mem = live * CFG.dim * 4
+        qps = {k: b * bw / red_bytes_raw for k, bw in BW.items()}
+        qps_m = {k: b * bw / red_bytes_mem for k, bw in BW.items()}
+        rows.append(row(
+            f"dlrm_{name}_native", t_raw,
+            f"qps_measured={b * 1e6 / t_raw:.0f};"
+            f"model_qps_cpu8={qps['cpu8']:.0f};ld={qps['orca_ld']:.0f};"
+            f"lh={qps['orca_lh']:.0f}",
+        ))
+        rows.append(row(
+            f"dlrm_{name}_merci", t_mem,
+            f"qps_measured={b * 1e6 / t_mem:.0f};gathers_cut={gather_cut:.0%};"
+            f"speedup={t_raw / t_mem:.2f}x;"
+            f"model_lh_vs_cpu={qps_m['orca_lh'] / qps['cpu8']:.1f}x"
+            f"(paper 1.6-3.1x)",
+        ))
+
+    # host/device collaboration split (the ORCA-DLRM §IV-C path): host
+    # preprocessing (rewrite) vs device inference
+    dense, idx = dlrm.gen_queries(CFG, b, merci, hit_rate=0.6, rng=rng)
+    import time
+
+    t0 = time.perf_counter()
+    new_idx, _ = merci.rewrite_query(idx)
+    host_us = (time.perf_counter() - t0) * 1e6
+    dev_us = measure(fwd_mem, jnp.asarray(dense), jnp.asarray(new_idx))
+    rows.append(row(
+        "dlrm_host_device_split", host_us + dev_us,
+        f"host_preproc_us={host_us:.0f};device_us={dev_us:.0f};"
+        f"paper=1 CPU core at 60% keeps up",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

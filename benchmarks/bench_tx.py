@@ -1,0 +1,80 @@
+"""Fig. 11 analogue — chain-replicated transactions: ORCA vs HyperLoop.
+
+The paper's mechanism: HyperLoop issues one group-RDMA chain traversal PER
+OPERATION; ORCA packs the multi-op transaction into one log entry and
+traverses once. Latency = measured replica apply time + modeled chain
+transport (hops x NET_RTT + per-replica PCIe/NVM costs). The (0,1) case
+must come out ~equal (paper: ORCA within 3%) and (4,2) must show the
+63-69% reduction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import NET_RTT_US, PCIE_RTT_US, UPI_HOP_US, measure, row
+from repro.core import transaction as tx
+
+NVM_WRITE_US = 0.8  # Optane media write (paper §IV-B region, [74,172])
+
+
+def _batch(cfg, n_read, n_write, val_words, rng, batch=8):
+    w = tx.tx_words(cfg)
+    out = np.zeros((batch, w), np.int32)
+    for i in range(batch):
+        out[i, 0] = n_write  # reads are served by the head directly (§IV-B)
+        for j in range(n_write):
+            base = 1 + j * (1 + cfg.val_words)
+            out[i, base] = int(rng.integers(0, cfg.num_keys))
+            out[i, base + 1 : base + 1 + cfg.val_words] = \
+                rng.integers(0, 1 << 20, cfg.val_words)
+    return jnp.asarray(out)
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for val_bytes in (64, 1024):
+        vw = val_bytes // 4
+        cfg = tx.TxConfig(num_keys=4096, val_words=vw, max_ops=8,
+                          chain_len=2, log_capacity=256)
+        chain = tx.make_chain(cfg)
+        commit = jax.jit(lambda c, b: tx.chain_commit_local(c, b, cfg))
+        for (r, wr) in ((0, 1), (4, 2)):
+            batch = _batch(cfg, r, wr, vw, rng)
+            t_us = measure(lambda c, b: commit(c, b)[0], chain, batch)
+            apply_us = t_us / batch.shape[0]
+            n_ops = r + wr
+
+            def model(per_op: bool) -> float:
+                traversals = n_ops if per_op else 1
+                chain_us = traversals * (
+                    2 * (cfg.chain_len - 1) * NET_RTT_US
+                    + cfg.chain_len * (PCIE_RTT_US + NVM_WRITE_US)
+                )
+                proc = apply_us * (traversals if per_op else 1)
+                return chain_us + proc + NET_RTT_US  # client RTT
+
+            orca_us = model(per_op=False)
+            hloop_us = model(per_op=True)
+            red = 100 * (1 - orca_us / hloop_us)
+            rows.append(row(
+                f"tx_{val_bytes}B_r{r}w{wr}_orca", orca_us,
+                f"hyperloop_us={hloop_us:.1f};reduction={red:.1f}%"
+                f";paper=63.2-66.8%(multi-op),~0%(single-op)"
+                f";apply_us={apply_us:.2f}",
+            ))
+    # conflict-control overhead: batch with a hot key
+    cfg = tx.TxConfig(num_keys=64, val_words=16, max_ops=4, chain_len=2,
+                      log_capacity=256)
+    chain = tx.make_chain(cfg)
+    commit = jax.jit(lambda c, b: tx.chain_commit_local(c, b, cfg))
+    hot = _batch(cfg, 0, 2, 16, rng, batch=16)
+    t = measure(lambda c, b: commit(c, b)[0], chain, hot)
+    rows.append(row("tx_concurrency_control_batch16", t,
+                    "includes first-claimant conflict resolution"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""§Roofline reporter: reads experiments/dryrun/*.json and prints the
+three-term table (compute / memory / collective seconds per step, dominant
+term, MODEL_FLOPS/HLO ratio, roofline fraction) for every cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(art_dir: str = ART, mesh: str = None, tag: bool = False):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            cells.append(r)
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if not tag and r["cell"].count("__") > 2:
+            continue  # hillclimb variants excluded from the baseline table
+        cells.append(r)
+    return cells
+
+
+def table(cells, out=print):
+    hdr = (f"{'cell':44s} {'comp_s':>8s} {'memT_s':>8s} {'coll_s':>8s} "
+           f"{'dom':>6s} {'useful':>7s} {'roofl%':>7s} {'fits':>5s}")
+    out(hdr)
+    for r in cells:
+        if r.get("skipped"):
+            out(f"{r['cell']:44s} SKIP ({r['reason'][:60]})")
+            continue
+        t = r["terms_s"]
+        mem = t.get("memory_tpu_s", t["memory_s"])
+        out(
+            f"{r['cell']:44s} {t['compute_s']:8.3f} {mem:8.3f} "
+            f"{t['collective_s']:8.3f} {r['dominant'][:4]:>6s} "
+            f"{r['useful_flops_ratio']:7.3f} {100 * r['roofline_fraction']:6.1f}% "
+            f"{'yes' if r['fits_hbm'] else 'NO':>5s}"
+        )
+
+
+def run():
+    cells = load()
+    table(cells)
+    done = [c for c in cells if not c.get("skipped")]
+    if done:
+        worst = min(done, key=lambda r: r["roofline_fraction"])
+        coll = max(done, key=lambda r: r["terms_s"]["collective_s"])
+        print(f"\nworst roofline fraction: {worst['cell']} "
+              f"({100 * worst['roofline_fraction']:.2f}%)")
+        print(f"most collective-bound:  {coll['cell']} "
+              f"({coll['terms_s']['collective_s']:.2f}s)")
+    return [(c["cell"], c.get("step_time_bound_s", 0.0)) for c in done]
+
+
+if __name__ == "__main__":
+    run()

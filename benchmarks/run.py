@@ -1,0 +1,30 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline terms come from the
+dry-run artifacts (run ``python -m repro.launch.dryrun --all`` first; see
+benchmarks/roofline.py)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+
+def main() -> None:
+    from benchmarks import bench_cpoll, bench_dlrm, bench_kvs, bench_tx, roofline
+
+    print("name,us_per_call,derived")
+    print("# --- Fig. 7: cpoll vs polling ---")
+    bench_cpoll.run()
+    print("# --- Fig. 8/9/10 + Tab. III: KVS ---")
+    bench_kvs.run()
+    print("# --- Fig. 11: chain-replicated transactions ---")
+    bench_tx.run()
+    print("# --- Fig. 12: DLRM inference ---")
+    bench_dlrm.run()
+    print("# --- Roofline (from dry-run artifacts) ---")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""ORCA-DLRM (§IV-C): CPU/accelerator-collaborative recommendation serving.
+
+The host parses and MERCI-rewrites queries (the irregular, branch-rich
+part); the device runs the memory-bound embedding reduction + MLPs. Both
+the native and memoized paths are exercised and cross-checked.
+
+    PYTHONPATH=src python examples/dlrm_inference.py
+"""
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dlrm
+
+
+def main():
+    cfg = dlrm.DLRMConfig(num_tables=8, rows=8192, dim=64, lookups=32,
+                          cluster=4, memo_ratio=0.25)
+    params = dlrm.init_params(jax.random.key(0), cfg)
+    merci = dlrm.MerciIndex(cfg, seed=0)
+    ext = merci.build_tables(params["tables"])
+    fwd_raw = jax.jit(lambda d, i: dlrm.forward(params, d, i, cfg))
+    fwd_mem = jax.jit(lambda d, i: dlrm.forward(params, d, i, cfg,
+                                                tables_ext=ext))
+    rng = np.random.default_rng(0)
+
+    total_q, total_saved = 0, 0
+    for batch_id in range(4):
+        dense, idx = dlrm.gen_queries(cfg, 32, merci, hit_rate=0.6, rng=rng)
+        # host side: parse + memoization rewrite
+        new_idx, saved = merci.rewrite_query(idx)
+        total_q += idx.size
+        total_saved += saved
+        # device side: inference
+        t0 = time.perf_counter()
+        logits_m = fwd_mem(jnp.asarray(dense), jnp.asarray(new_idx))
+        logits_m.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e3
+        logits_r = fwd_raw(jnp.asarray(dense), jnp.asarray(idx))
+        err = float(jnp.max(jnp.abs(logits_m - logits_r)))
+        print(f"batch {batch_id}: 32 queries in {dt:.1f} ms, "
+              f"{saved} gathers memoized, |native - merci| = {err:.2e}")
+        assert err < 1e-3
+    print(f"total: {total_saved}/{total_q} gathers removed "
+          f"({100 * total_saved / total_q:.0f}%) — the Fig. 12 mechanism")
+
+
+if __name__ == "__main__":
+    main()

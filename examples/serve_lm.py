@@ -1,0 +1,29 @@
+"""LM serving through the ORCA engine: continuous batching, ring-buffer
+admission, cpoll notification — clients inject prompts, the engine prefils
+into free slots and decodes all active slots each tick.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 16 --arch rwkv6-1.6b
+"""
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=16)
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch,
+        "--requests", str(args.requests),
+        "--prompt-len", "12", "--gen-len", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import AsyncCheckpointer, latest_step, restore, save
+from repro.checkpoint.elastic import resume, shardings_for

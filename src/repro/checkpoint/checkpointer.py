@@ -1,0 +1,152 @@
+"""Sharded, atomic, async checkpointing with resharding restore.
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json      # step, mesh shape+axes, tree structure, specs
+        host<k>.npz        # this host's addressable shards, flat-keyed
+
+Commit protocol: write into ``step_<N>.tmp`` then ``os.rename`` — a crashed
+save never shadows the last good checkpoint (restore picks the largest
+committed step). ``async_save`` runs the serialization on a background
+thread; the train driver only blocks on the *previous* save (one outstanding
+checkpoint, like Orbax).
+
+Restore reads every host file it can see (single-host CPU tests see all of
+them) and ``jax.device_put``s each tree leaf with the *target* sharding, so
+the mesh at restore time may differ from the mesh at save time — that is the
+elastic-resize path (fault tolerance §6 of DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = leaf
+    return flat
+
+
+def _tree_def(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, tree, host_id: int = 0, num_hosts: int = 1):
+    """Synchronous sharded save + atomic commit (host 0 commits)."""
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        if arr.dtype == jnp.bfloat16:
+            arrays[k + "::bf16"] = arr.view(np.uint16)
+        else:
+            arrays[k] = arr
+    np.savez(os.path.join(tmp, f"host{host_id}.npz"), **arrays)
+    if host_id == 0:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        manifest = {
+            "step": step,
+            "num_hosts": num_hosts,
+            "keys": list(flat.keys()),
+            "shapes": {k: list(np.shape(v)) for k, v in flat.items()},
+            "dtypes": {k: str(jnp.asarray(v).dtype) for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            import shutil
+
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """One outstanding async save; ``wait()`` before the next or at exit."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+
+        def work():
+            try:
+                save(self.directory, step, host_tree)
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like, shardings=None):
+    """Load a checkpoint into the structure of ``like`` (a pytree of arrays
+    or ShapeDtypeStructs). ``shardings``: matching pytree of shardings for
+    the *target* mesh (elastic restore) or None for host-local arrays."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data: dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(path)):
+        if name.endswith(".npz"):
+            with np.load(os.path.join(path, name)) as z:
+                for k in z.files:
+                    if k.endswith("::bf16"):
+                        data[k[: -len("::bf16")]] = z[k].view(jnp.bfloat16)
+                    else:
+                        data[k] = z[k]
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    flat_sh = _flatten(shardings) if shardings is not None else {k: None for k in flat_like}
+    out = {}
+    for k, proto in flat_like.items():
+        arr = data[k]
+        if tuple(arr.shape) != tuple(proto.shape):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {proto.shape}")
+        out[k] = jax.device_put(arr, flat_sh[k]) if flat_sh[k] is not None else jnp.asarray(arr)
+    # rebuild the tree
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    ordered = []
+    for path, _ in leaves_with_path:
+        key = "/".join(str(getattr(kk, "key", getattr(kk, "idx", kk))) for kk in path)
+        ordered.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["step"]

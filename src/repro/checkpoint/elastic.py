@@ -1,0 +1,38 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+The checkpoint stores full logical arrays (host shards are merged at read
+time), so restoring onto a *different* mesh is just ``jax.device_put`` with
+the new shardings; specs are re-derived from the same partition rules, which
+depend only on (config, context), not on the saved mesh. The data pipeline
+is step-indexed (see data/pipeline.py), so resuming at step N on K' hosts
+consumes exactly the batches a K-host run would have.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.checkpointer import latest_step, restore
+from repro.parallel.sharding import ParallelContext, param_specs
+
+
+def shardings_for(tree_abs: Any, ctx: ParallelContext):
+    if ctx.mesh is None:
+        return None
+    specs = param_specs(tree_abs, ctx)
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(ctx.mesh, sp), specs
+    )
+
+
+def resume(directory: str, params_abs: Any, ctx: ParallelContext):
+    """Returns (params, step) from the latest checkpoint resharded onto
+    ctx.mesh, or (None, 0) when no checkpoint exists."""
+    step = latest_step(directory)
+    if step is None:
+        return None, 0
+    sh = shardings_for(params_abs, ctx)
+    params, step = restore(directory, step, params_abs, sh)
+    return params, step

@@ -1,0 +1,230 @@
+"""Config dataclasses for architectures, input shapes, and ORCA apps.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the four
+assigned input shapes are :data:`SHAPES`. ``reduced()`` produces the tiny
+same-family config used by CPU smoke tests (the full configs are only ever
+lowered abstractly by the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (logical, i.e. pre-padding)."""
+
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int  # query heads; 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_impl: str = "auto"  # ep | tp | auto (auto: ep iff E % model_axis == 0)
+    capacity_factor: float = 1.25
+    # --- SSM / hybrid ---
+    attn_free: bool = False
+    ssm_state: int = 0
+    ssm_expand: int = 1  # mamba inner expansion
+    sliding_window: int = 0  # 0 = full attention
+    # --- positional ---
+    rope_theta: float = 1e4
+    mrope: bool = False  # qwen2-vl M-RoPE (3 position components)
+    # --- modality frontend stubs ---
+    num_codebooks: int = 0  # musicgen EnCodec codebooks
+    media_tokens: int = 0  # qwen2-vl precomputed patch-embedding positions
+    # --- misc ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # --- distribution hints ---
+    fsdp: bool = False  # shard params over the data axis too (grok-314b)
+    notes: str = ""
+    # --- performance knobs (see EXPERIMENTS.md §Perf; defaults = baseline) ---
+    decode_mxu_einsum: bool = False  # bf16 MXU dots in decode attention (no
+    #   f32 cache materialization in the serving loop)
+    decode_unroll: int = 1  # unroll factor for the decode layer scan
+    decode_appended_kv: bool = False  # read-only cache + appended current
+    #   token: the KV cache never round-trips through the layer scan (one
+    #   tiny scatter per step updates all layers) — §Perf decode hillclimb
+    kv_cache_layout: str = "bshd"  # "bshd" (baseline) or "dot" — K stored
+    #   (B,kvp,hd,Sc), V stored (B,kvp,Sc,hd) so decode dots consume the
+    #   cache without layout copies (§Perf decode hillclimb iteration 3)
+    use_pallas_flash: bool = False  # train/prefill attention through the
+    #   Pallas flash kernel (block-skipping causal; TPU production path —
+    #   interpret-mode emulated elsewhere). Removes the 2x causal-FLOP
+    #   waste of the masked reference path.
+    flash_block: int = 512  # kernel block size (q and kv)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 128 (16-way model axis x 8-lane sublane) so the
+        embedding and LM head shard on any production mesh; padded logit
+        columns are masked to -inf (see layers.lm_head_apply)."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """Assigned input shape. ``kind`` selects which step function is lowered."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+#: archs allowed to run long_500k (sub-quadratic sequence mixing only).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Assignment rule: long_500k only for SSM/hybrid/linear-attention archs."""
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (for MODEL_FLOPS = 6 * N * tokens in the roofline).
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    n = d * cfg.num_heads * hd  # wq
+    n += 2 * d * cfg.num_kv_heads * hd  # wk, wv
+    n += cfg.num_heads * hd * d  # wo
+    if cfg.qkv_bias:
+        n += (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+    return n
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    # swiglu: gate + up + down
+    return 3 * cfg.d_model * d_ff
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    if cfg.family == "ssm":  # rwkv6: time-mix (r,k,v,g,w,o) + channel-mix
+        tm = 5 * d * d + d * d  # r,k,v,g low-rank-ish treated dense + out
+        cm = 2 * d * cfg.d_ff  # channel mix (k, v) with relu^2
+        return tm + cm
+    # hymba mamba branch
+    din = cfg.d_model * cfg.ssm_expand
+    n = d * 2 * din  # in_proj (x and gate)
+    n += din * (2 * cfg.ssm_state + 1)  # x_proj -> dt, B, C
+    n += din * d  # out_proj
+    return n
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Logical parameter count (embedding + blocks + head)."""
+    d = cfg.d_model
+    n = cfg.vocab_size * d * max(1, cfg.num_codebooks or 1)  # embeddings
+    if not cfg.tie_embeddings:
+        n += d * cfg.vocab_size * max(1, cfg.num_codebooks or 1)
+    per_layer = 2 * d  # norms
+    if not cfg.attn_free:
+        per_layer += _attn_params(cfg)
+    if cfg.is_moe:
+        e = cfg.num_experts_per_tok if active_only else cfg.num_experts
+        per_layer += e * _mlp_params(cfg, cfg.d_ff)
+        per_layer += d * cfg.num_experts  # router
+    elif cfg.family == "ssm":
+        per_layer += _ssm_params(cfg)
+    else:
+        per_layer += _mlp_params(cfg, cfg.d_ff)
+    if cfg.family == "hybrid":
+        per_layer += _ssm_params(cfg)
+    n += cfg.num_layers * per_layer
+    n += d  # final norm
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6 * N * tokens (N_active for MoE); decode counts one
+    token per sequence (the new token), train/prefill count all tokens."""
+    n = param_count(cfg, active_only=cfg.is_moe)
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        factor = 2.0  # forward only
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        factor = 2.0
+    else:
+        tokens = shape.tokens
+        factor = 6.0
+    return factor * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for smoke tests.
+# ---------------------------------------------------------------------------
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config: few layers, narrow width, small vocab."""
+    hd = 8
+    heads = 0 if cfg.attn_free else max(2, min(4, cfg.num_heads))
+    kv = 0
+    if heads:
+        # preserve a GQA ratio > 1 when the full config has one
+        kv = 1 if cfg.num_kv_heads < cfg.num_heads else heads
+    d_model = max(16, heads * hd) if heads else 16
+    kw = dict(
+        num_layers=2,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=hd,  # also the wkv head dim for attn-free archs
+        d_ff=32,
+        vocab_size=128,
+        media_tokens=min(cfg.media_tokens, 4),
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        fsdp=False,
+        remat=False,
+    )
+    if cfg.is_moe:
+        # high capacity factor: smoke tests check exact path equivalence,
+        # which token dropping would (legitimately) break
+        kw.update(num_experts=4, num_experts_per_tok=2, capacity_factor=16.0)
+    if cfg.ssm_state:
+        kw.update(ssm_state=4)
+    return cfg.replace(**kw)

@@ -1,0 +1,9 @@
+"""ORCA core: the paper's four components + three applications.
+
+C1 ringbuf — unified inter/intra-machine ring-buffer communication
+C2 cpoll — pointer-buffer doorbell notification
+C3 engine/scheduler — the cc-accelerator request loop (APU host)
+C4 placement — adaptive DDIO/TPH-style memory-tier decisions
+Apps: kvstore (ORCA-KV), transaction (ORCA-TX), dlrm (ORCA-DLRM)
+"""
+from repro.core import cpoll, dlrm, engine, kvstore, placement, ringbuf, scheduler, transaction

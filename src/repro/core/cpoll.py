@@ -1,0 +1,77 @@
+"""C2 — cpoll: coherence-assisted notification via a pointer buffer.
+
+Paper §III-B: instead of spin-polling every request ring (O(sum of ring
+bytes) of interconnect traffic per scan), the accelerator monitors one small
+contiguous region. The scalable variant registers a **pointer buffer** — one
+4-byte monotonically-increasing counter per ring — as the cpoll region; a
+**ring tracker** on the consumer recovers the number of new requests even
+when notifications coalesce, because ring tails only ever increment.
+
+TPU adaptation (DESIGN.md §2): there is no snoop filter to push M→I
+transitions, so the jitted engine step *compares* the pointer buffer against
+its tracker — the same O(4·Q)-byte scan, the same coalescing tolerance, no
+per-ring traffic. ``bytes_scanned`` quantifies the Fig. 7 bandwidth claim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+class CpollState(NamedTuple):
+    pointer_buffer: jax.Array  # (Q,) int32, producer-side doorbell counters
+    ring_tracker: jax.Array  # (Q,) int32, consumer-side recorded counters
+
+
+def make(num_queues: int) -> CpollState:
+    z = jnp.zeros((num_queues,), I32)
+    return CpollState(z, z)
+
+
+def doorbell(state: CpollState, queue_ids, counts) -> CpollState:
+    """Producer side: bump pointer-buffer entries after writing requests.
+    Multiple doorbells to the same queue may be issued in one batch (the
+    RDMA batched-doorbell optimization) — they coalesce, by design."""
+    pb = state.pointer_buffer.at[queue_ids].add(counts.astype(I32), mode="drop")
+    return CpollState(pb, state.ring_tracker)
+
+
+def cpoll(state: CpollState):
+    """Consumer side: one vectorized compare of the 4B/queue region.
+
+    Returns (new_counts (Q,), acknowledged state). Wrap-safe: int32
+    subtraction of monotonic counters. Coalescing-safe: the tracker diff
+    counts *entries*, not *signals* (paper's ring-tracker argument).
+    """
+    new = state.pointer_buffer - state.ring_tracker
+    acked = CpollState(state.pointer_buffer, state.pointer_buffer)
+    return new, acked
+
+
+def cpoll_partial(state: CpollState, queue_ids, counts) -> CpollState:
+    """Acknowledge only ``counts`` entries of the given queues (used when the
+    scheduler takes fewer requests than arrived)."""
+    rt = state.ring_tracker.at[queue_ids].add(counts.astype(I32), mode="drop")
+    return CpollState(state.pointer_buffer, rt)
+
+
+def bytes_scanned_cpoll(num_queues: int) -> int:
+    """Bytes the consumer touches per notification scan with cpoll."""
+    return 4 * num_queues
+
+
+def bytes_scanned_polling(num_queues: int, capacity: int, entry_words: int) -> int:
+    """Bytes touched per scan when spin-polling every ring slot header.
+
+    A conventional poller must inspect at least the next expected slot of
+    every ring (4 B header) but caches are filled at line granularity; the
+    paper's Fig. 7 polling arm reads the whole head entry. We charge one
+    64 B line per ring slot actually scanned — the *best case* for polling
+    (head slot only) is still 64 B/queue vs cpoll's 4 B/queue, and the
+    worst case (scan until empty) is capacity*entry bytes.
+    """
+    return num_queues * max(64, 4 * entry_words)

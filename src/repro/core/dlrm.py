@@ -1,0 +1,197 @@
+"""ORCA-DLRM (§IV-C): recommendation inference as CPU↔accelerator
+collaboration.
+
+The split follows the paper exactly:
+* the **host** (= the paper's server CPU) runs the irregular, branch-rich
+  request preprocessing — parsing, and the MERCI sub-query memoization
+  rewrite (numpy, :class:`MerciIndex`);
+* the **device** (= the cc-accelerator APU) runs the memory-bound embedding
+  reduction — a wide batched gather+segment-sum, the ``64 outstanding memory
+  requests per query`` loop of §IV-C — plus the dense bottom/top MLPs and
+  feature interactions.
+
+MERCI (the paper's algorithmic baseline, Fig. 12): rows of each table are
+grouped into clusters; sums of frequently co-occurring pairs inside a
+cluster are precomputed into a memoization table sized ``memo_ratio`` × the
+original. The host rewrites each query's index list, replacing matched pairs
+by a single memo row (second member -> a shared zero row), so the device
+issues fewer gathers for the same result.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+class DLRMConfig(NamedTuple):
+    num_tables: int = 8
+    rows: int = 4096  # rows per table
+    dim: int = 64  # embedding dim (paper default)
+    lookups: int = 32  # multi-hot lookups per table per query
+    dense_features: int = 13
+    bottom: tuple = (128, 64)
+    top: tuple = (128, 64, 1)
+    memo_ratio: float = 0.25
+    cluster: int = 4  # rows per MERCI cluster
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: DLRMConfig, dtype=jnp.float32):
+    nb, nt = len(cfg.bottom) + 1, len(cfg.top)
+    ks = jax.random.split(key, 1 + nb + nt)
+    tables = (
+        jax.random.normal(ks[0], (cfg.num_tables, cfg.rows, cfg.dim), F32) * 0.1
+    ).astype(dtype)
+
+    def mlp(keys, dims, d_in):
+        layers = []
+        for k, d_out in zip(keys, dims):
+            w = jax.random.normal(k, (d_in, d_out), F32) / (d_in ** 0.5)
+            layers.append({"w": w.astype(dtype), "b": jnp.zeros((d_out,), dtype)})
+            d_in = d_out
+        return layers
+
+    n_int = cfg.num_tables * (cfg.num_tables + 1) // 2  # pairwise dots + dense
+    bottom = mlp(ks[1 : 1 + nb], cfg.bottom + (cfg.dim,), cfg.dense_features)
+    top_in = cfg.dim + n_int
+    top = mlp(ks[1 + nb :], cfg.top, top_in)
+    return {"tables": tables, "bottom": bottom, "top": top}
+
+
+# ---------------------------------------------------------------------------
+# Embedding reduction (device hot loop; Pallas kernel target + oracle)
+# ---------------------------------------------------------------------------
+
+def embedding_reduce(tables, idx):
+    """tables: (T, R', D); idx: (B, T, L) int32 -> (B, T, D) sum-pool.
+
+    R' may exceed cfg.rows when a memo extension is appended."""
+    g = jax.vmap(lambda tab, ix: tab[ix], in_axes=(0, 1))(tables, idx)  # (T,B,L,D)
+    return jnp.sum(g, axis=2).transpose(1, 0, 2)  # (B, T, D)
+
+
+def _mlp_apply(layers, x, final_linear=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if not (final_linear and i == len(layers) - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(params, dense, idx, cfg: DLRMConfig, tables_ext=None):
+    """dense: (B, F); idx: (B, T, L) -> CTR logits (B,).
+
+    ``tables_ext``: optional extended tables (raw ‖ memo ‖ zero-row) when the
+    host rewrote idx with MERCI references."""
+    tables = tables_ext if tables_ext is not None else params["tables"]
+    emb = embedding_reduce(tables, idx).astype(F32)  # (B, T, D)
+    bot = _mlp_apply(params["bottom"], dense.astype(F32))  # (B, D)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, T+1, D)
+    inter = jnp.einsum("bmd,bnd->bmn", feats, feats)
+    iu, ju = jnp.triu_indices(cfg.num_tables + 1, k=1)
+    flat = inter[:, iu, ju]  # (B, (T+1)T/2)
+    z = jnp.concatenate([bot, flat], axis=1)
+    return _mlp_apply(params["top"], z, final_linear=True)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MERCI memoization (host side — the "CPU" of the collaboration)
+# ---------------------------------------------------------------------------
+
+class MerciIndex:
+    """Per-table pair-memoization built offline from cluster structure.
+
+    Memo entry m of table t holds ``table[t,a] + table[t,b]`` for a chosen
+    in-cluster pair (a, b). Queries are rewritten on the host: every matched
+    (a, b) pair collapses to one reference at offset ``rows + m``; the freed
+    slot points at the shared zero row (offset ``rows + n_memo``)."""
+
+    def __init__(self, cfg: DLRMConfig, seed: int = 0):
+        self.cfg = cfg
+        rng = np.random.default_rng(seed)
+        n_memo = int(cfg.rows * cfg.memo_ratio)
+        self.n_memo = n_memo
+        # pick pairs within clusters (cluster c = rows [c*k, (c+1)*k))
+        k = cfg.cluster
+        n_clusters = cfg.rows // k
+        pairs = np.zeros((cfg.num_tables, n_memo, 2), np.int32)
+        for t in range(cfg.num_tables):
+            cl = rng.integers(0, n_clusters, size=n_memo)
+            a = rng.integers(0, k, size=n_memo)
+            off = 1 + rng.integers(0, k - 1, size=n_memo)
+            b = (a + off) % k
+            pairs[t, :, 0] = cl * k + np.minimum(a, b)
+            pairs[t, :, 1] = cl * k + np.maximum(a, b)
+        self.pairs = pairs
+        # pair -> memo id lookup per table
+        self.lookup = [
+            {(int(a), int(b)): m for m, (a, b) in enumerate(pairs[t])}
+            for t in range(cfg.num_tables)
+        ]
+
+    def build_tables(self, tables) -> jax.Array:
+        """(T, R, D) -> (T, R + n_memo + 1, D) with memo sums + zero row."""
+        t = np.asarray(tables, np.float32)
+        memo = t[np.arange(self.cfg.num_tables)[:, None], self.pairs[..., 0]] + \
+            t[np.arange(self.cfg.num_tables)[:, None], self.pairs[..., 1]]
+        zero = np.zeros((self.cfg.num_tables, 1, self.cfg.dim), np.float32)
+        return jnp.asarray(
+            np.concatenate([t, memo, zero], axis=1), tables.dtype
+        )
+
+    def rewrite_query(self, idx: np.ndarray) -> tuple[np.ndarray, int]:
+        """idx: (B, T, L) raw -> rewritten (B, T, L) into the extended table.
+        Returns (new_idx, gathers_saved). Host-side, irregular — numpy."""
+        cfg = self.cfg
+        b = idx.shape[0]
+        out = idx.copy()
+        zero_row = cfg.rows + self.n_memo
+        saved = 0
+        for bi in range(b):
+            for t in range(cfg.num_tables):
+                row = out[bi, t]
+                seen: dict[int, int] = {}
+                svals = np.sort(row)
+                present = set(int(x) for x in row)
+                used = np.zeros(len(row), bool)
+                pos_of = {}
+                for p, v in enumerate(row):
+                    pos_of.setdefault(int(v), []).append(p)
+                for (a, bb_), m in self.lookup[t].items():
+                    if a in present and bb_ in present and a != bb_:
+                        pa = next((p for p in pos_of[a] if not used[p]), None)
+                        pb = next((p for p in pos_of[bb_] if not used[p]), None)
+                        if pa is None or pb is None:
+                            continue
+                        out[bi, t, pa] = cfg.rows + m
+                        out[bi, t, pb] = zero_row
+                        used[pa] = used[pb] = True
+                        saved += 1
+        return out, saved
+
+
+def gen_queries(cfg: DLRMConfig, batch: int, merci: Optional[MerciIndex],
+                hit_rate: float, rng: np.random.Generator):
+    """Synthetic Amazon-Review-style queries: with probability ``hit_rate``
+    a lookup slot pair is drawn from a memoized pair (co-occurrence skew)."""
+    idx = rng.integers(0, cfg.rows, size=(batch, cfg.num_tables, cfg.lookups))
+    if merci is not None and hit_rate > 0:
+        n_pairs = cfg.lookups // 2
+        for t in range(cfg.num_tables):
+            pick = rng.integers(0, merci.n_memo, size=(batch, n_pairs))
+            use = rng.random((batch, n_pairs)) < hit_rate
+            pa = merci.pairs[t, pick]  # (B, P, 2)
+            for p in range(n_pairs):
+                sel = use[:, p]
+                idx[sel, t, 2 * p] = pa[sel, p, 0]
+                idx[sel, t, 2 * p + 1] = pa[sel, p, 1]
+    dense = rng.normal(size=(batch, cfg.dense_features)).astype(np.float32)
+    return dense, idx.astype(np.int32)

@@ -1,0 +1,288 @@
+"""C3 — the ORCA engine: rings + cpoll + scheduler + APU, one jitted step.
+
+``engine_step`` is the cc-accelerator's main loop (Fig. 3): scan the cpoll
+region, schedule round-robin, gather the request batch from the rings
+(data-structure walker input), run the application processing unit, write
+responses, ring response doorbells. One host sync covers a whole *batch* of
+steps (``run_steps``) — the unsignaled-WQE / batched-doorbell analogue.
+
+Apps plug in as ``app_fn(app_state, payloads, valid) -> (app_state,
+responses)`` — kvstore/transaction/dlrm provide theirs; the LM serving
+engine below specializes the same loop for continuous-batching token
+generation (requests = prompts, responses = generated sequences).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cpoll as cp
+from repro.core import ringbuf as rb
+from repro.core import scheduler as sched
+
+I32 = jnp.int32
+
+
+class EngineConfig(NamedTuple):
+    num_queues: int = 8
+    capacity: int = 64  # ring entries per queue
+    req_words: int = 24
+    resp_words: int = 24
+    budget: int = 32  # APU batch per step (256 outstanding in the paper)
+
+
+class EngineState(NamedTuple):
+    req: rb.RingState
+    resp: rb.RingState
+    cpoll: cp.CpollState
+    sched: sched.SchedState
+    app: Any
+    steps: jax.Array  # () int32
+    served: jax.Array  # () int32 total requests processed
+
+
+def make(cfg: EngineConfig, app_state) -> EngineState:
+    return EngineState(
+        req=rb.make(cfg.num_queues, cfg.capacity, cfg.req_words),
+        resp=rb.make(cfg.num_queues, cfg.capacity, cfg.resp_words),
+        cpoll=cp.make(cfg.num_queues),
+        sched=sched.make(cfg.num_queues),
+        app=app_state,
+        steps=jnp.zeros((), I32),
+        served=jnp.zeros((), I32),
+    )
+
+
+def inject(state: EngineState, queue_ids, payloads, mask=None) -> EngineState:
+    """Producer path (host/RNIC analogue): write requests + ring doorbells.
+    queue_ids must be unique per call (one slot per queue per call)."""
+    n = queue_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    ok = mask & (rb.free_slots(state.req)[queue_ids] > 0)
+    req = rb.enqueue(state.req, queue_ids, payloads, ok)
+    cpo = cp.doorbell(state.cpoll, queue_ids, ok.astype(I32))
+    return state._replace(req=req, cpoll=cpo)
+
+
+def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
+    """One APU iteration. Returns (state, stats dict)."""
+    # 1. cpoll: O(4*Q)-byte notification scan
+    avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
+    # 2. round-robin schedule within the step budget
+    take, sch = sched.schedule(state.sched, avail, cfg.budget)
+    cpo = cp.cpoll_partial(state.cpoll, jnp.arange(cfg.num_queues, dtype=I32), take)
+    # 3. gather the request batch from ring heads
+    qids, counts = sched.selected_queues(take)
+    payloads, srcq, valid = rb.gather_batch(state.req, qids, counts, cfg.budget)
+    req = rb.pop(state.req, qids, counts)
+    # 4. APU
+    app, responses = app_fn(state.app, payloads, valid)
+    # 5. response path (+ response doorbells, batched)
+    resp = _enqueue_multi(state.resp, srcq, responses, valid)
+    n_served = jnp.sum(valid.astype(I32))
+    new = EngineState(
+        req=req, resp=resp, cpoll=cpo, sched=sch, app=app,
+        steps=state.steps + 1, served=state.served + n_served,
+    )
+    return new, {"served": n_served, "backlog": jnp.sum(avail - take)}
+
+
+def _enqueue_multi(ring: rb.RingState, queue_ids, payloads, mask):
+    """Enqueue a batch that may contain several entries per queue (response
+    fan-in): per-queue ranks give each entry its own slot."""
+    q = ring.num_queues
+    ids = jnp.where(mask, queue_ids, q)
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    first = jnp.searchsorted(sorted_ids, jnp.arange(q + 1), side="left")
+    rank_sorted = jnp.arange(ids.shape[0]) - first[jnp.clip(sorted_ids, 0, q)]
+    rank = jnp.zeros(ids.shape, I32).at[order].set(rank_sorted.astype(I32))
+    ok = mask & (rb.free_slots(ring)[jnp.clip(ids, 0, q - 1)] > rank)
+    slot = (ring.tail[jnp.clip(ids, 0, q - 1)] + rank) % ring.capacity
+    qq = jnp.where(ok, ids, q)
+    entries = ring.entries.at[qq, slot].set(payloads, mode="drop")
+    tail = ring.tail.at[qq].add(1, mode="drop")
+    return rb.RingState(entries, tail, ring.head)
+
+
+def run_steps(state: EngineState, app_fn: Callable, cfg: EngineConfig, n: int):
+    """n engine steps under one jit/dispatch — the batched-doorbell analogue
+    (one host interaction per n steps)."""
+
+    def body(s, _):
+        s, stats = engine_step(s, app_fn, cfg)
+        return s, stats
+
+    return jax.lax.scan(body, state, None, length=n)
+
+
+def drain_responses(state: EngineState, max_per_queue: int):
+    """Client-side poll: gather+pop up to ``max_per_queue`` responses per
+    queue. Returns (payloads (Q, m, W), counts (Q,), state). The client must
+    call this to return credit (paper §III-A flow control)."""
+    q = state.resp.num_queues
+    qids = jnp.arange(q, dtype=I32)
+    counts = jnp.minimum(rb.available(state.resp), max_per_queue)
+    offs = jnp.arange(max_per_queue, dtype=I32)
+    payloads = jax.vmap(
+        lambda qi: rb.peek(state.resp, jnp.full((max_per_queue,), qi, I32), offs)
+    )(qids)
+    payloads = jnp.where(
+        (offs[None, :] < counts[:, None])[..., None], payloads, 0
+    )
+    resp = rb.pop(state.resp, qids, counts)
+    return payloads, counts, state._replace(resp=resp)
+
+
+# ---------------------------------------------------------------------------
+# LM serving engine: continuous batching on top of the same loop
+# ---------------------------------------------------------------------------
+
+class LMEngineConfig(NamedTuple):
+    num_queues: int = 4
+    capacity: int = 16
+    prompt_len: int = 16  # fixed prompt words per request
+    gen_len: int = 16  # tokens generated per request
+    slots: int = 8  # continuous-batching slots
+    admit_per_step: int = 2  # prefill admissions per step
+    cache_len: int = 64
+
+
+class LMEngineState(NamedTuple):
+    req: rb.RingState
+    resp: rb.RingState
+    cpoll: cp.CpollState
+    sched: sched.SchedState
+    decode: Any  # models.DecodeState over `slots` sequences
+    slot_active: jax.Array  # (N,) bool
+    slot_queue: jax.Array  # (N,) source queue (-1 free)
+    slot_done: jax.Array  # (N,) tokens generated so far
+    slot_out: jax.Array  # (N, gen_len) generated tokens
+    slot_last: jax.Array  # (N,) last token (next decode input)
+    steps: jax.Array
+    completed: jax.Array
+
+
+def lm_make(cfg: LMEngineConfig, decode_state) -> LMEngineState:
+    n = cfg.slots
+    return LMEngineState(
+        req=rb.make(cfg.num_queues, cfg.capacity, cfg.prompt_len),
+        resp=rb.make(cfg.num_queues, cfg.capacity, cfg.gen_len),
+        cpoll=cp.make(cfg.num_queues),
+        sched=sched.make(cfg.num_queues),
+        decode=decode_state,
+        slot_active=jnp.zeros((n,), bool),
+        slot_queue=jnp.full((n,), -1, I32),
+        slot_done=jnp.zeros((n,), I32),
+        slot_out=jnp.zeros((n, cfg.gen_len), I32),
+        slot_last=jnp.zeros((n,), I32),
+        steps=jnp.zeros((), I32),
+        completed=jnp.zeros((), I32),
+    )
+
+
+def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None) -> LMEngineState:
+    n = queue_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    ok = mask & (rb.free_slots(state.req)[queue_ids] > 0)
+    req = rb.enqueue(state.req, queue_ids, prompts, ok)
+    cpo = cp.doorbell(state.cpoll, queue_ids, ok.astype(I32))
+    return state._replace(req=req, cpoll=cpo)
+
+
+def lm_engine_step(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
+                   params, prefill_fn, decode_fn):
+    """Admission (prefill into free slots) + one decode step for all active
+    slots + completion (responses to rings). All shapes static."""
+    from repro.models.model import DecodeState
+
+    nslots = cfg.slots
+    # --- admission: up to admit_per_step requests into free slots ---------
+    avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
+    free = ~state.slot_active
+    n_free = jnp.sum(free.astype(I32))
+    budget = jnp.minimum(n_free, cfg.admit_per_step)
+    take, sch = sched.schedule(
+        state.sched, avail, cfg.admit_per_step
+    )
+    # clamp the schedule to the number of free slots (keep rr order)
+    cum = jnp.cumsum(take)
+    take = jnp.where(cum <= budget, take, jnp.maximum(take - (cum - budget), 0))
+    cpo = cp.cpoll_partial(state.cpoll, jnp.arange(cfg.num_queues, dtype=I32), take)
+    qids, counts = sched.selected_queues(take)
+    prompts, srcq, valid = rb.gather_batch(
+        state.req, qids, counts, cfg.admit_per_step
+    )
+    req = rb.pop(state.req, qids, counts)
+
+    # target slots: the first `admit_per_step` free slots (by index)
+    slot_ids = jnp.argsort(~free, stable=True)[: cfg.admit_per_step].astype(I32)
+    admit_ok = valid & (jnp.arange(cfg.admit_per_step) < n_free)
+    slot_tgt = jnp.where(admit_ok, slot_ids, nslots)
+
+    # prefill the admitted prompts (fixed-size admission batch)
+    adm_state, adm_logits = prefill_fn(params, prompts.astype(I32))
+    adm_next = jnp.argmax(adm_logits, axis=-1).astype(I32)
+
+    # scatter admitted sequences into the global decode state
+    dec = state.decode
+    new_layers = jax.tree_util.tree_map(
+        lambda g, a: g.at[:, slot_tgt].set(a, mode="drop"), dec.layers, adm_state.layers
+    )
+    new_pos = dec.pos.at[slot_tgt].set(adm_state.pos, mode="drop")
+    slot_active = state.slot_active.at[slot_tgt].set(True, mode="drop")
+    slot_queue = state.slot_queue.at[slot_tgt].set(
+        jnp.where(admit_ok, srcq, -1), mode="drop"
+    )
+    slot_done = state.slot_done.at[slot_tgt].set(0, mode="drop")
+    slot_last = state.slot_last.at[slot_tgt].set(adm_next, mode="drop")
+    slot_out = state.slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
+    slot_done = slot_done.at[slot_tgt].add(
+        jnp.where(admit_ok, 1, 0), mode="drop"
+    )
+
+    # --- decode one token for every active slot ---------------------------
+    dec2 = DecodeState(new_layers, new_pos)
+    dec3, logits = decode_fn(params, slot_last, dec2)
+    nxt = jnp.argmax(logits, axis=-1).astype(I32)
+    active = slot_active
+    write_pos = jnp.clip(slot_done, 0, cfg.gen_len - 1)
+    slot_out = jnp.where(
+        active[:, None],
+        slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
+        slot_out,
+    )
+    slot_done = slot_done + active.astype(I32)
+    slot_last = jnp.where(active, nxt, slot_last)
+    # freeze state for inactive slots
+    dec_final = DecodeState(
+        jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                active.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old
+            ),
+            dec3.layers, dec2.layers,
+        ),
+        jnp.where(active, dec3.pos, dec2.pos),
+    )
+
+    # --- completions -------------------------------------------------------
+    finished = active & (slot_done >= cfg.gen_len)
+    resp = _enqueue_multi(
+        state.resp, jnp.clip(state.slot_queue, 0, cfg.num_queues - 1),
+        slot_out, finished,
+    )
+    slot_active = slot_active & ~finished
+    return LMEngineState(
+        req=req, resp=resp, cpoll=cpo, sched=sch, decode=dec_final,
+        slot_active=slot_active,
+        slot_queue=jnp.where(finished, -1, slot_queue),
+        slot_done=jnp.where(finished, 0, slot_done),
+        slot_out=slot_out, slot_last=slot_last,
+        steps=state.steps + 1,
+        completed=state.completed + jnp.sum(finished.astype(I32)),
+    )

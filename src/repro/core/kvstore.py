@@ -1,0 +1,239 @@
+"""ORCA-KV (§IV-A): MICA-style set-associative in-memory hash KVS.
+
+Layout follows the paper: a set-associative hash table whose entries hold
+pointers into a slab-allocated value pool; hash collisions spill into one
+overflow bucket (the chained-bucket analogue), so a GET costs at most three
+memory accesses (primary bucket, overflow bucket, value row) and a PUT four
+— matching the MICA/KV-Direct access counts cited in §IV-A.
+
+Everything is batched and functional: a batch of requests is one vectorized
+walk, the TPU analogue of the APU's 256-outstanding-request memory-level
+parallelism. The Pallas ``hash_probe`` kernel accelerates the same walk with
+explicit VMEM staging; this module is also its oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+class KVConfig(NamedTuple):
+    num_buckets: int = 1024  # power of two
+    ways: int = 8
+    key_words: int = 2
+    val_words: int = 16  # 64 B values like the paper's workload
+    pool_size: int = 8192
+
+
+class KVState(NamedTuple):
+    bucket_keys: jax.Array  # (NB, W, KW) int32
+    bucket_ptr: jax.Array  # (NB, W) int32 value-pool row, -1 = empty
+    pool: jax.Array  # (NP, VW) int32
+    alloc: jax.Array  # () int32 bump allocator
+    dropped: jax.Array  # () int32 PUTs rejected (both buckets full)
+
+
+def make(cfg: KVConfig) -> KVState:
+    return KVState(
+        bucket_keys=jnp.zeros((cfg.num_buckets, cfg.ways, cfg.key_words), I32),
+        bucket_ptr=jnp.full((cfg.num_buckets, cfg.ways), -1, I32),
+        pool=jnp.zeros((cfg.pool_size, cfg.val_words), I32),
+        alloc=jnp.zeros((), I32),
+        dropped=jnp.zeros((), I32),
+    )
+
+
+def hash_keys(keys, num_buckets: int, salt: int = 0):
+    """FNV-1a over key words -> bucket id. keys: (..., KW) int32."""
+    h = jnp.full(keys.shape[:-1], jnp.uint32(2166136261 ^ salt))
+    for w in range(keys.shape[-1]):
+        h = (h ^ keys[..., w].astype(U32)) * jnp.uint32(16777619)
+    return (h % jnp.uint32(num_buckets)).astype(I32)
+
+
+def _match_ways(state: KVState, bids, keys):
+    """bids: (B,), keys: (B,KW) -> (hit (B,), way (B,), ptr (B,))."""
+    bk = state.bucket_keys[bids]  # (B, W, KW)
+    bp = state.bucket_ptr[bids]  # (B, W)
+    eq = jnp.all(bk == keys[:, None, :], axis=-1) & (bp >= 0)
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.argmax(eq, axis=-1).astype(I32)
+    ptr = jnp.take_along_axis(bp, way[:, None], axis=-1)[:, 0]
+    return hit, way, jnp.where(hit, ptr, -1)
+
+
+def get(state: KVState, keys, mask=None):
+    """Batched GET. keys: (B, KW). Returns (vals (B, VW), found (B,)).
+
+    Three gathers: primary bucket, overflow bucket, value pool."""
+    nb = state.bucket_keys.shape[0]
+    h1 = hash_keys(keys, nb)
+    h2 = hash_keys(keys, nb, salt=0x9E3779B9)
+    hit1, _, p1 = _match_ways(state, h1, keys)
+    hit2, _, p2 = _match_ways(state, h2, keys)
+    found = hit1 | hit2
+    ptr = jnp.where(hit1, p1, p2)
+    vals = state.pool[jnp.clip(ptr, 0, state.pool.shape[0] - 1)]
+    vals = jnp.where(found[:, None], vals, 0)
+    if mask is not None:
+        found = found & mask
+    return vals, found
+
+
+def _rank_within(ids, num: int):
+    """Stable rank of each element among equal ids (dispatch helper)."""
+    n = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    first = jnp.searchsorted(sorted_ids, jnp.arange(num), side="left")
+    rank_sorted = jnp.arange(n) - first[sorted_ids]
+    return jnp.zeros((n,), I32).at[order].set(rank_sorted.astype(I32))
+
+
+def _nth_empty_way(bp_rows, rank):
+    """bp_rows: (B, W) pointers; rank: (B,). Index of the rank-th empty way
+    (W if fewer empties than rank+1)."""
+    empty = bp_rows < 0  # (B, W)
+    csum = jnp.cumsum(empty.astype(I32), axis=-1)
+    target = rank[:, None] + 1
+    is_nth = empty & (csum == target)
+    has = jnp.any(is_nth, axis=-1)
+    way = jnp.argmax(is_nth, axis=-1).astype(I32)
+    return jnp.where(has, way, bp_rows.shape[-1])
+
+
+def put(state: KVState, keys, vals, mask=None):
+    """Batched PUT/UPDATE. keys: (B,KW), vals: (B,VW). Returns (state, ok).
+
+    In-batch duplicate keys resolve last-writer-wins on the value row;
+    insertion conflicts are resolved exactly via per-bucket ranking (each new
+    key takes the rank-th empty way). Keys that fit in neither bucket are
+    dropped and counted (the chained-allocation path of the paper, reported
+    rather than allocated).
+    """
+    b = keys.shape[0]
+    if mask is None:
+        mask = jnp.ones((b,), bool)
+    nb = state.bucket_keys.shape[0]
+    np_ = state.pool.shape[0]
+    h1 = hash_keys(keys, nb)
+    h2 = hash_keys(keys, nb, salt=0x9E3779B9)
+
+    # dedupe identical keys in the batch: only the first instance inserts,
+    # and only the last instance writes the value row (last-writer-wins).
+    # Lexicographic sort on the full key words — a hashed tag can collide
+    # for distinct keys and silently drop one (found by hypothesis).
+    order = jnp.lexsort(tuple(keys[:, w] for w in reversed(range(keys.shape[1]))))
+    sorted_keys = keys[order]
+    is_first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool),
+         jnp.any(sorted_keys[1:] != sorted_keys[:-1], axis=-1)]
+    )
+    is_first = jnp.zeros((b,), bool).at[order].set(is_first_sorted)
+
+    hit1, way1, p1 = _match_ways(state, h1, keys)
+    hit2, way2, p2 = _match_ways(state, h2, keys)
+    exists = hit1 | hit2
+    ptr_existing = jnp.where(hit1, p1, p2)
+
+    # --- inserts: two-phase so primary and spill writers never collide ---
+    # phase 1: primary-bucket inserters rank among themselves per bucket
+    inserting = mask & is_first & ~exists
+    r1 = _rank_within(jnp.where(inserting, h1, nb), nb + 1)
+    w1 = _nth_empty_way(state.bucket_ptr[h1], r1)
+    fits1 = inserting & (w1 < state.bucket_ptr.shape[1])
+    spill = inserting & ~fits1
+
+    # provisional pool rows (final pool_ok applied after phase 2)
+    # phase 1 commit of bucket_ptr occupancy with sentinel rows, so phase 2
+    # sees primaries as occupied (a batch can feed one bucket through BOTH
+    # h1 and h2 — found by hypothesis)
+    tb1 = jnp.where(fits1, h1, nb)
+    occ_ptr = state.bucket_ptr.at[tb1, jnp.where(fits1, w1, 0)].set(
+        jnp.iinfo(jnp.int32).max, mode="drop"
+    )
+
+    # phase 2: spill inserters rank against the UPDATED occupancy
+    r2 = _rank_within(jnp.where(spill, h2, nb), nb + 1)
+    w2 = _nth_empty_way(occ_ptr[h2], r2)
+    fits2 = spill & (w2 < state.bucket_ptr.shape[1])
+    drop = spill & ~fits2
+
+    fits_struct = fits1 | fits2
+    new_rank = jnp.cumsum(fits_struct.astype(I32)) - 1
+    new_ptr = state.alloc + new_rank
+    pool_ok = new_ptr < np_
+    fits1 &= pool_ok
+    fits2 &= pool_ok
+    drop = drop | (fits_struct & ~pool_ok)
+
+    tb = jnp.where(fits1, h1, jnp.where(fits2, h2, nb))  # nb = dropped row
+    tw = jnp.where(fits1, w1, jnp.where(fits2, w2, 0))
+    bucket_keys = state.bucket_keys.at[tb, tw].set(keys, mode="drop")
+    bucket_ptr = state.bucket_ptr.at[tb, tw].set(
+        jnp.where(fits1 | fits2, new_ptr, -1), mode="drop"
+    )
+
+    # --- value writes: updates + inserts, last-writer-wins ---------------
+    # .at[].set with duplicate indices is unordered in XLA, so among
+    # duplicate keys only the LAST batch instance writes its value, to the
+    # pool row the FIRST instance resolved (existing hit or fresh insert).
+    first_ptr = jnp.where(
+        exists, ptr_existing, jnp.where(fits1 | fits2, new_ptr, -1)
+    )
+    run_id_sorted = jnp.cumsum(is_first_sorted) - 1  # (B,) run index, sorted
+    run_ptr = jnp.full((b,), -1, I32).at[run_id_sorted].max(
+        jnp.where(is_first_sorted, first_ptr[order], -1)
+    )
+    eff_ptr_sorted = run_ptr[run_id_sorted]
+    eff_ptr = jnp.zeros((b,), I32).at[order].set(eff_ptr_sorted)
+    last_in_sorted = jnp.concatenate(
+        [jnp.any(sorted_keys[1:] != sorted_keys[:-1], axis=-1),
+         jnp.ones((1,), bool)]
+    )
+    is_last = jnp.zeros((b,), bool).at[order].set(last_in_sorted)
+    row_live = mask & is_last & (eff_ptr >= 0)
+    wp = jnp.where(row_live, eff_ptr, np_)
+    pool = state.pool.at[wp].set(vals, mode="drop")
+
+    alloc = state.alloc + jnp.maximum(jnp.sum((fits1 | fits2).astype(I32)), 0)
+    dropped = state.dropped + jnp.sum(drop.astype(I32))
+    ok = mask & (exists | fits1 | fits2)
+    return KVState(bucket_keys, bucket_ptr, pool, alloc, dropped), ok
+
+
+# ---------------------------------------------------------------------------
+# Request-level interface (engine app): HERD-style fixed-width RPC slots.
+# word0 = op (0 nop / 1 GET / 2 PUT), words[1:1+KW] = key, rest = value.
+# Response: word0 = status (1 found/ok), rest = value.
+# ---------------------------------------------------------------------------
+
+OP_NOP, OP_GET, OP_PUT = 0, 1, 2
+
+
+def request_words(cfg: KVConfig) -> int:
+    return 1 + cfg.key_words + cfg.val_words
+
+
+def app_step(state: KVState, payloads, valid, cfg: KVConfig):
+    """Engine hook: payloads (B, 1+KW+VW) int32 -> (state, responses)."""
+    op = payloads[:, 0]
+    keys = payloads[:, 1 : 1 + cfg.key_words]
+    vals = payloads[:, 1 + cfg.key_words : 1 + cfg.key_words + cfg.val_words]
+    get_vals, found = get(state, keys, mask=valid & (op == OP_GET))
+    state, put_ok = put(state, keys, vals, mask=valid & (op == OP_PUT))
+    status = jnp.where(
+        op == OP_GET, found.astype(I32), jnp.where(op == OP_PUT, put_ok.astype(I32), 0)
+    )
+    resp = jnp.concatenate(
+        [status[:, None], jnp.where((op == OP_GET)[:, None], get_vals, 0)], axis=1
+    )
+    pad = payloads.shape[1] - resp.shape[1]
+    if pad > 0:
+        resp = jnp.pad(resp, ((0, 0), (0, pad)))
+    return state, resp

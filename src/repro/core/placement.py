@@ -1,0 +1,103 @@
+"""C4 — adaptive data placement: the DDIO/TPH decision, TPU edition.
+
+Paper §III-D: DDIO blindly steering all device writes into the LLC hurts
+NVM-backed regions (256 B access granularity → write amplification), so ORCA
+(1) disables DDIO globally and (2) sets the PCIe TPH bit *per memory region*
+— DRAM-backed regions go to the cache, NVM-backed regions go to memory.
+
+TPU mapping (DESIGN.md §2): the analogous tiers are VMEM (the
+software-managed "LLC"), HBM, and host memory (the capacity/persistence
+tier standing in for NVM). The *decision problem* transfers intact: which
+buffer class is staged where. This module is that decision table plus the
+helpers that apply it:
+
+* Pallas kernels consume :func:`memory_space_for` to pick BlockSpec memory
+  spaces (VMEM staging vs ANY/HBM-resident operands);
+* host offload uses JAX memory kinds (``pinned_host``) when the backend
+  supports them, mirroring the per-region TPH knob at registration time —
+  the paper's "configuration parameter set when registering a memory
+  region to the RNIC".
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+VMEM_BYTES = 128 * 1024 * 1024  # v5e per-core VMEM ~128 MiB (we budget half)
+VMEM_BUDGET = VMEM_BYTES // 2
+
+
+class Tier(enum.Enum):
+    VMEM = "vmem"  # hot, small: the DDIO/TPH->cache path
+    HBM = "hbm"  # streaming: the TPH->memory (DRAM) path
+    HOST = "host"  # cold/persistent: the NVM path (never cache-staged)
+
+
+@dataclass(frozen=True)
+class Region:
+    """A registered memory region, as in RNIC memory registration."""
+
+    name: str
+    nbytes: int
+    access_rate_hz: float = 0.0  # touches per engine step ~ per second
+    persistent: bool = False  # needs to survive failure (NVM-like)
+    streaming: bool = False  # written once, read once (DMA-like)
+
+
+def classify(region: Region, vmem_left: int = VMEM_BUDGET) -> Tier:
+    """The Fig. 5 decision, one region at a time.
+
+    * persistent regions -> HOST (never pollute the cache tier; avoids the
+      NVM write-amplification the paper measures);
+    * hot small regions (doorbells, pointer buffers, ring headers) -> VMEM;
+    * everything else (bulk tables, KV cache pages) -> HBM streaming.
+    """
+    if region.persistent:
+        return Tier.HOST
+    if region.nbytes <= vmem_left and region.access_rate_hz >= 1e3 and not region.streaming:
+        return Tier.VMEM
+    return Tier.HBM
+
+
+def plan(regions: list[Region], vmem_budget: int = VMEM_BUDGET) -> dict[str, Tier]:
+    """Greedy knapsack by access density (rate/byte), like LLC way allocation."""
+    out: dict[str, Tier] = {}
+    left = vmem_budget
+    hot = sorted(
+        (r for r in regions if not r.persistent),
+        key=lambda r: -(r.access_rate_hz / max(r.nbytes, 1)),
+    )
+    for r in hot:
+        t = classify(r, left)
+        out[r.name] = t
+        if t is Tier.VMEM:
+            left -= r.nbytes
+    for r in regions:
+        if r.persistent:
+            out[r.name] = Tier.HOST
+    return out
+
+
+def memory_space_for(tier: Tier):
+    """BlockSpec memory space for a Pallas operand in this tier."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    if tier is Tier.VMEM:
+        return pltpu.VMEM
+    return pltpu.ANY  # compiler-placed (HBM) — kernel DMAs tiles explicitly
+
+
+def device_put_tier(x, tier: Tier):
+    """Apply the placement to a live array (host tier uses memory kinds)."""
+    if tier is Tier.HOST:
+        try:
+            dev = jax.devices()[0]
+            return jax.device_put(
+                x, jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+            )
+        except Exception:  # backend without memory kinds: stay on device
+            return x
+    return x

@@ -1,0 +1,163 @@
+"""C1 — unified inter/intra-machine communication: lock-free SPSC ring buffers.
+
+The paper (§III-A) builds every communication path — client→server RDMA
+writes and CPU↔accelerator coherent load/stores — on per-connection
+request/response ring-buffer pairs with credit-based flow control: the
+producer tracks the consumer's progress through the *response* ring and only
+issues a request when ``tail - head < capacity``.
+
+Here the rings are device-resident JAX arrays (HBM). Producers are hosts
+(request injection between steps, the RDMA-write analogue) or the device
+itself (response path); the consumer is the jitted engine step. Counters are
+monotonic int32 (wrap-safe modular arithmetic), exactly like RDMA byte
+counters; slot index = counter % capacity.
+
+Single-producer/single-consumer per queue mirrors the paper's
+no-sharing-across-connections rule; many queues are stacked on the leading
+axis so one vectorized op serves all connections.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+class RingState(NamedTuple):
+    """``num_queues`` SPSC rings of ``capacity`` entries of ``entry_words``
+    int32 words (HERD-style fixed-width RPC slots)."""
+
+    entries: jax.Array  # (Q, C, W) int32
+    tail: jax.Array  # (Q,) producer counter, monotonic
+    head: jax.Array  # (Q,) consumer counter, monotonic
+
+    @property
+    def num_queues(self) -> int:
+        return self.entries.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.entries.shape[1]
+
+    @property
+    def entry_words(self) -> int:
+        return self.entries.shape[2]
+
+
+def make(num_queues: int, capacity: int, entry_words: int) -> RingState:
+    return RingState(
+        entries=jnp.zeros((num_queues, capacity, entry_words), I32),
+        tail=jnp.zeros((num_queues,), I32),
+        head=jnp.zeros((num_queues,), I32),
+    )
+
+
+def available(state: RingState) -> jax.Array:
+    """(Q,) entries ready to consume (wrap-safe monotonic diff)."""
+    return state.tail - state.head
+
+
+def free_slots(state: RingState) -> jax.Array:
+    """(Q,) credit left for the producer (paper's flow control)."""
+    return state.capacity - (state.tail - state.head)
+
+
+def enqueue(state: RingState, queue_ids, payloads, mask=None) -> RingState:
+    """Producer push. queue_ids: (N,), payloads: (N, W), mask: (N,) bool.
+
+    Entries exceeding a queue's credit are rejected (mask it yourself with
+    :func:`free_slots` for back-pressure; this guards correctness anyway).
+    Queue ids must be unique within one call (SPSC: one producer writes one
+    queue per step) — enforced by the host-side driver.
+    """
+    n = queue_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    credit = free_slots(state)[queue_ids] > 0
+    ok = mask & credit
+    slot = state.tail[queue_ids] % state.capacity
+    q = jnp.where(ok, queue_ids, state.num_queues)  # OOB -> dropped
+    entries = state.entries.at[q, slot].set(payloads, mode="drop")
+    tail = state.tail.at[q].add(ok.astype(I32), mode="drop")
+    return RingState(entries, tail, state.head)
+
+
+def peek(state: RingState, queue_ids, offsets):
+    """Read entry at head+offset for each (queue, offset) pair."""
+    slot = (state.head[queue_ids] + offsets) % state.capacity
+    return state.entries[queue_ids, slot]
+
+
+def pop(state: RingState, queue_ids, counts) -> RingState:
+    """Consumer advance: head[q] += counts (entries were already peeked).
+    Also zeroes consumed slots — the paper's "reset to 0 on completion",
+    which is what keeps the cpoll region owned by the consumer."""
+    q = queue_ids
+    cap = state.capacity
+    max_take = jnp.max(counts) if counts.shape[0] else 0
+    # zero consumed slots (vectorized over the max count, masked)
+    def body(i, entries):
+        slot = (state.head[q] + i) % cap
+        live = i < counts
+        qq = jnp.where(live, q, state.num_queues)
+        return entries.at[qq, slot].set(0, mode="drop")
+
+    entries = jax.lax.fori_loop(0, jnp.asarray(max_take, I32), body, state.entries)
+    head = state.head.at[q].add(counts.astype(I32), mode="drop")
+    return RingState(entries, state.tail, head)
+
+
+def gather_batch(state: RingState, queue_ids, counts, budget: int):
+    """Flatten per-queue head runs into one padded batch.
+
+    Returns (payloads (budget, W), src_queue (budget,), valid (budget,)).
+    Layout: queue-major in the order given (the scheduler's round-robin
+    order), each queue contributing ``counts[i]`` consecutive entries.
+    """
+    nq = queue_ids.shape[0]
+    starts = jnp.cumsum(counts) - counts  # (nq,)
+    total = jnp.sum(counts)
+    pos = jnp.arange(budget, dtype=I32)
+    # For each output slot, which queue-run does it fall into?
+    run = jnp.searchsorted(starts, pos, side="right") - 1
+    run = jnp.clip(run, 0, nq - 1)
+    offset = pos - starts[run]
+    valid = pos < total
+    q = queue_ids[run]
+    payloads = peek(state, q, offset)
+    payloads = jnp.where(valid[:, None], payloads, 0)
+    return payloads, jnp.where(valid, q, -1), valid
+
+
+# ---------------------------------------------------------------------------
+# Host-side client mirror (numpy) — the "client machine" in benchmarks/tests.
+# ---------------------------------------------------------------------------
+
+class HostClient:
+    """Client-side view of one connection: writes requests (one-sided-write
+    analogue = feeding arrays into the next engine step), polls responses,
+    and enforces credit-based flow control locally (paper §III-A)."""
+
+    def __init__(self, queue_id: int, capacity: int, entry_words: int):
+        self.queue_id = queue_id
+        self.capacity = capacity
+        self.entry_words = entry_words
+        self.req_tail = 0  # local record of request-ring tail
+        self.resp_head = 0  # local record of response-ring head
+
+    def can_send(self, n: int = 1) -> bool:
+        return (self.req_tail + n) - self.resp_head <= self.capacity
+
+    def note_sent(self, n: int = 1) -> None:
+        self.req_tail += n
+
+    def note_received(self, n: int = 1) -> None:
+        self.resp_head += n
+
+    @property
+    def in_flight(self) -> int:
+        return self.req_tail - self.resp_head

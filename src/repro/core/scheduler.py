@@ -1,0 +1,80 @@
+"""C3 (scheduler part) — round-robin request scheduling over queues.
+
+The paper's cc-accelerator scheduler fetches cpoll signals and feeds the APU
+round-robin (§V: "We implement a round-robin algorithm in the scheduler").
+This is the vectorized equivalent: a fair water-fill of the step budget over
+queues with pending work, with a rotating priority pointer so ties break in
+round-robin order across steps, plus per-queue weights (used by the fault
+layer to drain straggling clients harder).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+class SchedState(NamedTuple):
+    rr_ptr: jax.Array  # () int32 rotating priority pointer
+    served: jax.Array  # (Q,) total served per queue (stats/fairness)
+
+
+def make(num_queues: int) -> SchedState:
+    return SchedState(jnp.zeros((), I32), jnp.zeros((num_queues,), I32))
+
+
+def schedule(state: SchedState, avail, budget: int, weights=None):
+    """Pick how many requests to take per queue this step.
+
+    avail: (Q,) pending counts (from cpoll). budget: static max batch.
+    weights: (Q,) relative service weights (default uniform).
+
+    Returns (take (Q,), new_state). Guarantees sum(take) <= budget,
+    take <= avail, and round-robin rotation of leftover assignment.
+    """
+    q = avail.shape[0]
+    if weights is None:
+        weights = jnp.ones((q,), jnp.float32)
+    avail = jnp.maximum(avail, 0)
+
+    # water-fill: iteratively grant fair shares until budget exhausted.
+    # 8 rounds of vectorized water-filling converge for any distribution
+    # because each round either exhausts the budget or saturates a queue.
+    def round_fn(carry, _):
+        take, left = carry
+        want = avail - take
+        active = want > 0
+        nact = jnp.maximum(jnp.sum(active), 1)
+        w = jnp.where(active, weights, 0.0)
+        wsum = jnp.maximum(jnp.sum(w), 1e-9)
+        share = jnp.floor(left * w / wsum).astype(I32)
+        share = jnp.minimum(share, want)
+        # when budget < active queues, floor() gives 0 — fall through to rr
+        take = take + share
+        left = left - jnp.sum(share)
+        return (take, left), None
+
+    take0 = jnp.zeros((q,), I32)
+    (take, left), _ = jax.lax.scan(
+        round_fn, (take0, jnp.asarray(budget, I32)), None, length=8
+    )
+
+    # distribute the remainder one-by-one in round-robin order from rr_ptr
+    order = (jnp.arange(q, dtype=I32) + state.rr_ptr) % q
+    want = (avail - take)[order] > 0
+    grant_rank = jnp.cumsum(want.astype(I32)) - 1
+    extra = jnp.where(want & (grant_rank < left), 1, 0)
+    take = take.at[order].add(extra)
+
+    new = SchedState((state.rr_ptr + 1) % q, state.served + take)
+    return take, new
+
+
+def selected_queues(take):
+    """Compact (queue_ids, counts) ordering for gather_batch: all queues,
+    zero-count ones included (static shapes; gather_batch masks them)."""
+    q = take.shape[0]
+    return jnp.arange(q, dtype=I32), take

@@ -1,0 +1,216 @@
+"""ORCA-TX (§IV-B): chain-replicated multi-op transactions with
+accelerator-side concurrency control.
+
+HyperLoop (the paper's baseline) replicates each key-value *operation* as its
+own group-RDMA message down the chain, so a (r, w)-op transaction costs
+``(r + w)`` chain traversals. ORCA packs the whole transaction into ONE log
+entry — ``[n_ops | (offset, value) * max_ops]`` with the count in the first
+word, exactly the §IV-B log format — and the accelerator executes the
+transaction near-data, so the chain is traversed once per transaction.
+
+Concurrency control (paper: "any single key-value pair can only be accessed
+by one outstanding transaction; the others are buffered in order"): within a
+batch, a transaction proceeds iff it is the lowest-indexed claimant of every
+offset it writes; the rest are deferred back to the client queue (retry).
+
+Two executions with identical semantics:
+* :func:`chain_commit_local` — the replica chain as a leading array axis,
+  traversed with ``lax.scan`` (single-device tests/benchmarks).
+* :func:`chain_commit_spmd` — replicas sharded over a mesh axis; the log
+  batch travels by ``lax.ppermute`` (one collective hop per replica) and the
+  ACK back-propagates on the same ring, as in Fig. 6.
+
+The store is offset-addressed like HyperLoop's NVM space; the redo-log ring
+is the persistence domain and is what the checkpointer (fault layer) saves.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+I32 = jnp.int32
+
+
+class TxConfig(NamedTuple):
+    num_keys: int = 4096  # offset-addressed NVM region (rows)
+    val_words: int = 4
+    max_ops: int = 8  # max (read,write) ops per transaction
+    chain_len: int = 2  # replicas
+    log_capacity: int = 1024
+
+
+class ReplicaState(NamedTuple):
+    store: jax.Array  # (NK, VW) int32 — the NVM region
+    log: jax.Array  # (LC, 1 + max_ops*(1+VW)) int32 redo-log ring
+    log_tail: jax.Array  # () int32
+    committed: jax.Array  # () int32
+
+
+def tx_words(cfg: TxConfig) -> int:
+    """[n_write_ops | (offset, value)*max_ops] — §IV-B log entry layout."""
+    return 1 + cfg.max_ops * (1 + cfg.val_words)
+
+
+def make_replica(cfg: TxConfig) -> ReplicaState:
+    return ReplicaState(
+        store=jnp.zeros((cfg.num_keys, cfg.val_words), I32),
+        log=jnp.zeros((cfg.log_capacity, tx_words(cfg)), I32),
+        log_tail=jnp.zeros((), I32),
+        committed=jnp.zeros((), I32),
+    )
+
+
+def make_chain(cfg: TxConfig):
+    """Chain as a leading axis (local emulation)."""
+    one = make_replica(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.chain_len,) + x.shape), one
+    )
+
+
+def parse_tx(batch, cfg: TxConfig):
+    """batch: (B, tx_words) -> (n_ops (B,), offsets (B,M), values (B,M,VW))."""
+    b = batch.shape[0]
+    n = jnp.clip(batch[:, 0], 0, cfg.max_ops)
+    rest = batch[:, 1:].reshape(b, cfg.max_ops, 1 + cfg.val_words)
+    offsets = jnp.clip(rest[..., 0], 0, cfg.num_keys - 1)
+    values = rest[..., 1:]
+    return n, offsets, values
+
+
+def concurrency_control(n_ops, offsets, cfg: TxConfig, mask=None):
+    """First-claimant-wins conflict detection.
+
+    Returns proceed (B,) — tx i proceeds iff for every live op offset, the
+    minimum batch index claiming that offset is i (reads are free: the chain
+    already serializes them, §IV-B)."""
+    b, m = offsets.shape
+    live = jnp.arange(m)[None, :] < n_ops[:, None]  # (B, M)
+    if mask is not None:
+        live &= mask[:, None]
+    idx = jnp.arange(b, dtype=I32)[:, None]
+    claim_off = jnp.where(live, offsets, cfg.num_keys)
+    owner = jnp.full((cfg.num_keys + 1,), b, I32).at[claim_off].min(
+        jnp.broadcast_to(idx, (b, m))
+    )
+    mine = owner[claim_off] == idx
+    ok = jnp.all(mine | ~live, axis=1)
+    if mask is not None:
+        ok &= mask
+    return ok
+
+
+def _apply_writes(store, n_ops, offsets, values, proceed):
+    b, m = offsets.shape
+    live = (jnp.arange(m)[None, :] < n_ops[:, None]) & proceed[:, None]
+    nk = store.shape[0]
+    off = jnp.where(live, offsets, nk)
+    return store.at[off.reshape(-1)].set(
+        values.reshape(-1, values.shape[-1]), mode="drop"
+    )
+
+
+def _append_log(state: ReplicaState, batch, proceed):
+    lc = state.log.shape[0]
+    rank = jnp.cumsum(proceed.astype(I32)) - 1
+    slot = (state.log_tail + rank) % lc
+    slot = jnp.where(proceed, slot, lc)
+    log = state.log.at[slot].set(batch, mode="drop")
+    return ReplicaState(
+        state.store, log, state.log_tail + jnp.sum(proceed.astype(I32)),
+        state.committed,
+    )
+
+
+def replica_apply(state: ReplicaState, batch, proceed, cfg: TxConfig) -> ReplicaState:
+    """Append to redo-log, then apply writes (write-ahead ordering)."""
+    n, off, val = parse_tx(batch, cfg)
+    state = _append_log(state, batch, proceed)
+    store = _apply_writes(state.store, n, off, val, proceed)
+    return ReplicaState(
+        store, state.log, state.log_tail,
+        state.committed + jnp.sum(proceed.astype(I32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Local (scan) chain
+# ---------------------------------------------------------------------------
+
+def chain_commit_local(chain: ReplicaState, batch, cfg: TxConfig, mask=None):
+    """Commit a batch through the whole chain. Returns (chain, committed,
+    deferred). ``committed[i]`` True once every replica applied tx i."""
+    n, off, _ = parse_tx(batch, cfg)
+    proceed = concurrency_control(n, off, cfg, mask)
+
+    def step(carry, replica):
+        new_rep = replica_apply(replica, batch, proceed, cfg)
+        return carry, new_rep
+
+    _, new_chain = jax.lax.scan(step, None, chain)
+    deferred = (mask if mask is not None else jnp.ones_like(proceed)) & ~proceed
+    return new_chain, proceed, deferred
+
+
+def chain_hops(cfg: TxConfig, n_ops: int, per_op: bool) -> int:
+    """Chain traversals (forward + ACK) per transaction: the latency model
+    behind Fig. 11. HyperLoop: one traversal per op; ORCA: one per tx."""
+    traversals = n_ops if per_op else 1
+    return traversals * 2 * (cfg.chain_len - 1)
+
+
+# ---------------------------------------------------------------------------
+# SPMD (ppermute) chain
+# ---------------------------------------------------------------------------
+
+def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
+                      axis: str = "data", mask=None):
+    """Replicas sharded over ``axis`` (leading dim == chain_len). The head
+    (rank 0) runs concurrency control; the log batch ppermutes down the
+    chain; every rank applies; the ACK ppermutes back (counted, not carried:
+    the commit flag returns to the head after 2*(R-1) hops)."""
+    r = cfg.chain_len
+    mask_arr = mask if mask is not None else jnp.ones((batch.shape[0],), bool)
+
+    def inner(rep, bb, mk):
+        # shard_map blocks carry a leading chain dim of 1 — strip it
+        rep = jax.tree_util.tree_map(lambda x: x[0], rep)
+        me = jax.lax.axis_index(axis)
+        n, off, _ = parse_tx(bb, cfg)
+        proceed = concurrency_control(n, off, cfg, mk)
+        # broadcast head's decision down the chain, hop by hop
+        def fwd(i, carry):
+            b_cur, p_cur = carry
+            perm = [(j, j + 1) for j in range(r - 1)]
+            b_nxt = jax.lax.ppermute(b_cur, axis, perm)
+            p_nxt = jax.lax.ppermute(p_cur, axis, perm)
+            take = me == (i + 1)
+            return (
+                jnp.where(take, b_nxt, b_cur),
+                jnp.where(take, p_nxt, p_cur),
+            )
+
+        bb_f, pr_f = jax.lax.fori_loop(0, r - 1, fwd, (bb, proceed))
+        new_rep = replica_apply(rep, bb_f, pr_f, cfg)
+        # ACK back-propagation: tail -> head
+        ack = pr_f
+        def bwd(i, a):
+            perm = [(j + 1, j) for j in range(r - 1)]
+            return jax.lax.ppermute(a, axis, perm)
+
+        ack = jax.lax.fori_loop(0, r - 1, bwd, ack)
+        new_rep = jax.tree_util.tree_map(lambda x: x[None], new_rep)
+        return new_rep, ack, mk & ~pr_f
+
+    rep_specs = jax.tree_util.tree_map(lambda _: P(axis), chain)
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(rep_specs, P(), P()),
+        out_specs=(rep_specs, P(), P()),
+        check_vma=False,
+    )
+    return fn(chain, batch, mask_arr)

@@ -1,0 +1,41 @@
+"""ORCA-TX as an engine application: transactions through the same
+ring-buffer → cpoll → scheduler → APU pipeline as the KVS (§IV-B end to
+end).
+
+Request slot layout = the redo-log entry format (count header + (offset,
+value) tuples); the response carries [committed | deferred] so the client
+retries deferred transactions — the paper's "buffered in the queue in the
+order of arrival" behaviour lands on the client side of the credit loop,
+which preserves arrival order per connection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transaction as tx
+
+I32 = jnp.int32
+
+RESP_COMMITTED = 1
+RESP_DEFERRED = 2
+
+
+def request_words(cfg: tx.TxConfig) -> int:
+    return tx.tx_words(cfg)
+
+
+def app_step(chain: tx.ReplicaState, payloads, valid, cfg: tx.TxConfig):
+    """Engine hook. payloads: (B, tx_words). A zero count header = no-op.
+
+    Returns (chain, responses (B, tx_words)) where responses carry the
+    commit/deferred status in word 0."""
+    n_ops = payloads[:, 0]
+    live = valid & (n_ops > 0)
+    chain, committed, deferred = tx.chain_commit_local(chain, payloads, cfg, live)
+    status = jnp.where(
+        committed, RESP_COMMITTED, jnp.where(deferred, RESP_DEFERRED, 0)
+    ).astype(I32)
+    resp = jnp.zeros_like(payloads)
+    resp = resp.at[:, 0].set(status)
+    return chain, resp

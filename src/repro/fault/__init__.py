@@ -1,0 +1,1 @@
+from repro.fault.watchdog import Heartbeat, StragglerDetector, is_transient, with_retries

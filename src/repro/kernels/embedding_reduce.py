@@ -1,0 +1,57 @@
+"""Pallas kernel: gather + segment-sum embedding reduction (ORCA-DLRM §IV-C).
+
+The APU's "64 outstanding memory requests per query" becomes TPU software
+pipelining: the grid walks the (pre-sorted) index list, the table row for
+step ``i+1`` is DMA'd HBM→VMEM while step ``i`` accumulates — Pallas's
+BlockSpec pipeline emitter provides the double buffering. The output block
+index is the *segment* id; consecutive steps hitting the same segment keep
+the accumulator resident in VMEM (one write-back per segment, the DDIO-style
+"hot line stays in cache" path of C4).
+
+Requirements: ``seg_ids`` must be non-decreasing (the natural (b, t, l)
+query layout already is), and row dim D should be lane-aligned (pad to 128
+on real hardware; any D works in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, seg_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    seg_start = jnp.logical_or(i == 0, seg_ref[i] != seg_ref[i - 1])
+
+    @pl.when(seg_start)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def embedding_reduce(table, idx, seg_ids, num_segments: int, *, interpret: bool = True):
+    """table: (R, D); idx: (N,) int32 rows; seg_ids: (N,) int32 sorted.
+
+    Returns (num_segments, D) f32 segment sums.
+    """
+    n = idx.shape[0]
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # idx, seg_ids
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref, seg_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref, seg_ref: (seg_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(idx, seg_ids, table)

@@ -1,0 +1,106 @@
+"""Pallas kernel: causal flash attention (prefill path), GQA + sliding window.
+
+Block-skipping is structural: fully-masked (q-block, k-block) pairs are
+guarded out with ``pl.when`` so their matmuls never execute, which is what
+removes the 2× causal-FLOP waste of the masked pure-jnp reference (see
+EXPERIMENTS.md §Perf). Online softmax state (m, l, acc) lives in VMEM
+scratch across the innermost (k-block) grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, cq, ck, window, scale):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # k block
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = i * cq
+    q_last = q_first + cq - 1
+    k_first = j * ck
+    live = k_first <= q_last  # causal block reachability
+    if window:
+        live &= (k_first + ck - 1) > (q_first - window)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (Cq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Ck, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T  # (Cq, Ck)
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        mask = qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, window: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B, H, S, hd); k, v: (B, KVH, S, hd), H % KVH == 0. Causal.
+
+    Returns (B, H, S, hd) in q.dtype. S must divide by the block sizes
+    (pad outside; the model layer handles it)."""
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    cq, ck = min(block_q, s), min(block_k, s)
+    nq, nk = s // cq, s // ck
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, cq=cq, ck=ck, window=window, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, hd), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, ck, hd), lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+            pl.BlockSpec((1, 1, ck, hd), lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, cq, hd), lambda bb, hh, i, j: (bb, hh, i, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((cq, 1), jnp.float32),
+            pltpu.VMEM((cq, 1), jnp.float32),
+            pltpu.VMEM((cq, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,97 @@
+"""Pallas kernel: batched hash-table GET walk (ORCA-KV §IV-A).
+
+The APU's data-structure walker does three dependent memory accesses per GET
+(primary bucket, overflow bucket, value row). On TPU the walk splits into
+two pipelined passes, each a scalar-prefetch gather so the next request's
+bucket is in flight while the current one is compared:
+
+  pass 1 (``probe``):  buckets in, resolved pool pointer + found flag out
+  pass 2 (``fetch``):  value rows gathered at the resolved pointers
+
+Hashes are computed by the jitted wrapper (they are ALU work, not memory
+work — the pipelined part is what the paper offloads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _probe_kernel(h1_ref, h2_ref, keys_ref, bk1_ref, bp1_ref, bk2_ref, bp2_ref, out_ref):
+    q = keys_ref[0]  # (KW,)
+    bk1, bp1 = bk1_ref[0], bp1_ref[0]  # (W, KW), (W,)
+    bk2, bp2 = bk2_ref[0], bp2_ref[0]
+    eq1 = jnp.all(bk1 == q[None, :], axis=-1) & (bp1 >= 0)
+    eq2 = jnp.all(bk2 == q[None, :], axis=-1) & (bp2 >= 0)
+    hit1, hit2 = jnp.any(eq1), jnp.any(eq2)
+    p1 = jnp.max(jnp.where(eq1, bp1, -1))
+    p2 = jnp.max(jnp.where(eq2, bp2, -1))
+    found = hit1 | hit2
+    ptr = jnp.where(hit1, p1, p2)
+    out_ref[0, 0] = found.astype(jnp.int32)
+    out_ref[0, 1] = jnp.where(found, ptr, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe(bucket_keys, bucket_ptr, keys, h1, h2, *, interpret: bool = True):
+    """bucket_keys: (NB, W, KW); bucket_ptr: (NB, W); keys: (B, KW);
+    h1/h2: (B,) bucket ids. Returns (found (B,) bool, ptr (B,) int32)."""
+    b = keys.shape[0]
+    w, kw = bucket_keys.shape[1], bucket_keys.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # h1, h2
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, kw), lambda i, h1, h2: (i, 0)),
+            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h1[i], 0, 0)),
+            pl.BlockSpec((1, w), lambda i, h1, h2: (h1[i], 0)),
+            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h2[i], 0, 0)),
+            pl.BlockSpec((1, w), lambda i, h1, h2: (h2[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i, h1, h2: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.int32),
+        interpret=interpret,
+    )(h1, h2, keys, bucket_keys, bucket_ptr, bucket_keys, bucket_ptr)
+    return out[:, 0].astype(bool), out[:, 1]
+
+
+def _fetch_kernel(ptr_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fetch(pool, ptr, *, interpret: bool = True):
+    """pool: (NP, VW); ptr: (B,) int32 (pre-clamped). Returns (B, VW)."""
+    b = ptr.shape[0]
+    vw = pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, vw), lambda i, ptr: (ptr[i], 0))],
+        out_specs=pl.BlockSpec((1, vw), lambda i, ptr: (i, 0)),
+    )
+    return pl.pallas_call(
+        _fetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, vw), pool.dtype),
+        interpret=interpret,
+    )(ptr, pool)
+
+
+def get(state_bucket_keys, state_bucket_ptr, state_pool, keys, h1, h2, *,
+        interpret: bool = True):
+    """Full GET walk. Returns (vals (B, VW), found (B,))."""
+    found, ptr = probe(
+        state_bucket_keys, state_bucket_ptr, keys, h1, h2, interpret=interpret
+    )
+    ptr_safe = jnp.clip(ptr, 0, state_pool.shape[0] - 1)
+    vals = fetch(state_pool, ptr_safe, interpret=interpret)
+    return jnp.where(found[:, None], vals, 0), found

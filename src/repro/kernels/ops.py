@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas TPU kernels execute natively on TPU
+backends and in interpret mode (kernel body evaluated with jnp semantics)
+everywhere else — which is how this CPU container validates them. The
+pure-jnp oracles live in ``ref.py``; ``use_ref=True`` routes there (the
+dry-run uses the reference path so its HLO is XLA-analysable end to end).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import embedding_reduce as _er
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hash_probe as _hp
+from repro.kernels import paged_attention as _pa
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def embedding_reduce(table, idx, seg_ids, num_segments: int, *,
+                     use_ref: bool = False, interpret=None):
+    if use_ref:
+        return _ref.embedding_reduce(table, idx, seg_ids, num_segments)
+    it = _auto_interpret() if interpret is None else interpret
+    out = _er.embedding_reduce(table, idx, seg_ids, num_segments, interpret=it)
+    # segments with no entries are never visited by the grid: zero them
+    counts = jax.ops.segment_sum(jnp.ones_like(seg_ids), seg_ids, num_segments)
+    return jnp.where(counts[:, None] > 0, out, 0.0)
+
+
+def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2, *,
+             use_ref: bool = False, interpret=None):
+    if use_ref:
+        return _ref.hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2)
+    it = _auto_interpret() if interpret is None else interpret
+    return _hp.get(bucket_keys, bucket_ptr, pool, keys, h1, h2, interpret=it)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    use_ref: bool = False, interpret=None):
+    if use_ref:
+        return _ref.paged_attention(q, k_pages, v_pages, page_table, lengths)
+    it = _auto_interpret() if interpret is None else interpret
+    return _pa.paged_attention(
+        q, k_pages, v_pages, page_table, lengths, interpret=it
+    )
+
+
+def flash_attention(q, k, v, *, window: int = 0, block_q: int = 128,
+                    block_k: int = 128, use_ref: bool = False, interpret=None):
+    if use_ref:
+        return _ref.flash_attention(q, k, v, window=window)
+    it = _auto_interpret() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, window=window, block_q=block_q, block_k=block_k, interpret=it
+    )

@@ -1,0 +1,97 @@
+"""Pallas kernel: decode attention over a paged KV cache.
+
+The serving engine's KV cache is the "large working set in server memory"
+of the paper; the page table is the data-structure walker's index. The grid
+walks (batch, kv-head, page): page ``p+1`` of a sequence is DMA'd HBM→VMEM
+while page ``p`` is being reduced (online softmax), the same
+memory-level-parallelism pattern as the other walkers. Query-head groups
+(GQA) ride along the kv-head block so the MXU sees a (G, hd) × (hd, PS)
+matmul per page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+    ps = k_ref.shape[1]
+
+    @pl.when(p == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_start = p * ps
+    live = page_start < length
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (PS, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (PS, hd)
+        s = q @ k.T  # (G, PS)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + pexp @ v
+        m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool = True):
+    """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd);
+    page_table: (B, MaxP) int32; lengths: (B,). Returns (B, KVH, G, hd) f32.
+    """
+    b, kvh, g, hd = q.shape
+    n_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    maxp = page_table.shape[1]
+
+    def pt_idx(bb, kv, p, pt, ln):
+        # clamp dead pages to page 0 (cheap refetch, compute skipped)
+        page = pt[bb, p]
+        return (jnp.clip(page, 0, n_pages - 1), 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=(b, kvh, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), pt_idx),
+            pl.BlockSpec((1, ps, 1, hd), pt_idx),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

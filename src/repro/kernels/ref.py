@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every kernel in this package (the ground truth the
+per-kernel allclose tests sweep against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def embedding_reduce(table, idx, seg_ids, num_segments: int):
+    """(R, D), (N,), (N,) -> (num_segments, D) f32 segment sums."""
+    return jax.ops.segment_sum(
+        table[idx].astype(F32), seg_ids, num_segments
+    )
+
+
+def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
+    """Two-bucket probe + value fetch. Returns (vals, found)."""
+    def one(bids):
+        bk = bucket_keys[bids]
+        bp = bucket_ptr[bids]
+        eq = jnp.all(bk == keys[:, None, :], axis=-1) & (bp >= 0)
+        hit = jnp.any(eq, axis=-1)
+        ptr = jnp.max(jnp.where(eq, bp, -1), axis=-1)
+        return hit, ptr
+
+    hit1, p1 = one(h1)
+    hit2, p2 = one(h2)
+    found = hit1 | hit2
+    ptr = jnp.where(hit1, p1, p2)
+    vals = pool[jnp.clip(ptr, 0, pool.shape[0] - 1)]
+    return jnp.where(found[:, None], vals, 0), found
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths):
+    """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd)."""
+    b, kvh, g, hd = q.shape
+    np_, ps = k_pages.shape[0], k_pages.shape[1]
+    maxp = page_table.shape[1]
+    # materialize per-sequence K/V: (B, MaxP*PS, KVH, hd)
+    kk = k_pages[jnp.clip(page_table, 0, np_ - 1)].reshape(b, maxp * ps, kvh, hd)
+    vv = v_pages[jnp.clip(page_table, 0, np_ - 1)].reshape(b, maxp * ps, kvh, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(F32), kk.astype(F32))
+    pos = jnp.arange(maxp * ps)[None, :]
+    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vv.astype(F32))
+
+
+def flash_attention(q, k, v, *, window: int = 0):
+    """Causal (optionally windowed) attention. q: (B,H,S,hd); k/v GQA."""
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qf = q.astype(F32).reshape(b, kvh, g, s, hd) * (hd ** -0.5)
+    sc = jnp.einsum("bkgqh,bksh->bkgqs", qf, k.astype(F32))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(F32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)

@@ -1,0 +1,498 @@
+"""Loop-aware post-SPMD HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+a 10-iteration scanned matmul reports 1 matmul of FLOPs), which silently
+undercounts any scanned model by ~num_layers×. This module re-derives
+roofline inputs from the partitioned HLO text with **trip-count
+multipliers**:
+
+* computations are parsed into symbol tables (every instruction's shape);
+* ``while`` instructions contribute ``body × trip`` where the trip count is
+  recovered from the canonical scan condition (``compare(counter,
+  constant(L)), direction=LT``);
+* FLOPs come from ``dot``/``convolution`` instructions (2 × result elements
+  × contracted extent), wherever they live (fusion bodies included);
+* HBM bytes come from top-level (non-fusion-body) instructions: Σ operand +
+  result bytes, the same buffer model XLA's own analysis uses;
+* collective bytes are split ICI vs DCN by replica-group pod membership,
+  with per-op *operand* accounting (all-gather operand = result / group).
+
+Everything is per-device (the partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{")
+_INST = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call", "get-dimension-size", "opt-barrier",
+    "bitcast-convert",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+
+
+def _shape_bytes_of(typestr: str) -> int:
+    return sum(
+        _bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(typestr)
+    )
+
+
+def _bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _elems(typestr: str) -> int:
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2).strip():
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def _dims_list(typestr: str) -> list[int]:
+    m = _SHAPE_RE.search(typestr)
+    if not m or not m.group(2).strip():
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instruction:
+    name: str
+    typestr: str
+    opcode: str
+    rest: str  # args + attrs (everything after the opening paren)
+
+    @property
+    def operands(self) -> list[str]:
+        # operand names up to the closing paren of the call
+        depth, i = 1, 0
+        s = self.rest
+        while i < len(s) and depth:
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+            i += 1
+        args = s[: i - 1]
+        return re.findall(r"%([\w.\-]+)", args)
+
+    @property
+    def attrs(self) -> str:
+        depth, i = 1, 0
+        s = self.rest
+        while i < len(s) and depth:
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+            i += 1
+        return s[i:]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    insts: dict = field(default_factory=dict)  # name -> Instruction
+    params: dict = field(default_factory=dict)  # name -> typestr
+    consts: dict = field(default_factory=dict)  # name -> int value (s32/u32)
+
+    def shape_of(self, operand: str) -> Optional[str]:
+        if operand in self.insts:
+            return self.insts[operand].typestr
+        if operand in self.params:
+            return self.params[operand]
+        return None
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and ("->" in line):
+            cur = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            # param types may contain commas inside dims or tuples: match
+            # `name: dtype[d,d,...]{layout}` or `name: (tuple, ...)`
+            for pname, ptype in re.findall(
+                r"%?([\w.\-]+):\s*((?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[0-9,]*\})?)|\([^)]*\))",
+                hdr.group(3),
+            ):
+                cur.params[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INST.match(line)
+        if not m:
+            continue
+        name, typestr, opcode, rest = m.groups()
+        inst = Instruction(name, typestr, opcode, rest)
+        cur.insts[name] = inst
+        if opcode == "constant":
+            cm = re.match(r"([0-9]+)\)", rest)
+            if cm and typestr.strip().startswith(("s32[]", "u32[]", "s64[]", "u64[]")):
+                cur.consts[name] = int(cm.group(1))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover the scan trip count from the canonical while condition."""
+    for inst in cond.insts.values():
+        if inst.opcode == "compare" and "direction=LT" in inst.attrs:
+            for op in inst.operands:
+                if op in cond.consts:
+                    return max(1, cond.consts[op])
+        if inst.opcode == "compare" and "direction=GT" in inst.attrs:
+            for op in inst.operands:
+                if op in cond.consts:
+                    return max(1, cond.consts[op])
+    return 1
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution multiplier per computation (product of enclosing trips)."""
+    mult: dict[str, float] = defaultdict(float)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {k: 1.0 for k in comps}
+    mult[entry.name] = 1.0
+    stack = [entry.name]
+    seen_edges = set()
+    while stack:
+        cname = stack.pop()
+        comp = comps[cname]
+        m = mult[cname]
+        for inst in comp.insts.values():
+            attrs = inst.rest
+            callee_mults = []
+            if inst.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", attrs)
+                tk = re.search(r"known_trip_count.*?(\d+)", attrs)
+                if tk:
+                    trip = max(1, int(tk.group(1)))
+                else:
+                    trip = _trip_count(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+                if bm and bm.group(1) in comps:
+                    callee_mults.append((bm.group(1), m * trip))
+                if cm and cm.group(1) in comps:
+                    callee_mults.append((cm.group(1), m * trip))
+            else:
+                for key in ("calls", "to_apply", "body", "branch_computations"):
+                    for cm_ in re.finditer(key + r"=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", attrs):
+                        for nm in re.findall(r"[\w.\-]+", cm_.group(1)):
+                            if nm in comps:
+                                callee_mults.append((nm, m))
+            for nm, nmult in callee_mults:
+                edge = (cname, nm, nmult)
+                if nmult > mult[nm]:
+                    mult[nm] = nmult
+                    stack.append(nm)
+                elif edge not in seen_edges and nm not in mult:
+                    mult[nm] = nmult
+                    stack.append(nm)
+                seen_edges.add(edge)
+    return {k: (mult[k] if mult[k] > 0 else 1.0) for k in comps}
+
+
+def _fusion_bodies(comps: dict[str, Computation]) -> set[str]:
+    """Computations called via fusion/to_apply (their insts don't touch HBM)."""
+    out = set()
+    for comp in comps.values():
+        for inst in comp.insts.values():
+            if inst.opcode in ("fusion", "reduce", "sort", "map", "scatter",
+                               "select-and-scatter", "reduce-window", "all-reduce",
+                               "reduce-scatter", "all-reduce-start"):
+                for key in ("calls", "to_apply"):
+                    m = re.search(key + r"=%?([\w.\-]+)", inst.rest)
+                    if m:
+                        out.add(m.group(1))
+    return out
+
+
+def _fusion_param_bytes(comps, comp: Computation, inst: Instruction) -> tuple[float, float]:
+    """(operand_bytes, result_bytes) for a fusion, accounting for in-place
+    dynamic-update-slice and slice-only parameter reads.
+
+    A fusion parameter whose only uses are (a) operand 0 of a
+    dynamic-update-slice (the aliased in-place target) or (b) the input of a
+    dynamic-slice, touches only the slice, not the whole buffer. A fusion
+    whose root is a DUS (or a tuple containing DUSes) writes only the update
+    windows of those elements.
+    """
+    m = re.search(r"calls=%?([\w.\-]+)", inst.rest)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        ops_b = sum(
+            _shape_bytes_of(comp.shape_of(n) or "") for n in inst.operands
+        )
+        return ops_b, _shape_bytes_of(inst.typestr)
+
+    # order params by declaration order to match operand order
+    pnames = list(body.params.keys())
+    uses: dict[str, list[tuple[str, int]]] = {p: [] for p in pnames}
+    for bi in body.insts.values():
+        for pos, opn in enumerate(bi.operands):
+            if opn in uses:
+                uses[opn].append((bi.opcode, pos))
+        # track pass-through via bitcast/copy of params
+    operand_b = 0.0
+    for pos, opn in enumerate(inst.operands):
+        shape = comp.shape_of(opn) or ""
+        full = _shape_bytes_of(shape)
+        if pos < len(pnames):
+            u = uses[pnames[pos]]
+            if u and all(
+                ((k in ("dynamic-update-slice", "scatter")) and p == 0)
+                or k == "dynamic-slice"
+                for k, p in u
+            ):
+                # touched bytes = the slice/update sizes of those users
+                touched = 0.0
+                for bi in body.insts.values():
+                    if not bi.operands or bi.operands[0] != pnames[pos]:
+                        continue
+                    if bi.opcode == "dynamic-slice":
+                        touched += _shape_bytes_of(bi.typestr)
+                    elif bi.opcode == "dynamic-update-slice" and len(bi.operands) > 1:
+                        touched += _shape_bytes_of(body.shape_of(bi.operands[1]) or "")
+                    elif bi.opcode == "scatter" and len(bi.operands) > 2:
+                        touched += _shape_bytes_of(body.shape_of(bi.operands[2]) or "")
+                        touched += _shape_bytes_of(body.shape_of(bi.operands[1]) or "")
+                operand_b += min(full, touched)
+                continue
+        operand_b += full
+    # result: in-place-update roots write only their update windows
+    result_b = 0.0
+    inplace = [
+        bi for bi in body.insts.values()
+        if bi.opcode in ("dynamic-update-slice", "scatter")
+    ]
+    if inplace:
+        full_res = _shape_bytes_of(inst.typestr)
+        written = 0.0
+        covered = 0.0
+        for bi in inplace:
+            covered += _shape_bytes_of(bi.typestr)
+            if bi.opcode == "dynamic-update-slice" and len(bi.operands) > 1:
+                written += _shape_bytes_of(body.shape_of(bi.operands[1]) or "")
+            elif bi.opcode == "scatter" and len(bi.operands) > 2:
+                written += _shape_bytes_of(body.shape_of(bi.operands[2]) or "")
+        result_b = max(0.0, full_res - covered) + written
+    else:
+        result_b = _shape_bytes_of(inst.typestr)
+    return operand_b, result_b
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    out_elems = _elems(inst.typestr)
+    ops = inst.operands
+    lhs_shape = comp.shape_of(ops[0]) if ops else None
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.rest)
+    if m and lhs_shape:
+        dims = _dims_list(lhs_shape)
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            if d < len(dims):
+                contract *= dims[d]
+    return 2.0 * out_elems * contract
+
+
+_MOVE_OPS = {
+    "convert", "copy", "bitcast", "transpose", "reshape", "parameter",
+    "tuple", "get-tuple-element", "constant", "broadcast", "slice",
+}
+
+
+def _is_move_fusion(comps, comp: Computation, inst: Instruction) -> bool:
+    """True for fusions whose body only moves/retypes data (no arithmetic).
+
+    These are dominated by bf16<->f32 legalization and layout copies that
+    the CPU backend materializes but a TPU compile fuses into consumers or
+    never emits (native bf16); their bytes are tracked separately so the
+    roofline can report raw and TPU-projected memory terms."""
+    m = re.search(r"calls=%?([\w.\-]+)", inst.rest)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        return False
+    return all(bi.opcode in _MOVE_OPS for bi in body.insts.values())
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    move_bytes: float = 0.0  # layout/dtype-move traffic (legalization)
+    coll_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    coll_count: float = 0.0
+    transcendental: float = 0.0
+
+    @property
+    def collective_bytes(self) -> float:
+        return self.ici_bytes + self.dcn_bytes
+
+    @property
+    def compute_bytes(self) -> float:
+        """Bytes excluding pure data movement (TPU-projected memory term)."""
+        return self.bytes - self.move_bytes
+
+    def to_json(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "move_bytes": self.move_bytes,
+            "compute_bytes": self.compute_bytes,
+            "collective_count": self.coll_count,
+            "ici_bytes": self.ici_bytes, "dcn_bytes": self.dcn_bytes,
+            "collective_bytes": self.collective_bytes,
+            "by_op": {k: float(v) for k, v in self.coll_by_op.items()},
+        }
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([0-9,\s]*)\}", attrs)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return 1
+
+
+def _spans_pods(attrs: str, pod_size: int) -> bool:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]", attrs)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        total = 1
+        for d in m.group(3).split(","):
+            total *= int(d)
+        if total <= pod_size:
+            return False
+        if "T(" in attrs[m.end(): m.end() + 16]:
+            return True
+        return gs > pod_size or any(
+            (g * gs) // pod_size != ((g + 1) * gs - 1) // pod_size
+            for g in range(min(ng, 128))
+        )
+    m = re.search(r"replica_groups=\{(.*?)\}\s*(,|$)", attrs)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in re.findall(r"\d+", grp)]
+            if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                return True
+        return False
+    pairs = re.search(r"source_target_pairs=\{(.*?)\}\}", attrs)
+    if pairs:
+        ids = [int(x) for x in re.findall(r"\d+", pairs.group(1))]
+        it = iter(ids)
+        return any(a // pod_size != b // pod_size for a, b in zip(it, it))
+    return False
+
+
+def analyze(text: str, pod_size: int = 256) -> HloCost:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    fusion_set = _fusion_bodies(comps)
+    cost = HloCost()
+    for comp in comps.values():
+        m = mult.get(comp.name, 1.0)
+        in_fusion = comp.name in fusion_set
+        for inst in comp.insts.values():
+            op = inst.opcode
+            if op in ("dot", "convolution"):
+                cost.flops += m * _dot_flops(comp, inst)
+            if in_fusion:
+                continue  # fusion-body insts don't touch HBM individually
+            if op in _FREE_OPS:
+                continue
+            if op.endswith("-done"):
+                continue
+            result_b = _shape_bytes_of(inst.typestr)
+            operand_b = 0
+            for name in inst.operands:
+                sh = comp.shape_of(name)
+                if sh:
+                    operand_b += _shape_bytes_of(sh)
+            if op in _COLLECTIVES:
+                base = op.replace("-start", "")
+                g = _group_size(inst.attrs)
+                if base == "all-gather":
+                    nbytes = result_b / max(g, 1)
+                elif base == "reduce-scatter":
+                    nbytes = operand_b or result_b * g
+                else:
+                    nbytes = operand_b or result_b
+                cost.coll_count += m
+                cost.coll_by_op[base] += m * nbytes
+                if _spans_pods(inst.attrs, pod_size):
+                    cost.dcn_bytes += m * nbytes
+                else:
+                    cost.ici_bytes += m * nbytes
+                # collectives also move HBM bytes
+                cost.bytes += m * (operand_b + result_b)
+                continue
+            if op == "fusion":
+                ob, rb = _fusion_param_bytes(comps, comp, inst)
+                cost.bytes += m * (ob + rb)
+                if _is_move_fusion(comps, comp, inst):
+                    cost.move_bytes += m * (ob + rb)
+                continue
+            if op in ("copy", "transpose", "reshape", "convert"):
+                cost.bytes += m * (operand_b + result_b)
+                cost.move_bytes += m * (operand_b + result_b)
+                continue
+            if op == "dynamic-slice":
+                cost.bytes += m * 2 * result_b
+                continue
+            if op == "dynamic-update-slice":
+                upd = comp.shape_of(inst.operands[1]) if len(inst.operands) > 1 else None
+                ub = _shape_bytes_of(upd or "")
+                cost.bytes += m * 2 * ub  # read update, write window (aliased)
+                continue
+            if op == "scatter":
+                # in-place: read+write updates and indices, not the operand
+                extra = 0.0
+                for name in inst.operands[1:]:
+                    extra += _shape_bytes_of(comp.shape_of(name) or "")
+                cost.bytes += m * 2 * extra
+                continue
+            cost.bytes += m * (operand_b + result_b)
+    return cost
+
+
+# Backwards-compatible helper used by early benchmarks
+def collective_bytes(text: str, pod_size: int = 256) -> HloCost:
+    return analyze(text, pod_size=pod_size)

@@ -1,0 +1,12 @@
+from repro.models.model import (
+    DecodeState,
+    abstract_params,
+    decode_step,
+    forward,
+    init_params,
+    input_specs,
+    loss_fn,
+    make_decode_state,
+    postprocess_grads,
+    prefill,
+)

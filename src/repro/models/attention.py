@@ -1,0 +1,307 @@
+"""GQA attention with the head-padding plan, chunked (flash-style) prefill
+and cache-based decode.
+
+Physical layout (see ``parallel/sharding.py``): query heads are padded to
+``plan.hp`` (divisible by the model axis), kv heads are padded to ``plan.kvp``
+and *physically replicated* ``plan.repl`` times so the stored kv-head dim is
+shardable. Replicated kv weight slots are tied at init and their gradients are
+re-tied every step (``tie_kv_grads``), so the computed function equals the
+logical unpadded model exactly. Padded q-head outputs are masked to zero.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import HeadPlan
+from repro.models.layers import apply_mrope, apply_rope
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _q_slot_map(plan: HeadPlan):
+    """logical q head i -> physical padded slot."""
+    g = plan.group
+    return [((i // g) * plan.gp + (i % g)) for i in range(plan.h)]
+
+
+def q_head_mask(plan: HeadPlan):
+    """(hp,) 1.0 for slots holding a real query head."""
+    mask = jnp.zeros((plan.hp,), F32)
+    return mask.at[jnp.array(_q_slot_map(plan), jnp.int32)].set(1.0)
+
+
+def attn_init(key, cfg: ModelConfig, plan: HeadPlan):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / (d ** 0.5)
+
+    # logical weights, then scatter/replicate into physical layout
+    wq_l = jax.random.normal(ks[0], (d, plan.h, hd), F32) * std
+    wk_l = jax.random.normal(ks[1], (d, plan.kv, hd), F32) * std
+    wv_l = jax.random.normal(ks[2], (d, plan.kv, hd), F32) * std
+
+    wq = jnp.zeros((d, plan.hp, hd), F32)
+    wq = wq.at[:, jnp.array(_q_slot_map(plan), jnp.int32)].set(wq_l)
+    # kv: pad to kvp then replicate each head `repl` times consecutively
+    wk = jnp.zeros((d, plan.kvp, hd), F32).at[:, : plan.kv].set(wk_l)
+    wv = jnp.zeros((d, plan.kvp, hd), F32).at[:, : plan.kv].set(wv_l)
+    wk = jnp.repeat(wk, plan.repl, axis=1)
+    wv = jnp.repeat(wv, plan.repl, axis=1)
+
+    p = {
+        "wq": wq.astype(dt),
+        "wk": wk.astype(dt),
+        "wv": wv.astype(dt),
+        "wo": (jax.random.normal(ks[3], (plan.hp, hd, d), F32) * std).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((plan.hp, hd), dt)
+        p["bk"] = jnp.zeros((plan.kv_phys, hd), dt)
+        p["bv"] = jnp.zeros((plan.kv_phys, hd), dt)
+    return p
+
+
+def tie_kv_grads(grads_attn: dict, plan: HeadPlan) -> dict:
+    """Average gradients across kv replication groups (keeps replicas tied)."""
+    if plan.repl == 1:
+        return grads_attn
+    out = dict(grads_attn)
+    for name in ("wk", "wv", "bk", "bv"):
+        if name not in out:
+            continue
+        g = out[name]
+        ax = g.ndim - 2  # kv-head axis: (..., kv_phys, head_dim)
+        shape = list(g.shape)
+        assert shape[ax] == plan.kv_phys, (name, shape, plan)
+        grouped = g.reshape(
+            shape[:ax] + [plan.kvp, plan.repl] + shape[ax + 1 :]
+        )
+        mean = jnp.mean(grouped, axis=ax + 1, keepdims=True)
+        out[name] = jnp.broadcast_to(mean, grouped.shape).reshape(g.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# QKV projection
+# ---------------------------------------------------------------------------
+
+def qkv(params, x, cfg: ModelConfig, plan: HeadPlan, positions):
+    """x: (B, S, D) -> q (B,S,hp,hd), k/v (B,S,kv_phys,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"], preferred_element_type=F32)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(F32)
+        k = k + params["bk"].astype(F32)
+        v = v + params["bv"].astype(F32)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        pos = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    dt = jnp.dtype(cfg.dtype)
+    return q.astype(dt), k.astype(dt), v.astype(dt)
+
+
+def out_proj(params, attn_out, plan: HeadPlan):
+    """attn_out: (B, S, hp, hd) -> (B, S, D), masking padded q slots."""
+    mask = q_head_mask(plan).astype(attn_out.dtype)
+    attn_out = attn_out * mask[None, None, :, None]
+    y = jnp.einsum(
+        "bshk,hkd->bsd", attn_out, params["wo"], preferred_element_type=F32
+    )
+    return y.astype(attn_out.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked full attention (training path for moderate S)
+#
+# Differentiating the nested-scan chunked attention stacks per-chunk softmax
+# residuals across BOTH scan levels in the backward pass (observed: ~90 GiB
+# temps for qwen2.5-14b train_4k). For trainable sequence lengths we instead
+# use the plain masked form whose backward XLA handles with one S x S score
+# tile per (rematted) layer; the chunked/flash form serves the forward-only
+# prefill path where no residuals exist.
+# ---------------------------------------------------------------------------
+
+TRAIN_FULL_ATTN_MAX = 8192
+
+
+def full_attention(q, k, v, *, window: int = 0):
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd). Causal (optionally windowed)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(F32).reshape(B, S, KV, G, hd) * hd ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(F32))
+    qpos, kpos = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (flash-style, pure jnp reference path)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q, k, v, *, q_offset=0, window: int = 0, chunk: int = 512,
+):
+    """Online-softmax chunked causal attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0 with
+    Sq == Sk). ``window``: sliding-window size (0 = full causal). Scans over
+    q chunks (outer) and kv chunks (inner) so only (B, C, H, C) score tiles
+    materialize. With a window, only ``window//chunk + 1`` kv chunks are
+    visited per q chunk — real FLOP savings, not just masking.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    C = min(chunk, Sq, Sk)
+    # pad to chunk multiples
+    pq = (-Sq) % C
+    pk = (-Sk) % C
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // C, k.shape[1] // C
+    scale = hd ** -0.5
+
+    qc = q.reshape(B, nq, C, H, hd)
+    kc = k.reshape(B, nk, C, KV, hd)
+    vc = v.reshape(B, nk, C, KV, hd)
+
+    if window:
+        wk_chunks = min(nk, window // C + 2)
+    else:
+        wk_chunks = nk
+
+    q_pos_base = jnp.arange(C)
+    k_pos_base = jnp.arange(C)
+
+    def q_step(_, qi):
+        qblk = qc[:, qi].astype(F32) * scale  # (B, C, H, hd)
+        q_pos = q_offset + qi * C + q_pos_base  # absolute positions
+
+        # first kv chunk to visit (static count wk_chunks, dynamic start)
+        if window:
+            last = jnp.minimum((q_offset + qi * C + C - 1) // C, nk - 1)
+            start = jnp.clip(last - (wk_chunks - 1), 0, nk - wk_chunks)
+        else:
+            start = 0
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(kc, start + j, axis=1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, start + j, axis=1, keepdims=False)
+            k_pos = (start + j) * C + k_pos_base
+            # scores: (B, C, KV, G, Ck)
+            qg = qblk.reshape(B, C, KV, G, hd)
+            s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kj.astype(F32))
+            causal = q_pos[:, None] >= k_pos[None, :]
+            if window:
+                causal &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(causal[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqkgc,bckh->bqkgh", p, vj.astype(F32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, C, KV, G), NEG_INF, F32)
+        l0 = jnp.zeros((B, C, KV, G), F32)
+        a0 = jnp.zeros((B, C, KV, G, hd), F32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(wk_chunks)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.reshape(B, C, H, hd)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * C, H, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against a contiguous KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0):
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); lengths: (B,) valid len
+    (the new token's k/v must already be written at ``lengths - 1``)."""
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q[:, 0].reshape(B, KV, G, hd).astype(F32) * scale
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(F32))
+    pos = jnp.arange(Smax)[None, :]  # (1, Smax)
+    valid = pos < lengths[:, None]
+    if window:
+        valid &= pos >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(F32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention module forward (prefill / train and decode)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Smax, kv_phys, hd)
+    v: jax.Array
+
+
+def attention_block(
+    params, x, cfg: ModelConfig, plan: HeadPlan, positions,
+    *, cache: Optional[KVCache] = None, lengths=None, chunk: int = 512,
+):
+    """Returns (y, new_cache). Train/prefill when cache is None or being
+    filled from empty; decode when x has seq 1 and cache is given."""
+    q, k, v = qkv(params, x, cfg, plan, positions)
+    S = x.shape[1]
+    if cache is None:
+        out = chunked_attention(q, k, v, window=cfg.sliding_window, chunk=chunk)
+        return out_proj(params, out, plan), None
+    if S == 1:
+        # decode: write new k/v at lengths-1, attend over cache
+        idx = lengths - 1  # (B,)
+        k_cache = jax.vmap(
+            lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(c, kn, i, 0)
+        )(cache.k, k, idx)
+        v_cache = jax.vmap(
+            lambda c, vn, i: jax.lax.dynamic_update_slice_in_dim(c, vn, i, 0)
+        )(cache.v, v, idx)
+        out = decode_attention(q, k_cache, v_cache, lengths, window=cfg.sliding_window)
+        return out_proj(params, out, plan), KVCache(k_cache, v_cache)
+    # prefill writing into cache from position 0
+    out = chunked_attention(q, k, v, window=cfg.sliding_window, chunk=chunk)
+    Smax = cache.k.shape[1]
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)) if S <= Smax else cache.k
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)) if S <= Smax else cache.v
+    return out_proj(params, out, plan), KVCache(k_cache, v_cache)

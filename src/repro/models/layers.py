@@ -1,0 +1,175 @@
+"""Shared layers: norms, MLPs, rotary embeddings, token/codebook embeddings.
+
+Everything is functional: ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y``. Matmuls accumulate in f32
+(``preferred_element_type``) regardless of the storage dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+F32 = jnp.float32
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / (in_dim ** 0.5)
+    return (jax.random.normal(key, (in_dim, out_dim), F32) * std).astype(dtype)
+
+
+def matmul(x, w):
+    return jnp.einsum("...i,io->...o", x, w, preferred_element_type=F32)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(F32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / gelu / squared-relu)
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dt),
+        "w_in": dense_init(k2, d, f, dt),
+        "w_out": dense_init(k3, f, d, dt),
+    }
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    dt = x.dtype
+    g = matmul(x, params["w_gate"])
+    h = matmul(x, params["w_in"])
+    y = act_fn(act)(g) * h
+    return matmul(y.astype(dt), params["w_out"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(F32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Temporal/height/width frequency split (fractions 1/4, 3/8, 3/8)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return t, h, half - t - h
+
+
+def apply_mrope(x, positions3, theta: float):
+    """qwen2-vl M-RoPE. positions3: (3, ..., S) — temporal, h, w components."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)
+    t, h, w = mrope_sections(hd)
+    sec = jnp.concatenate(
+        [jnp.zeros((t,), jnp.int32), jnp.ones((h,), jnp.int32), jnp.full((w,), 2, jnp.int32)]
+    )  # (half,) which position component each freq uses
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions3, 0, -1),  # (..., S, 3)
+        jnp.broadcast_to(sec, positions3.shape[1:] + (half,)),
+        axis=-1,
+    )  # (..., S, half)
+    ang = pos.astype(F32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    v, d = cfg.padded_vocab, cfg.d_model
+    if cfg.num_codebooks:
+        tok = jax.random.normal(key, (cfg.num_codebooks, v, d), F32) * 0.02
+    else:
+        tok = jax.random.normal(key, (v, d), F32) * 0.02
+    return {"tok": tok.astype(dt)}
+
+
+def embed_apply(params, tokens, cfg: ModelConfig):
+    """tokens: (B, S) int32 or (B, S, K) for codebook archs -> (B, S, D)."""
+    tok = params["tok"]
+    if cfg.num_codebooks:
+        # sum of per-codebook embeddings (musicgen)
+        embs = jnp.take(tok, tokens, axis=1)  # (K, B, S, D) if tokens (B,S,K)?
+        # tokens: (B, S, K) -> gather per codebook
+        parts = [jnp.take(tok[k], tokens[..., k], axis=0) for k in range(cfg.num_codebooks)]
+        return sum(parts)
+    return jnp.take(tok, tokens, axis=0)
+
+
+def lm_head_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    v, d = cfg.padded_vocab, cfg.d_model
+    if cfg.num_codebooks:
+        w = jax.random.normal(key, (cfg.num_codebooks, d, v), F32) / (d ** 0.5)
+    else:
+        w = jax.random.normal(key, (d, v), F32) / (d ** 0.5)
+    return {"w": w.astype(dt)}
+
+
+def lm_head_apply(params, x, cfg: ModelConfig, embed_params=None):
+    """x: (B, S, D) -> logits over the padded vocab with dead columns masked
+    to -inf; shape (B, S, Vp) or (B, S, K, Vp)."""
+    if cfg.tie_embeddings:
+        w = embed_params["tok"].T  # (D, Vp)
+        logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+    elif cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", x, params["w"], preferred_element_type=F32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["w"], preferred_element_type=F32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        dead = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(dead, -1e30, logits)
+    return logits

@@ -1,0 +1,271 @@
+"""Top-level LM: init / train loss / prefill / decode, for all 10 archs."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.attention import tie_kv_grads
+from repro.models.layers import (
+    embed_apply, embed_init, lm_head_apply, lm_head_init, rmsnorm, rmsnorm_init,
+)
+from repro.parallel.sharding import ParallelContext, shard
+
+F32 = jnp.float32
+
+
+class DecodeState(NamedTuple):
+    layers: Any  # stacked per-layer states (leading dim L)
+    pos: jax.Array  # (B,) number of tokens already in context (next write pos)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, ctx: ParallelContext):
+    plan = tf.plan_for(cfg, ctx)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "embed": embed_init(k1, cfg),
+        "layers": tf.stack_init(k2, cfg, plan),
+        "final_norm": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_init(k3, cfg)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, ctx: ParallelContext):
+    """ShapeDtypeStruct skeleton — no allocation (dry-run path)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(k, cfg, ctx), key)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg: ModelConfig, tokens, offset=0):
+    b = tokens.shape[0]
+    s = tokens.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, b, s))  # text stub: t=h=w
+    return pos
+
+
+def forward(
+    params, tokens, cfg: ModelConfig, ctx: ParallelContext, *,
+    media=None, chunk: int = 512,
+):
+    """tokens: (B, S) or (B, S, K). Returns (logits, aux)."""
+    plan = tf.plan_for(cfg, ctx)
+    h = embed_apply(params["embed"], tokens, cfg)
+    if cfg.media_tokens and media is not None:
+        # VLM stub: add precomputed patch embeddings at the first M positions
+        m = media.shape[1]
+        h = h.at[:, :m].add(media.astype(h.dtype))
+    h = shard(h, ctx, ctx.batch_axes, None, None)
+    positions = _positions_for(cfg, tokens)
+    h, _, aux = tf.stack_apply(
+        params["layers"], h, cfg, plan, ctx, positions, chunk=chunk
+    )
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_head_apply(
+        params.get("lm_head"), h, cfg, embed_params=params["embed"]
+    )
+    return logits, aux
+
+
+def loss_fn(
+    params, batch, cfg: ModelConfig, ctx: ParallelContext, *, chunk: int = 512
+):
+    """batch: {'tokens', 'labels'[, 'media']} -> (scalar loss, metrics)."""
+    logits, aux = forward(
+        params, batch["tokens"], cfg, ctx, media=batch.get("media"), chunk=chunk
+    )
+    labels = batch["labels"]
+    lf = logits.astype(F32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays sharded on the
+    # vocab axis under GSPMD (a vocab gather would all-gather ~40 GB/dev of
+    # logits on the production mesh)
+    iota = jnp.arange(lf.shape[-1], dtype=jnp.int32)
+    gold = jnp.sum(
+        jnp.where(labels[..., None].astype(jnp.int32) == iota, lf, 0.0), axis=-1
+    )
+    ce = jnp.mean(lse - gold)
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def make_decode_state(cfg: ModelConfig, ctx: ParallelContext, batch: int, cache_len: int) -> DecodeState:
+    plan = tf.plan_for(cfg, ctx)
+
+    def one_layer(_):
+        return tf.layer_state_zeros(cfg, plan, batch, cache_len)
+
+    layers = jax.vmap(one_layer)(jnp.arange(cfg.num_layers))
+    return DecodeState(layers=layers, pos=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(
+    params, tokens, state: DecodeState, cfg: ModelConfig, ctx: ParallelContext,
+    *, media=None, chunk: int = 512,
+):
+    """Fill the decode state from a prompt. Returns (new_state, last_logits)."""
+    plan = tf.plan_for(cfg, ctx)
+    h = embed_apply(params["embed"], tokens, cfg)
+    if cfg.media_tokens and media is not None:
+        h = h.at[:, : media.shape[1]].add(media.astype(h.dtype))
+    h = shard(h, ctx, ctx.batch_axes, None, None)
+    positions = _positions_for(cfg, tokens)
+    h, new_layers, _ = tf.stack_apply(
+        params["layers"], h, cfg, plan, ctx, positions,
+        states=state.layers, chunk=chunk,
+    )
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = lm_head_apply(params.get("lm_head"), h, cfg, embed_params=params["embed"])
+    s = tokens.shape[1]
+    return DecodeState(new_layers, state.pos + s), logits[:, 0]
+
+
+def decode_step(
+    params, tokens, state: DecodeState, cfg: ModelConfig, ctx: ParallelContext,
+):
+    """One token per sequence. tokens: (B,) or (B, K). Returns
+    (new_state, logits (B, V) or (B, K, V))."""
+    plan = tf.plan_for(cfg, ctx)
+    tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    h = embed_apply(params["embed"], tok, cfg)
+    h = shard(h, ctx, ctx.batch_axes, None, None)
+    cur = state.pos  # (B,) position index of this token
+    positions = jnp.broadcast_to(cur[None].T, cur.shape + (1,)).astype(jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    h, new_layers, _ = tf.stack_apply(
+        params["layers"], h, cfg, plan, ctx, positions, states=state.layers
+    )
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_head_apply(params.get("lm_head"), h, cfg, embed_params=params["embed"])
+    return DecodeState(new_layers, cur + 1), logits[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Gradient post-processing (kv-replica tying)
+# ---------------------------------------------------------------------------
+
+def postprocess_grads(grads, cfg: ModelConfig, ctx: ParallelContext):
+    """Re-tie kv-replica gradients so padded physical heads stay consistent."""
+    plan = tf.plan_for(cfg, ctx)
+    if cfg.attn_free or plan.repl == 1:
+        return grads
+    layers = dict(grads["layers"])
+    if "attn" in layers:
+        layers["attn"] = tie_kv_grads(layers["attn"], plan)
+    out = dict(grads)
+    out["layers"] = layers
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs for serving state and batches (dry-run + launchers)
+# ---------------------------------------------------------------------------
+
+def _batch_axis_or_none(cfg_batch: int, ctx: ParallelContext):
+    """Shard batch over the data axes only when it divides evenly."""
+    if ctx.mesh is None:
+        return None
+    dp = 1
+    for a in ctx.batch_axes:
+        dp *= ctx.mesh.shape[a]
+    if cfg_batch % dp != 0:
+        return None
+    axes = ctx.batch_axes
+    return axes[0] if len(axes) == 1 else axes
+
+
+def decode_state_specs(cfg: ModelConfig, ctx: ParallelContext, batch: int):
+    """PartitionSpec tree mirroring make_decode_state's structure."""
+    from jax.sharding import PartitionSpec as P
+
+    plan = tf.plan_for(cfg, ctx)
+    bs = _batch_axis_or_none(batch, ctx)
+    m = ctx.model_axis if ctx.mesh is not None else None
+    tp = max(ctx.tp, 1)
+    layer: dict = {}
+    if cfg.family == "ssm":
+        h = cfg.d_model // (cfg.resolved_head_dim or 64)
+        layer["s"] = P(None, bs, m if h % tp == 0 else None, None, None)
+        layer["tshift"] = P(None, bs, None)
+        layer["cshift"] = P(None, bs, None)
+    elif cfg.kv_cache_layout == "dot":
+        layer["k"] = P(None, bs, m, None, None)
+        layer["v"] = P(None, bs, m, None, None)
+        layer["pos"] = P(None, bs, None)
+    else:
+        layer["k"] = P(None, bs, None, m, None)
+        layer["v"] = P(None, bs, None, m, None)
+        layer["pos"] = P(None, bs, None)
+        if cfg.family == "hybrid":
+            hm = (cfg.d_model * cfg.ssm_expand) // 64
+            layer["s"] = P(None, bs, m if hm % tp == 0 else None, None, None)
+    return DecodeState(layers=layer, pos=P(bs))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ParallelContext):
+    """PartitionSpecs matching input_specs(cfg, shape)."""
+    from jax.sharding import PartitionSpec as P
+
+    bs = _batch_axis_or_none(shape.global_batch, ctx)
+    if shape.kind in ("train", "prefill"):
+        tok = P(bs, None, None) if cfg.num_codebooks else P(bs, None)
+        out = {"tokens": tok}
+        if shape.kind == "train":
+            out["labels"] = tok
+        if cfg.media_tokens:
+            out["media"] = P(bs, None, None)
+        return out
+    tok = P(bs, None) if cfg.num_codebooks else P(bs)
+    return {"tokens": tok}
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs for the dry-run
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        toks = (b, s, cfg.num_codebooks) if cfg.num_codebooks else (b, s)
+        spec = {
+            "tokens": jax.ShapeDtypeStruct(toks, i32),
+            "labels": jax.ShapeDtypeStruct(toks, i32),
+        }
+        if cfg.media_tokens:
+            spec["media"] = jax.ShapeDtypeStruct(
+                (b, cfg.media_tokens, cfg.d_model), bf16
+            )
+        return spec
+    if shape.kind == "prefill":
+        toks = (b, s, cfg.num_codebooks) if cfg.num_codebooks else (b, s)
+        spec = {"tokens": jax.ShapeDtypeStruct(toks, i32)}
+        if cfg.media_tokens:
+            spec["media"] = jax.ShapeDtypeStruct(
+                (b, cfg.media_tokens, cfg.d_model), bf16
+            )
+        return spec
+    # decode: one new token per sequence, cache of length s
+    toks = (b, cfg.num_codebooks) if cfg.num_codebooks else (b,)
+    return {"tokens": jax.ShapeDtypeStruct(toks, i32)}

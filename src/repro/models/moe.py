@@ -1,0 +1,277 @@
+"""Mixture-of-Experts block.
+
+Two implementations with identical semantics (top-k routing, capacity-based
+token dropping, gate-weighted combine):
+
+* :func:`moe_apply` — sort/gather capacity dispatch expressed as plain jnp;
+  correct on one device and under GSPMD with either EP (experts over the
+  model axis) or expert-TP (d_ff over the model axis) weight sharding. This
+  is the baseline path.
+* :func:`moe_apply_ep_shardmap` — explicit two-hop all-to-all dispatch over
+  the model axis (the ORCA request-routing pattern: tokens are "requests",
+  expert shards are "accelerators", the capacity buffer is the ring buffer).
+  Used by the optimized EP path; validated against the baseline in tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, dense_init
+from repro.parallel.sharding import ParallelContext, shard
+
+F32 = jnp.float32
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / (d ** 0.5)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), F32) * std).astype(dt),
+        "w_in": (jax.random.normal(ks[2], (e, d, f), F32) * std).astype(dt),
+        "w_out": (jax.random.normal(ks[3], (e, f, d), F32) / (f ** 0.5)).astype(dt),
+    }
+
+
+def _route_raw(params, x_flat, cfg: ModelConfig):
+    """Returns (gates (T,k), ids (T,k), me (E,), ce (E,)) — me/ce are the
+    Switch load-balance statistics, combined into the aux loss by callers
+    (SPMD callers pmean them globally first)."""
+    logits = (x_flat.astype(F32) @ params["router"]).astype(F32)  # (T, E)
+    k = cfg.num_experts_per_tok
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gate_all, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    me = jnp.mean(gate_all, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, cfg.num_experts, dtype=F32), axis=1), axis=0
+    ) / k
+    return gates, idx, me, ce
+
+
+def _route(params, x_flat, cfg: ModelConfig):
+    gates, idx, me, ce = _route_raw(params, x_flat, cfg)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _capacity(tokens: int, cfg: ModelConfig, experts: int) -> int:
+    c = math.ceil(tokens * cfg.num_experts_per_tok / experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _dispatch_positions(flat_e, num_experts):
+    """Slot of each assignment within its expert (stable order)."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(num_experts), side="left")
+    pos_sorted = jnp.arange(n) - first[sorted_e]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    return pos
+
+
+def _expert_ffn(w_gate, w_in, w_out, buf, act: str):
+    """buf: (E, C, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate, preferred_element_type=F32)
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in, preferred_element_type=F32)
+    y = (act_fn(act)(g) * h).astype(buf.dtype)
+    return jnp.einsum("ecf,efd->ecd", y, w_out, preferred_element_type=F32).astype(buf.dtype)
+
+
+def moe_apply(params, x, cfg: ModelConfig, ctx: ParallelContext, *, no_drop: bool = False):
+    """x: (..., D) -> (..., D), plus aux loss. Baseline (GSPMD) path.
+
+    ``no_drop`` (decode / small batches): capacity = T, so no token is ever
+    dropped — serving quality must not depend on router balance."""
+    shape = x.shape
+    d = shape[-1]
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    gates, idx, aux = _route(params, x_flat, cfg)
+    cap = t if no_drop else _capacity(t, cfg, e)
+
+    flat_e = idx.reshape(-1)  # (T*k,)
+    pos = _dispatch_positions(flat_e, e)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow -> dropped
+    src_token = jnp.repeat(jnp.arange(t), k)
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(x_flat[src_token], mode="drop")
+    buf = buf[: e * cap].reshape(e, cap, d)
+    if ctx.use_ep:
+        buf = shard(buf, ctx, ctx.model_axis, None, None)
+    out_buf = _expert_ffn(
+        params["w_gate"], params["w_in"], params["w_out"], buf, cfg.act
+    )
+    if ctx.use_ep:
+        out_buf = shard(out_buf, ctx, ctx.model_axis, None, None)
+
+    flat_out = out_buf.reshape(e * cap, d)
+    picked = jnp.where(
+        keep[:, None], flat_out[jnp.clip(dest, 0, e * cap - 1)], 0.0
+    )  # (T*k, D)
+    weighted = picked.astype(F32) * gates.reshape(-1)[:, None]
+    y = jnp.zeros((t, d), F32).at[src_token].add(weighted)
+    return y.astype(x.dtype).reshape(shape), aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit TP dispatch (shard_map, local capacity buffers) — optimized path
+# for expert-TP archs (grok-1: 8 experts on a 16-way axis).
+#
+# The GSPMD gather path scatters from token-sharded activations into a
+# (partially) replicated capacity buffer, which materializes as per-layer
+# multi-GB all-reduces (observed: 9.5 TB/device/step on grok train_4k).
+# Here every (data, model) rank dispatches its OWN tokens into its OWN
+# buffer (zero collectives), runs the d_ff-sharded expert FFN, and pays
+# exactly one psum over the model axis — the same all-reduce a dense TP MLP
+# pays.
+# ---------------------------------------------------------------------------
+
+def moe_apply_tp_shardmap(params, x, cfg: ModelConfig, ctx: ParallelContext):
+    mesh = ctx.mesh
+    assert mesh is not None and not ctx.use_ep
+    m = ctx.model_axis
+    batch = ctx.batch_axes
+    bspec = batch[0] if len(batch) == 1 else batch
+    e = cfg.num_experts
+
+    def inner(router, w_gate, w_in, w_out, xb):
+        b_loc, s, d = xb.shape
+        t = b_loc * s
+        xf = xb.reshape(t, d)
+        gates, idx, me, ce = _route_raw({"router": router}, xf, cfg)
+        axes = (tuple(batch) if isinstance(bspec, tuple) else (bspec,))
+        aux = cfg.num_experts * jnp.sum(
+            jax.lax.pmean(me, axes) * jax.lax.pmean(ce, axes)
+        )
+        cap = _capacity(t, cfg, e)
+        flat_e = idx.reshape(-1)
+        pos = _dispatch_positions(flat_e, e)
+        keep = pos < cap
+        dest = jnp.where(keep, flat_e * cap + pos, e * cap)
+        src = jnp.repeat(jnp.arange(t), cfg.num_experts_per_tok)
+        buf = jnp.zeros((e * cap + 1, d), xb.dtype)
+        buf = buf.at[dest].set(xf[src], mode="drop")[: e * cap].reshape(e, cap, d)
+        out = _expert_ffn(w_gate, w_in, w_out, buf, cfg.act).reshape(e * cap, d)
+        picked = jnp.where(keep[:, None], out[jnp.clip(dest, 0, e * cap - 1)], 0.0)
+        y = jnp.zeros((t, d), F32).at[src].add(
+            picked.astype(F32) * gates.reshape(-1)[:, None]
+        )
+        y = jax.lax.psum(y, m)  # combine d_ff partial sums (TP all-reduce)
+        return y.astype(xb.dtype).reshape(b_loc, s, d), aux
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(
+            P(),
+            P(None, None, m), P(None, None, m), P(None, m, None),
+            P(bspec, None, None),
+        ),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_in"], params["w_out"], x)
+
+
+# ---------------------------------------------------------------------------
+# Explicit EP dispatch (shard_map all-to-all) — the optimized path
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep_shardmap(params, x, cfg: ModelConfig, ctx: ParallelContext):
+    """x: (B, S, D) with batch sharded over ctx.batch_axes and replicated over
+    the model axis; expert weights sharded (model, ...). Two all-to-alls move
+    only capacity buffers (tokens-as-requests), never full activations."""
+    mesh = ctx.mesh
+    assert mesh is not None and ctx.use_ep
+    tp = ctx.tp
+    m = ctx.model_axis
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    e_loc = e // tp
+    d = x.shape[-1]
+
+    batch = ctx.batch_axes
+    bspec = batch[0] if len(batch) == 1 else batch
+
+    def inner(router, w_gate, w_in, w_out, xb):
+        # xb: (B_loc, S, D) identical on all model ranks
+        b_loc, s, _ = xb.shape
+        t_loc = b_loc * s
+        t_m = t_loc // tp
+        r = jax.lax.axis_index(m)
+        xm = jax.lax.dynamic_slice_in_dim(xb.reshape(t_loc, d), r * t_m, t_m, 0)
+
+        gates, idx, me, ce = _route_raw({"router": router}, xm, cfg)
+        # exact global aux loss: statistics averaged over every token shard
+        axes = (m,) + (tuple(batch) if isinstance(bspec, tuple) else (bspec,))
+        me = jax.lax.pmean(me, axes)
+        ce = jax.lax.pmean(ce, axes)
+        aux = cfg.num_experts * jnp.sum(me * ce)
+        flat_e = idx.reshape(-1)
+        dest_rank = flat_e // e_loc
+        cap_s = _capacity(t_m, cfg, tp)  # per-destination-rank send capacity
+        pos = _dispatch_positions(dest_rank, tp)
+        keep = pos < cap_s
+        dest = jnp.where(keep, dest_rank * cap_s + pos, tp * cap_s)
+
+        send = jnp.zeros((tp * cap_s + 1, d), xb.dtype)
+        send = send.at[dest].set(xm[jnp.repeat(jnp.arange(t_m), k)], mode="drop")
+        send = send[: tp * cap_s]
+        meta = jnp.full((tp * cap_s + 1,), -1, jnp.int32)
+        meta = meta.at[dest].set((flat_e % e_loc).astype(jnp.int32), mode="drop")
+        meta = meta[: tp * cap_s]
+
+        recv = jax.lax.all_to_all(
+            send.reshape(tp, cap_s, d), m, split_axis=0, concat_axis=0, tiled=False
+        ).reshape(tp * cap_s, d)
+        rmeta = jax.lax.all_to_all(
+            meta.reshape(tp, cap_s), m, split_axis=0, concat_axis=0, tiled=False
+        ).reshape(tp * cap_s)
+
+        # local second-level dispatch to e_loc experts
+        cap2 = _capacity(tp * cap_s, cfg.replace(num_experts_per_tok=1), e_loc)
+        lpos = _dispatch_positions(jnp.where(rmeta >= 0, rmeta, e_loc), e_loc)
+        lkeep = (lpos < cap2) & (rmeta >= 0)
+        ldest = jnp.where(lkeep, rmeta * cap2 + lpos, e_loc * cap2)
+        buf = jnp.zeros((e_loc * cap2 + 1, d), xb.dtype)
+        buf = buf.at[ldest].set(recv, mode="drop")
+        buf = buf[: e_loc * cap2].reshape(e_loc, cap2, d)
+
+        out = _expert_ffn(w_gate, w_in, w_out, buf, cfg.act).reshape(-1, d)
+        back = jnp.where(
+            lkeep[:, None], out[jnp.clip(ldest, 0, e_loc * cap2 - 1)], 0.0
+        )
+        ret = jax.lax.all_to_all(
+            back.reshape(tp, cap_s, d), m, split_axis=0, concat_axis=0, tiled=False
+        ).reshape(tp * cap_s, d)
+
+        picked = jnp.where(
+            keep[:, None], ret[jnp.clip(dest, 0, tp * cap_s - 1)], 0.0
+        ).astype(F32) * gates.reshape(-1)[:, None]
+        ym = jnp.zeros((t_m, d), F32).at[jnp.repeat(jnp.arange(t_m), k)].add(picked)
+        # re-replicate over model axis
+        y = jax.lax.all_gather(ym.astype(xb.dtype), m, axis=0, tiled=True)
+        return y.reshape(b_loc, s, d), aux
+
+    return jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            P(),  # router replicated
+            P(m, None, None), P(m, None, None), P(m, None, None),
+            P(bspec, None, None),
+        ),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_in"], params["w_out"], x)

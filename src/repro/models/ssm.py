@@ -1,0 +1,262 @@
+"""State-space / linear-attention sequence mixers.
+
+One chunked **gated linear attention** (GLA) engine powers both assigned
+sub-quadratic archs:
+
+* rwkv6-1.6b (Finch): per-channel data-dependent decay, bonus ``u`` on the
+  current token (exclusive recurrence ``y_t = r_t S_{t-1} + (r·(u⊙k))v``).
+* hymba-1.5b mamba branch (mamba2-style): scalar per-head decay, inclusive
+  recurrence ``y_t = C_t·h_t``.
+
+Numerics: within a chunk the score exponents ``L_t - L_j (t>=j)`` are
+non-positive and are exponentiated *directly* (exact, no overflow); across
+chunks the factorization happens at the chunk boundary, where again both
+factors have non-positive exponents. This is the sub-chunk trick from fla's
+chunked kernels, with chunk == sub-chunk.
+
+Recurrent semantics (per head, state S: (dk, dv)):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = q_t^T S_{t-1} + (q_t · (u ⊙ k_t)) v_t      (exclusive, rwkv6)
+    y_t = q_t^T S_t                                   (inclusive, mamba/GLA)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm_init
+
+F32 = jnp.float32
+
+
+def chunked_gla(q, k, v, logw, u=None, *, chunk: int = 32, state=None):
+    """q,k,logw: (B,S,H,dk); v: (B,S,H,dv); u: (H,dk) or None.
+
+    Returns (y: (B,S,H,dv), final_state: (B,H,dk,dv)).
+    ``u is None`` selects the inclusive (GLA/mamba) recurrence.
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    T = min(chunk, S)
+    pad = (-S) % T
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        logw = jnp.pad(logw, zq)  # pad logw=0 (w=1): harmless, tokens unused
+    n = q.shape[1] // T
+
+    qc = q.reshape(B, n, T, H, dk).astype(F32)
+    kc = k.reshape(B, n, T, H, dk).astype(F32)
+    vc = v.reshape(B, n, T, H, dv).astype(F32)
+    wc = logw.reshape(B, n, T, H, dk).astype(F32)
+
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), F32)
+
+    inclusive = u is None
+    tri = jnp.tril(jnp.ones((T, T), bool), k=0 if inclusive else -1)
+
+    def step(S0, xs):
+        qb, kb, vb, wb = xs  # (B,T,H,*)
+        L = jnp.cumsum(wb, axis=1)  # inclusive cumulative log decay
+        A = L if inclusive else (L - wb)  # exponent base for queries
+        # ---- inter-chunk (from carried state) ----
+        qt = qb * jnp.exp(A)  # exponents <= 0
+        y = jnp.einsum("bthk,bhkv->bthv", qt, S0)
+        # ---- intra-chunk: direct exponent tensor (exact) ----
+        # E[t,j,d] = exp(A[t,d] - L[j,d]) for t>j (or >=) else 0
+        expo = A[:, :, None] - L[:, None, :]  # (B,T,T,H,dk)
+        E = jnp.where(tri[None, :, :, None, None], jnp.exp(expo), 0.0)
+        scores = jnp.einsum("bthk,bjhk,btjhk->bthj", qb, kb, E)
+        y = y + jnp.einsum("bthj,bjhv->bthv", scores, vb)
+        if not inclusive:
+            bonus = jnp.einsum("bthk,hk,bthk->bth", qb, u.astype(F32), kb)
+            y = y + bonus[..., None] * vb
+        # ---- state update (factor at chunk end: exponents <= 0) ----
+        decay_all = jnp.exp(L[:, -1])  # (B,H,dk)
+        kt = kb * jnp.exp(L[:, -1:, :, :] - L)  # (B,T,H,dk)
+        S1 = S0 * decay_all[..., None] + jnp.einsum("bthk,bthv->bhkv", kt, vb)
+        return S1, y
+
+    xs = (
+        jnp.moveaxis(qc, 1, 0),
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(wc, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * T, H, dv)[:, :S]
+    return y.astype(v.dtype), final
+
+
+def gla_step(q, k, v, logw, u, state):
+    """Single-token decode. q,k,logw: (B,H,dk); v: (B,H,dv);
+    state: (B,H,dk,dv). Returns (y: (B,H,dv), new_state)."""
+    qf, kf, vf, wf = (x.astype(F32) for x in (q, k, v, logw))
+    if u is None:
+        new = state * jnp.exp(wf)[..., None] + kf[..., None] * vf[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", qf, new)
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+        y = y + jnp.einsum("bhk,hk,bhk->bh", qf, u.astype(F32), kf)[..., None] * vf
+        new = state * jnp.exp(wf)[..., None] + kf[..., None] * vf[..., None, :]
+    return y.astype(v.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) blocks
+# ---------------------------------------------------------------------------
+
+def _shift(x, prev=None):
+    """Token shift: x[t] -> x[t-1]; position 0 gets ``prev`` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv_tmix_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim or 64
+    h = d // hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], d, h * hd, dt).reshape(d, h, hd),
+        "wk": dense_init(ks[1], d, h * hd, dt).reshape(d, h, hd),
+        "wv": dense_init(ks[2], d, h * hd, dt).reshape(d, h, hd),
+        "wg": dense_init(ks[3], d, h * hd, dt).reshape(d, h, hd),
+        # data-dependent decay: w0 + tanh(x @ A) @ Bm (the Finch signature)
+        "w0": jnp.full((h, hd), -2.0, dt),
+        "wlA": dense_init(ks[4], d, lora, dt, scale=0.1),
+        "wlB": dense_init(ks[5], lora, h * hd, dt, scale=0.1),
+        "u": (jax.random.normal(ks[6], (h, hd), F32) * 0.1).astype(dt),
+        "w_out": dense_init(ks[7], h * hd, d, dt).reshape(h, hd, d),
+        "gn": {"scale": jnp.ones((h, hd), dt)},
+    }
+
+
+def rwkv_tmix_apply(p, x, cfg: ModelConfig, *, prev=None, state=None, chunk=32):
+    """x: (B,S,D). Returns (y, (last_x, new_state))."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim or 64
+    h = D // hd
+    xx = _shift(x, prev)
+
+    def lerp(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    xr, xk, xv, xg, xw = (lerp(p[f"mu_{c}"]) for c in "rkvgw")
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"], preferred_element_type=F32)
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["wg"], preferred_element_type=F32)
+    lo = jnp.tanh(xw.astype(F32) @ p["wlA"].astype(F32)) @ p["wlB"].astype(F32)
+    ww = p["w0"].astype(F32)[None, None] + lo.reshape(B, S, h, hd)
+    logw = -jnp.exp(jnp.clip(ww, -20.0, 3.0))  # decay in (0,1), bounded
+
+    y, new_state = chunked_gla(r, k, v, logw, p["u"], chunk=chunk, state=state)
+    # per-head group norm + silu(g) gating
+    yf = y.astype(F32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 1e-5) * p["gn"]["scale"].astype(F32)
+    out = (jax.nn.silu(g) * yn).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_out"], preferred_element_type=F32)
+    return out.astype(x.dtype), (x[:, -1], new_state)
+
+
+def rwkv_cmix_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": dense_init(k1, d, f, dt),
+        "wv": dense_init(k2, f, d, dt),
+        "wr": dense_init(k3, d, d, dt),
+    }
+
+
+def rwkv_cmix_apply(p, x, *, prev=None):
+    xx = _shift(x, prev)
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    r = jax.nn.sigmoid((xr @ p["wr"]).astype(F32)).astype(x.dtype)
+    return r * (k.astype(x.dtype) @ p["wv"]), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2-style branch (hymba)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    hd = 64 if din % 64 == 0 else din
+    return d, din, hd, din // hd
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, din, hd, h = _mamba_dims(cfg)
+    ns = cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, dt),  # x and gate z
+        "bc_proj": dense_init(ks[1], d, 2 * ns, dt),  # B_t, C_t (shared heads)
+        "dt_proj": dense_init(ks[2], d, h, dt, scale=0.1),
+        "dt_bias": jnp.zeros((h,), dt),
+        "a_log": jnp.zeros((h,), F32).astype(dt),  # decay rate per head
+        "d_skip": jnp.ones((h,), dt),
+        "out_proj": dense_init(ks[3], din, d, dt),
+        "norm": rmsnorm_init(din, dt),
+    }
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, state=None, chunk=32):
+    """x: (B,S,D) -> (y, new_state). Inclusive GLA with scalar head decay."""
+    B, S, D = x.shape
+    _, din, hd, h = _mamba_dims(cfg)
+    ns = cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,S,din)
+    bc = x @ p["bc_proj"]
+    b_t, c_t = jnp.split(bc, 2, axis=-1)  # (B,S,ns)
+    dt_ = jax.nn.softplus(
+        (x @ p["dt_proj"]).astype(F32) + p["dt_bias"].astype(F32)
+    )  # (B,S,h)
+    logw = -dt_ * jnp.exp(p["a_log"].astype(F32))[None, None]  # (B,S,h) <= 0
+
+    v = (xi.astype(F32) * dt_.repeat(hd, axis=-1)).reshape(B, S, h, hd)
+    k = jnp.broadcast_to(b_t[:, :, None, :], (B, S, h, ns))
+    q = jnp.broadcast_to(c_t[:, :, None, :], (B, S, h, ns))
+    lw = jnp.broadcast_to(logw[..., None], (B, S, h, ns))
+
+    y, new_state = chunked_gla(
+        q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype), lw,
+        None, chunk=chunk, state=state,
+    )
+    y = y.astype(F32) + xi.reshape(B, S, h, hd).astype(F32) * p["d_skip"].astype(F32)[None, None, :, None]
+    y = y.reshape(B, S, din)
+    # rmsnorm then gate
+    from repro.models.layers import rmsnorm
+
+    y = rmsnorm(p["norm"], y.astype(x.dtype), 1e-6)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    return (y @ p["out_proj"]).astype(x.dtype), new_state
+
+
+def mamba_step(p, x, cfg: ModelConfig, state):
+    """x: (B,D) single token decode."""
+    y, new_state = mamba_apply(p, x[:, None], cfg, state=state, chunk=1)
+    return y[:, 0], new_state

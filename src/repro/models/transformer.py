@@ -1,0 +1,393 @@
+"""Decoder block definitions + the scanned layer stack for all families."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import HeadPlan, ParallelContext, head_plan, shard
+
+F32 = jnp.float32
+
+
+def plan_for(cfg: ModelConfig, ctx: ParallelContext) -> HeadPlan:
+    return head_plan(cfg.num_heads, cfg.num_kv_heads, max(ctx.tp, 1))
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, plan: HeadPlan):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":  # rwkv6
+        return {
+            "ln1": rmsnorm_init(d, dt),
+            "tmix": ssm_mod.rwkv_tmix_init(ks[0], cfg),
+            "ln2": rmsnorm_init(d, dt),
+            "cmix": ssm_mod.rwkv_cmix_init(ks[1], cfg),
+        }
+    p = {
+        "ln1": rmsnorm_init(d, dt),
+        "attn": attn_mod.attn_init(ks[0], cfg, plan),
+        "ln2": rmsnorm_init(d, dt),
+    }
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.mamba_init(ks[1], cfg)
+        p["mlp"] = mlp_init(ks[2], cfg)
+    elif cfg.is_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Decode-time per-layer state
+# ---------------------------------------------------------------------------
+
+def layer_state_zeros(cfg: ModelConfig, plan: HeadPlan, batch: int, cache_len: int):
+    """Per-layer decode state. Attention caches are ring buffers over
+    ``cache_len`` slots (= sliding window when set); ``pos`` holds the
+    absolute position stored in each slot (-1 = empty)."""
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    st: dict[str, Any] = {}
+    if cfg.family == "ssm":
+        h = cfg.d_model // (cfg.resolved_head_dim or 64)
+        st["s"] = jnp.zeros((batch, h, hd or 64, hd or 64), F32)
+        st["tshift"] = jnp.zeros((batch, cfg.d_model), dt)
+        st["cshift"] = jnp.zeros((batch, cfg.d_model), dt)
+        return st
+    sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    if cfg.kv_cache_layout == "dot":
+        # dot-native layouts: decode attention consumes the cache without
+        # layout copies (K contracted over hd, V over Sc)
+        st["k"] = jnp.zeros((batch, plan.kv_phys, hd, sc), dt)
+        st["v"] = jnp.zeros((batch, plan.kv_phys, sc, hd), dt)
+    else:
+        st["k"] = jnp.zeros((batch, sc, plan.kv_phys, hd), dt)
+        st["v"] = jnp.zeros((batch, sc, plan.kv_phys, hd), dt)
+    st["pos"] = jnp.full((batch, sc), -1, jnp.int32)
+    if cfg.family == "hybrid":
+        din = cfg.d_model * cfg.ssm_expand
+        st["s"] = jnp.zeros((batch, din // 64, cfg.ssm_state, 64), F32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Attention decode against ring cache with per-slot positions
+# ---------------------------------------------------------------------------
+
+def _ring_decode_attn(params, x, cfg, plan, state, cur_pos):
+    """x: (B,1,D); state k/v: (B,Sc,kvp,hd); cur_pos: (B,) position of the
+    new token. Returns (y, new_state)."""
+    pos = cur_pos[:, None]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    q, k, v = attn_mod.qkv(params, x, cfg, plan, pos)
+    sc = state["k"].shape[1]
+    slot = (cur_pos % sc).astype(jnp.int32)
+    k_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        state["k"], k, slot
+    )
+    v_cache = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))(
+        state["v"], v, slot
+    )
+    pos = jax.vmap(lambda c, i, p: c.at[i].set(p))(state["pos"], slot, cur_pos)
+
+    B, _, H, hd = q.shape
+    kvp = k_cache.shape[2]
+    g = H // kvp
+    scale = hd ** -0.5
+    if cfg.decode_mxu_einsum:
+        # bf16 x bf16 MXU dots with f32 accumulation: the cache is consumed
+        # in its storage dtype, so XLA never materializes (or loop-carries)
+        # an f32 copy of the whole KV cache (§Perf decode hillclimb)
+        qg = (q[:, 0].reshape(B, kvp, g, hd) * scale).astype(k_cache.dtype)
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                       preferred_element_type=F32)
+    else:
+        qg = q[:, 0].reshape(B, kvp, g, hd).astype(F32) * scale
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(F32))
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    if cfg.sliding_window:
+        valid &= pos > (cur_pos[:, None] - cfg.sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, attn_mod.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if cfg.decode_mxu_einsum:
+        out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=F32)
+    else:
+        out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(F32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = attn_mod.out_proj(params, out, plan)
+    return y, {"k": k_cache, "v": v_cache, "pos": pos}
+
+
+def _ring_decode_attn_ro(params, x, cfg, plan, state, cur_pos):
+    """Read-only-cache decode: attend over the (stale-masked) cache plus the
+    current token's freshly projected k/v, never writing the cache inside
+    the layer scan. Returns (y, {"k_new", "v_new"}). The caller scatters the
+    new k/v into every layer's cache with one small update (§Perf)."""
+    pos_in = cur_pos[:, None]
+    if cfg.mrope:
+        pos_in = jnp.broadcast_to(pos_in[None], (3,) + pos_in.shape)
+    q, k, v = attn_mod.qkv(params, x, cfg, plan, pos_in)
+    k_new, v_new = k[:, 0], v[:, 0]  # (B, kvp, hd)
+    dot_layout = cfg.kv_cache_layout == "dot"
+    sc = state["pos"].shape[1]
+    pos = state["pos"]  # (B, Sc) — stale: does NOT include the current token
+
+    B, _, H, hd = q.shape
+    kvp = state["k"].shape[1] if dot_layout else state["k"].shape[2]
+    g = H // kvp
+    scale = hd ** -0.5
+    dt = state["k"].dtype
+    qg = (q[:, 0].reshape(B, kvp, g, hd) * scale).astype(dt)
+    if dot_layout:
+        s_cache = jnp.einsum("bkgh,bkhs->bkgs", qg, state["k"],
+                             preferred_element_type=F32)
+    else:
+        s_cache = jnp.einsum("bkgh,bskh->bkgs", qg, state["k"],
+                             preferred_element_type=F32)
+    valid = (pos >= 0) & (pos <= cur_pos[:, None]) & (pos > cur_pos[:, None] - sc)
+    if cfg.sliding_window:
+        valid &= pos > (cur_pos[:, None] - cfg.sliding_window)
+    s_cache = jnp.where(valid[:, None, None, :], s_cache, attn_mod.NEG_INF)
+    s_cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new.astype(dt),
+                       preferred_element_type=F32)
+    s = jnp.concatenate([s_cache, s_cur[..., None]], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    if dot_layout:
+        out = jnp.einsum("bkgs,bksh->bkgh", p[..., :-1].astype(dt), state["v"],
+                         preferred_element_type=F32)
+    else:
+        out = jnp.einsum("bkgs,bskh->bkgh", p[..., :-1].astype(dt), state["v"],
+                         preferred_element_type=F32)
+    # current token's contribution: p[..., -1] (B,kvp,g) x v_new (B,kvp,hd)
+    out = out + p[..., -1][..., None] * v_new[:, :, None, :].astype(F32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = attn_mod.out_proj(params, out, plan)
+    return y, {"k_new": k_new, "v_new": v_new}
+
+
+def _ring_prefill_write(state, k, v, cfg, start_pos=0):
+    """Write prefill k/v (B,S,kvp,hd) into the ring cache (last Sc survive)."""
+    B, S, kvp, hd = k.shape
+    sc = state["pos"].shape[1]
+    n = min(S, sc)
+    kw, vw = k[:, -n:], v[:, -n:]
+    pos = start_pos + jnp.arange(S - n, S, dtype=jnp.int32)  # (n,)
+    slots = pos % sc
+    if cfg.kv_cache_layout == "dot":
+        k_cache = state["k"].at[:, :, :, slots].set(kw.transpose(0, 2, 3, 1))
+        v_cache = state["v"].at[:, :, slots, :].set(vw.transpose(0, 2, 1, 3))
+    else:
+        k_cache = state["k"].at[:, slots].set(kw)
+        v_cache = state["v"].at[:, slots].set(vw)
+    posb = jnp.broadcast_to(pos, (B, n))
+    pos_cache = state["pos"].at[:, slots].set(posb)
+    return {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def block_apply(
+    params, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
+    positions, state: Optional[dict] = None, *, chunk: int = 512,
+    gla_chunk: int = 32,
+):
+    """One decoder block. Returns (y, new_state, aux_loss).
+
+    mode is inferred: ``state is None`` -> train; seq==1 with state -> decode;
+    else prefill (state initialized and filled).
+    """
+    aux = jnp.zeros((), F32)
+    S = x.shape[1]
+    decode = state is not None and S == 1
+
+    if cfg.family == "ssm":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if state is None:
+            y, _ = ssm_mod.rwkv_tmix_apply(params["tmix"], h, cfg, chunk=gla_chunk)
+            x = x + y
+            h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+            y2, _ = ssm_mod.rwkv_cmix_apply(params["cmix"], h2)
+            return x + y2, None, aux
+        y, (tlast, s_new) = ssm_mod.rwkv_tmix_apply(
+            params["tmix"], h, cfg,
+            prev=state["tshift"] if decode else None,
+            state=state["s"], chunk=gla_chunk,
+        )
+        x = x + y
+        h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y2, clast = ssm_mod.rwkv_cmix_apply(
+            params["cmix"], h2, prev=state["cshift"] if decode else None
+        )
+        return x + y2, {"s": s_new, "tshift": tlast, "cshift": clast}, aux
+
+    # --- attention families ---
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    new_state = dict(state) if state is not None else None
+
+    if decode:
+        if positions.ndim == 3:  # mrope (3, B, 1)
+            cur_pos = positions[0, :, 0]
+        elif positions.ndim == 2:  # (B, 1)
+            cur_pos = positions[:, 0]
+        else:
+            cur_pos = positions
+        if cfg.decode_appended_kv:
+            att, kv_new = _ring_decode_attn_ro(
+                params["attn"], h, cfg, plan, state, cur_pos
+            )
+            new_state = dict(kv_new)  # caller merges into the caches
+        else:
+            att, att_state = _ring_decode_attn(params["attn"], h, cfg, plan, state, cur_pos)
+            if new_state is not None:
+                new_state.update(att_state)
+    else:
+        q, k, v = attn_mod.qkv(params["attn"], h, cfg, plan, positions)
+        if cfg.use_pallas_flash and state is not None \
+                and S % min(cfg.flash_block, S) == 0:
+            # TPU production path (prefill, forward-only: the kernel has no
+            # VJP — training keeps the differentiable masked form)
+            from repro.kernels import ops as kops
+
+            blk = min(cfg.flash_block, S)
+            out = kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), window=cfg.sliding_window,
+                block_q=blk, block_k=blk,
+            ).transpose(0, 2, 1, 3).astype(q.dtype)
+        elif state is None and S <= attn_mod.TRAIN_FULL_ATTN_MAX:
+            # training: masked-full form (differentiation-friendly; see
+            # attention.py) — the 2x causal-FLOP waste is a recorded
+            # baseline cost that the flash kernel removes on TPU
+            out = attn_mod.full_attention(q, k, v, window=cfg.sliding_window)
+        else:
+            out = attn_mod.chunked_attention(
+                q, k, v, window=cfg.sliding_window, chunk=chunk
+            )
+        att = attn_mod.out_proj(params["attn"], out, plan)
+        if new_state is not None:
+            new_state.update(_ring_prefill_write(state, k, v, cfg))
+
+    if cfg.family == "hybrid":
+        if decode:
+            sy, s_new = ssm_mod.mamba_step(params["ssm"], h[:, 0], cfg, state["s"])
+            sy = sy[:, None]
+        else:
+            sy, s_new = ssm_mod.mamba_apply(
+                params["ssm"], h, cfg,
+                state=state["s"] if state is not None else None,
+                chunk=gla_chunk,
+            )
+        att = (att + sy) * 0.5
+        if new_state is not None:
+            new_state["s"] = s_new
+
+    x = x + att
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        if ctx.ep_shardmap and ctx.mesh is not None and not decode:
+            if ctx.use_ep:
+                y2, aux = moe_mod.moe_apply_ep_shardmap(params["moe"], h2, cfg, ctx)
+            else:
+                y2, aux = moe_mod.moe_apply_tp_shardmap(params["moe"], h2, cfg, ctx)
+        else:
+            y2, aux = moe_mod.moe_apply(params["moe"], h2, cfg, ctx, no_drop=decode)
+    else:
+        y2 = mlp_apply(params["mlp"], h2, cfg.act)
+    return x + y2, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked layers (scan)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig, plan: HeadPlan):
+    keys = jax.random.split(key, cfg.num_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, plan))(keys)
+
+
+def stack_apply(
+    layers, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
+    positions, states=None, *, chunk: int = 512,
+):
+    """Scan the block over stacked layer params (and states when decoding).
+
+    Returns (y, new_states, total_aux)."""
+
+    def body(carry, layer_and_state):
+        h, aux = carry
+        if states is None:
+            lp, st = layer_and_state, None
+        else:
+            lp, st = layer_and_state
+        y, new_st, a = block_apply(
+            lp, h, cfg, plan, ctx, positions, st, chunk=chunk
+        )
+        if ctx.sp and ctx.mesh is not None and states is None:
+            # Megatron sequence sharding: residual/norm regions live sharded
+            # over the model axis too (cuts activation memory + enables
+            # all-gather/reduce-scatter in place of all-reduce pairs)
+            y = shard(y, ctx, ctx.batch_axes, ctx.model_axis, None)
+        return (y, aux + a), new_st
+
+    fn = body
+    if cfg.remat and states is None:
+        # default prevent_cse=True keeps the optimization barriers around
+        # saved residuals: without them XLA hoists the rmsnorm's bf16->f32
+        # convert into the saved stack, doubling residual memory (observed
+        # 60 GiB f32 vs 30 GiB bf16 on qwen2.5-14b train_4k)
+        fn = jax.checkpoint(body)
+
+    xs = layers if states is None else (layers, states)
+    decode = states is not None and x.shape[1] == 1
+    unroll = cfg.decode_unroll if decode else 1
+    (y, aux), new_states = jax.lax.scan(
+        fn, (x, jnp.zeros((), F32)), xs, unroll=max(1, unroll)
+    )
+    if decode and cfg.decode_appended_kv and cfg.family != "ssm":
+        # read-only-cache mode: scan ys carried only the per-layer new k/v
+        # (and small ssm states); merge into the caches with ONE scatter
+        if positions.ndim == 3:
+            cur = positions[0, :, 0]
+        elif positions.ndim == 2:
+            cur = positions[:, 0]
+        else:
+            cur = positions
+        sc = states["pos"].shape[2]
+        b = cur.shape[0]
+        slot = (cur % sc).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        merged = dict(states)
+        if cfg.kv_cache_layout == "dot":
+            merged["k"] = jax.vmap(
+                lambda c, n_, sl: c.at[:, :, :, sl].set(n_),
+                in_axes=(1, 1, 0), out_axes=1,
+            )(states["k"], new_states["k_new"], slot)
+            merged["v"] = jax.vmap(
+                lambda c, n_, sl: c.at[:, :, sl, :].set(n_),
+                in_axes=(1, 1, 0), out_axes=1,
+            )(states["v"], new_states["v_new"], slot)
+        else:
+            merged["k"] = states["k"].at[:, bidx, slot].set(new_states["k_new"])
+            merged["v"] = states["v"].at[:, bidx, slot].set(new_states["v_new"])
+        merged["pos"] = states["pos"].at[:, bidx, slot].set(cur)
+        if "s" in new_states:
+            merged["s"] = new_states["s"]
+        new_states = merged
+    return y, new_states, aux

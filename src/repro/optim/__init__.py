@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, OptState, global_norm, init, state_specs, update, zero1_spec
+from repro.optim.schedule import warmup_cosine

@@ -1,0 +1,101 @@
+"""AdamW with ZeRO-1 sharded optimizer state.
+
+Moments are stored in ``state_dtype`` (f32 default; bf16 halves optimizer
+HBM for grok-scale runs) and their PartitionSpecs additionally shard the
+largest replicated dim over the data axis (ZeRO-1): each data-parallel rank
+owns a slice of (m, v), XLA turns the grad reduction into
+reduce-scatter + all-gather around the update.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import ParallelContext
+
+F32 = jnp.float32
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def update(grads, state: OptState, params, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m1 = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * g * g
+        mh = m1 / (1 - cfg.b1 ** step.astype(F32))
+        vh = v1 / (1 - cfg.b2 ** step.astype(F32))
+        upd_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(F32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(F32) - lr * (upd_ + wd)
+        return new_p.astype(p.dtype), m1.astype(dt), v1.astype(dt)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v, step), {"grad_norm": gnorm}
+
+
+def zero1_spec(pspec: P, shape, ctx: ParallelContext) -> P:
+    """Shard the biggest replicated dim of an optimizer-state leaf over the
+    data axis (ZeRO-1). Already-fsdp'd params keep their spec."""
+    if ctx.mesh is None:
+        return P()
+    axis = ctx.data_axes[-1]
+    if axis in jax.tree_util.tree_leaves(tuple(pspec)) or not shape:
+        return pspec
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    size = ctx.mesh.shape[axis]
+    best, best_dim = -1, -1
+    for d, (s, e) in enumerate(zip(shape, entries)):
+        if e is None and s % size == 0 and s > best:
+            best, best_dim = s, d
+    if best_dim < 0:
+        return pspec
+    entries[best_dim] = axis
+    return P(*entries)
+
+
+def state_specs(param_specs, params_abs, ctx: ParallelContext) -> OptState:
+    mv = jax.tree_util.tree_map(
+        lambda sp, p: zero1_spec(sp, p.shape, ctx), param_specs, params_abs
+    )
+    return OptState(m=mv, v=mv, step=P())

@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (
+    HeadPlan,
+    ParallelContext,
+    batch_spec,
+    head_plan,
+    local_context,
+    param_specs,
+    shard,
+    spec_for_param,
+)

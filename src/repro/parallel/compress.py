@@ -1,0 +1,51 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+At 1000+ node scale the cross-pod (DCN) gradient all-reduce dominates the
+collective term; int8 with per-tensor scale cuts those bytes 4x vs f32
+(2x vs bf16) at negligible quality cost when the quantization error is fed
+back into the next step (error-feedback SGD). The train driver keeps the
+error state alongside the optimizer state; the compressed representative is
+what crosses the slow axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_error(params) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compress(grads, err):
+    """Returns (int8 payloads, scales, new residuals) — what would cross DCN."""
+    def one(g, e):
+        x = g.astype(F32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(F32) * scale
+        return q, scale, x - deq
+
+    flat = jax.tree_util.tree_map(one, grads, err)
+    q = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, r
+
+
+def decompress(q, s):
+    return jax.tree_util.tree_map(lambda qq, ss: qq.astype(F32) * ss, q, s)
+
+
+def roundtrip(grads, err):
+    """compress+decompress in one step (what the optimizer consumes)."""
+    q, s, r = compress(grads, err)
+    return decompress(q, s), r
+
+
+def compressed_bytes(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))  # 1 B/elt

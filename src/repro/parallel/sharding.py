@@ -1,0 +1,236 @@
+"""Sharding rules: head-padding plan, parameter partition specs, contexts.
+
+The production mesh is fixed by the assignment: ``(16, 16)`` with axes
+``("data", "model")`` per pod and ``(2, 16, 16)`` with ``("pod", "data",
+"model")`` across pods. Attention head counts in the assigned pool (40, 25,
+28, 24...) do not all divide 16, so we compute a :class:`HeadPlan` that pads
+query heads *within kv groups* and pads/replicates kv heads such that every
+(H, KV) maps onto the model axis with preserved GQA grouping. Padded heads
+are masked to zero at the attention output, so the function computed equals
+the unpadded model exactly (padding cost is reported by the roofline).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Head plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HeadPlan:
+    """Physical attention layout for a given tensor-parallel degree."""
+
+    h: int  # logical query heads
+    kv: int  # logical kv heads
+    tp: int  # model-axis size
+    hp: int  # padded query heads (divisible by tp)
+    kvp: int  # padded kv heads (divides tp or divisible by tp)
+    repl: int  # kv replication factor for sharding (tp // kvp when kvp < tp)
+    gp: int  # padded q heads per kv group
+
+    @property
+    def kv_phys(self) -> int:
+        """Stored kv heads (after replication) — always divisible by tp."""
+        return self.kvp * self.repl
+
+    @property
+    def group(self) -> int:
+        """Logical q heads per kv head."""
+        return max(1, math.ceil(self.h / max(self.kv, 1)))
+
+    def q_to_kv(self, padded_q_head: int) -> int:
+        """Logical kv head feeding a padded q head index."""
+        return (padded_q_head // self.gp) % max(self.kvp, 1)
+
+
+def head_plan(h: int, kv: int, tp: int) -> HeadPlan:
+    if h == 0:
+        return HeadPlan(0, 0, tp, 0, 0, 1, 0)
+    g = math.ceil(h / kv)
+    if kv % tp == 0:
+        # kv itself shards; q heads pad up to full groups (hp = kv * g >= h)
+        return HeadPlan(h, kv, tp, kv * g, kv, 1, g)
+    if kv < tp:
+        # pad kv up to the smallest divisor of tp that is >= kv (tp itself
+        # always qualifies), then replicate to fill the axis
+        kvp = next(p for p in range(kv, tp + 1) if tp % p == 0)
+        repl = tp // kvp
+        gp = math.ceil(g / repl) * repl
+    else:
+        # kv > tp but not divisible: pad kv to the next multiple of tp
+        kvp = math.ceil(kv / tp) * tp
+        repl = 1
+        gp = g
+    hp = kvp * gp
+    assert hp % tp == 0
+    return HeadPlan(h, kv, tp, hp, kvp, repl, gp)
+
+
+# ---------------------------------------------------------------------------
+# Parallel context
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelContext:
+    """Everything model code needs to know about the mesh (or its absence)."""
+
+    mesh: Optional[Mesh] = None
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None
+    fsdp: bool = False  # shard params over data_axes[-1] as well
+    use_ep: bool = False  # MoE expert parallelism over model axis
+    ep_shardmap: bool = False  # EP via explicit all-to-all (optimized path)
+    sp: bool = False  # Megatron sequence sharding for norm regions
+    pp_stages: int = 1  # pipeline stages over the pod axis
+
+    def _replace(self, **kw) -> "ParallelContext":
+        import dataclasses
+
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        if self.pod_axis and self.pp_stages == 1:
+            return (self.pod_axis,) + self.data_axes
+        return self.data_axes
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return self.data_axes[-1] if self.fsdp else None
+
+    def axis(self, *names: Optional[str]):
+        """Build a PartitionSpec, dropping axes when there is no mesh."""
+        if self.mesh is None:
+            return P()
+        return P(*names)
+
+
+def local_context() -> ParallelContext:
+    """Single-device context for smoke tests and reference runs."""
+    return ParallelContext(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Partition rules (path-pattern based, t5x style)
+# ---------------------------------------------------------------------------
+
+def _match(path: str, *frags: str) -> bool:
+    return all(f in path for f in frags)
+
+
+def spec_for_param(path: str, ndim: int, ctx: ParallelContext) -> P:
+    """PartitionSpec for a parameter identified by its tree path.
+
+    TP follows Megatron: QKV/O on (padded) heads, MLP on d_ff, embedding and
+    LM head on vocab. ``fsdp`` additionally shards the other big dim over the
+    data axis (grok-1). MoE 'ep' shards the expert dim on model; MoE 'tp'
+    shards expert d_ff on model.
+    """
+    if ctx.mesh is None:
+        return P()
+    m, f = ctx.model_axis, ctx.fsdp_axis
+    # --- embeddings / heads ---
+    if _match(path, "embed"):
+        # (V, D) or (K, V, D)
+        return P(*([None] * (ndim - 2)), m, f)
+    if _match(path, "lm_head"):
+        # (D, V) or (K, D, V)
+        return P(*([None] * (ndim - 2)), f, m)
+    # --- MoE ---
+    if _match(path, "moe", "router"):
+        return P(*([None] * ndim))
+    if _match(path, "moe", "w_out"):  # (E, F, D)
+        if ctx.use_ep:
+            return P(m, None, f)
+        return P(None, m, f)
+    if _match(path, "moe"):  # w_in / w_gate: (E, D, F)
+        if ctx.use_ep:
+            return P(m, f, None)
+        return P(None, f, m)
+    # --- attention ---
+    if _match(path, "attn", "wq") or _match(path, "attn", "wk") or _match(path, "attn", "wv"):
+        if ndim == 3:  # (D, heads, head_dim)
+            return P(f, m, None)
+        return P(m, None)  # bias (heads, head_dim) -> flattened (heads*hd,)? kept 2d
+    if _match(path, "attn", "bq") or _match(path, "attn", "bk") or _match(path, "attn", "bv"):
+        return P(m, None)  # (heads, head_dim)
+    if _match(path, "attn", "wo"):  # (heads, head_dim, D)
+        return P(m, None, f)
+    # --- dense MLP ---
+    if _match(path, "mlp", "w_out"):  # (F, D)
+        return P(m, f)
+    if _match(path, "mlp"):  # w_in / w_gate: (D, F)
+        return P(f, m)
+    # --- rwkv time-mix / channel-mix ---
+    if _match(path, "tmix", "w_out"):  # (H, hd, D)
+        return P(m, None, f)
+    if _match(path, "tmix") and ndim == 3:  # (D, H, hd) projections
+        return P(f, m, None)
+    if _match(path, "cmix", "w_out"):
+        return P(m, f)
+    if _match(path, "cmix") and ndim == 2:
+        return P(f, m)
+    # --- mamba branch (hymba): din/64 = 50 heads do not divide the model
+    # axis, so the branch is replicated over `model` (it is ~3% of hymba's
+    # per-layer FLOPs; padding heads to 64 is a recorded hillclimb option)
+    if _match(path, "ssm"):
+        return P(*([None] * ndim))
+    # --- everything else (norms, scalars, small vectors) replicated ---
+    return P(*([None] * ndim))
+
+
+def param_specs(params_tree: Any, ctx: ParallelContext) -> Any:
+    """Map a params pytree (or its ShapeDtypeStruct skeleton) to specs.
+
+    Leaves under ``layers/`` are scan-stacked with a leading num_layers dim:
+    their spec is the per-layer spec with a leading ``None``."""
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if name.startswith("layers/") or "/layers/" in name:
+            base = spec_for_param(name, leaf.ndim - 1, ctx)
+            return P(None, *base) if ctx.mesh is not None else P()
+        return spec_for_param(name, leaf.ndim, ctx)
+
+    return jax.tree_util.tree_map_with_path(visit, params_tree)
+
+
+def shard(x, ctx: ParallelContext, *axes):
+    """with_sharding_constraint that degrades to identity without a mesh."""
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, P(*axes))
+    )
+
+
+def batch_spec(ctx: ParallelContext, *rest) -> P:
+    """Spec with the leading dim sharded over all batch axes."""
+    if ctx.mesh is None:
+        return P()
+    axes = ctx.batch_axes
+    lead = axes[0] if len(axes) == 1 else axes
+    return P(lead, *rest)

@@ -1,0 +1,1 @@
+from repro.serving.kv_cache import PagedKVConfig, PagedKVState, append_token, attend, ensure_capacity, make, pages_in_use, release

@@ -1,0 +1,120 @@
+"""Paged KV cache pool: the serving-layer data-structure walker.
+
+The paper's KVS walks hash buckets to value rows; LM serving walks a page
+table to KV pages. Pages live in one global pool (the "server memory");
+sequences own pages through a table; a functional stack allocator
+provides alloc/release (the slab allocator of §IV-A). Attention over the
+paged cache is the Pallas ``paged_attention`` kernel (scalar-prefetch page
+walk) with ``ref.paged_attention`` as oracle.
+
+Used by the continuous-batching engine when sequences have wildly different
+lengths: memory is bounded by Σ actual tokens, not slots × max_len.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+I32 = jnp.int32
+
+
+class PagedKVConfig(NamedTuple):
+    num_pages: int = 64  # global pool size (per layer)
+    page_size: int = 16
+    max_pages_per_seq: int = 8
+    kv_heads: int = 2
+    head_dim: int = 16
+    layers: int = 2
+
+
+class PagedKVState(NamedTuple):
+    k_pages: jax.Array  # (L, NP, PS, KVH, HD)
+    v_pages: jax.Array
+    page_table: jax.Array  # (B, MaxP) int32, -1 = unmapped
+    lengths: jax.Array  # (B,) tokens stored per sequence
+    free_stack: jax.Array  # (NP,) page ids; [0:free_top) are free
+    free_top: jax.Array  # ()
+
+
+def make(cfg: PagedKVConfig, batch: int, dtype=jnp.bfloat16) -> PagedKVState:
+    return PagedKVState(
+        k_pages=jnp.zeros((cfg.layers, cfg.num_pages, cfg.page_size,
+                           cfg.kv_heads, cfg.head_dim), dtype),
+        v_pages=jnp.zeros((cfg.layers, cfg.num_pages, cfg.page_size,
+                           cfg.kv_heads, cfg.head_dim), dtype),
+        page_table=jnp.full((batch, cfg.max_pages_per_seq), -1, I32),
+        lengths=jnp.zeros((batch,), I32),
+        free_stack=jnp.arange(cfg.num_pages, dtype=I32),
+        free_top=jnp.asarray(cfg.num_pages, I32),
+    )
+
+
+def pages_in_use(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
+    return cfg.num_pages - state.free_top
+
+
+def ensure_capacity(state: PagedKVState, cfg: PagedKVConfig, seq: int):
+    """Map a fresh page for ``seq`` when its next token would cross a page
+    boundary. Returns (state, ok) — ok False when the pool is exhausted
+    (back-pressure to the engine's admission, like ring-buffer credit)."""
+    ln = state.lengths[seq]
+    page_idx = ln // cfg.page_size
+    needs = (ln % cfg.page_size == 0)
+    have_room = page_idx < cfg.max_pages_per_seq
+    can_alloc = state.free_top > 0
+    do = needs & have_room & can_alloc
+    new_top = jnp.where(do, state.free_top - 1, state.free_top)
+    page = state.free_stack[jnp.maximum(new_top, 0)]
+    table = jnp.where(
+        do,
+        state.page_table.at[seq, jnp.minimum(page_idx, cfg.max_pages_per_seq - 1)].set(page),
+        state.page_table,
+    )
+    ok = (~needs) | do
+    return state._replace(page_table=table, free_top=new_top), ok
+
+
+def append_token(state: PagedKVState, cfg: PagedKVConfig, seq: int, k_new, v_new):
+    """k_new/v_new: (L, KVH, HD) — the new token's kv for every layer."""
+    ln = state.lengths[seq]
+    page = state.page_table[seq, ln // cfg.page_size]
+    off = ln % cfg.page_size
+    kp = state.k_pages.at[:, page, off].set(k_new.astype(state.k_pages.dtype))
+    vp = state.v_pages.at[:, page, off].set(v_new.astype(state.v_pages.dtype))
+    return state._replace(
+        k_pages=kp, v_pages=vp, lengths=state.lengths.at[seq].add(1)
+    )
+
+
+def release(state: PagedKVState, cfg: PagedKVConfig, seq: int) -> PagedKVState:
+    """Return a finished sequence's pages to the pool (slab free)."""
+    n_pages = (state.lengths[seq] + cfg.page_size - 1) // cfg.page_size
+
+    def body(i, st):
+        page = st.page_table[seq, i]
+        live = i < n_pages
+        top = jnp.where(live, st.free_top + 1, st.free_top)
+        stack = jnp.where(
+            live, st.free_stack.at[st.free_top].set(page), st.free_stack
+        )
+        return st._replace(free_stack=stack, free_top=top)
+
+    state = jax.lax.fori_loop(0, cfg.max_pages_per_seq, body, state)
+    return state._replace(
+        page_table=state.page_table.at[seq].set(-1),
+        lengths=state.lengths.at[seq].set(0),
+    )
+
+
+def attend(state: PagedKVState, cfg: PagedKVConfig, layer: int, q, *,
+           use_ref: bool = False):
+    """q: (B, KVH, G, HD) pre-scaled -> (B, KVH, G, HD) f32."""
+    pt = jnp.clip(state.page_table, 0, cfg.num_pages - 1)
+    return kops.paged_attention(
+        q, state.k_pages[layer], state.v_pages[layer], pt, state.lengths,
+        use_ref=use_ref,
+    )

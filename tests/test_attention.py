@@ -1,0 +1,151 @@
+"""Attention substrate: head plan invariants, chunked attention vs naive,
+kv-replica gradient tying."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import all_arch_ids, get_config
+from repro.models.attention import (
+    attn_init, chunked_attention, q_head_mask, tie_kv_grads,
+)
+from repro.parallel.sharding import head_plan
+
+F32 = jnp.float32
+
+
+def naive_attention(q, k, v, window=0):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(F32).reshape(b, s, kv, g, hd) * hd ** -0.5
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(F32))
+    qpos, kpos = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(F32))
+    return out.reshape(b, s, h, hd)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(3, 33),
+    chunk=st.sampled_from([4, 8, 16]),
+    window=st.sampled_from([0, 5, 8]),
+    g=st.sampled_from([1, 2]),
+)
+def test_property_chunked_attention_matches_naive(s, chunk, window, g):
+    kv, hd, b = 2, 8, 2
+    h = kv * g
+    key = jax.random.key(s * 131 + chunk)
+    q = jax.random.normal(key, (b, s, h, hd), F32)
+    k = jax.random.normal(jax.random.key(1), (b, s, kv, hd), F32)
+    v = jax.random.normal(jax.random.key(2), (b, s, kv, hd), F32)
+    out = chunked_attention(q, k, v, window=window, chunk=chunk)
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", [a for a in all_arch_ids()
+                                  if get_config(a).num_heads > 0])
+def test_head_plan_invariants_all_archs(arch):
+    """The 16-way production model axis must accommodate every arch."""
+    cfg = get_config(arch)
+    for tp in (1, 2, 4, 8, 16):
+        p = head_plan(cfg.num_heads, cfg.num_kv_heads, tp)
+        assert p.hp % tp == 0, (arch, tp, p)
+        assert p.kv_phys % tp == 0 or tp % p.kv_phys == 0
+        assert p.kv_phys % p.kvp == 0
+        assert p.hp >= cfg.num_heads and p.kvp >= cfg.num_kv_heads
+        # every device's q heads map to exactly the kv head it stores
+        hq = p.hp // tp
+        if p.kv_phys >= tp:
+            kvq = p.kv_phys // tp
+            for d in range(tp):
+                for slot in range(d * hq, (d + 1) * hq):
+                    kv_padded = slot // p.gp
+                    stored = [
+                        (d * kvq + j) // p.repl for j in range(kvq)
+                    ]
+                    assert kv_padded in stored, (arch, tp, d, slot)
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=st.integers(1, 48), ratio=st.integers(1, 8), tp=st.sampled_from([2, 4, 8, 16]))
+def test_property_head_plan_random(h, ratio, tp):
+    kv = max(1, h // ratio)
+    p = head_plan(h, kv, tp)
+    assert p.hp % tp == 0
+    assert p.gp * p.kvp == p.hp
+    assert p.kvp * p.repl % tp == 0 or p.kvp >= tp
+    mask = np.asarray(q_head_mask(p))
+    assert mask.sum() == h  # exactly the real heads survive
+
+
+def test_tie_kv_grads_exactness():
+    """Replica-tied physical model must produce the same gradients as the
+    logical model: check replicas stay identical after a grad step."""
+    cfg = get_config("qwen2.5-14b")
+    from repro.configs import reduced
+
+    cfg = reduced(cfg).replace(dtype="float32", num_heads=4, num_kv_heads=1,
+                               head_dim=8, d_model=32)
+    plan = head_plan(4, 1, 2)  # kv=1, tp=2 -> repl=2
+    assert plan.repl == 2
+    params = attn_init(jax.random.key(0), cfg, plan)
+    # replicas identical at init
+    wk = np.asarray(params["wk"])
+    np.testing.assert_array_equal(wk[:, 0], wk[:, 1])
+
+    from repro.models.attention import qkv, out_proj
+
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32), F32)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+
+    def loss(p):
+        q, k, v = qkv(p, x, cfg, plan, pos)
+        out = chunked_attention(q, k, v, chunk=4)
+        return jnp.sum(out_proj(p, out, plan) ** 2)
+
+    g = jax.grad(loss)(params)
+    gt = tie_kv_grads(g, plan)
+    # after tying, replica slots receive identical grads
+    np.testing.assert_allclose(
+        np.asarray(gt["wk"])[:, 0], np.asarray(gt["wk"])[:, 1], rtol=1e-6
+    )
+    # and the tied grad is the mean of the raw replica grads
+    np.testing.assert_allclose(
+        np.asarray(gt["wk"])[:, 0],
+        (np.asarray(g["wk"])[:, 0] + np.asarray(g["wk"])[:, 1]) / 2,
+        rtol=1e-6,
+    )
+
+
+def test_padded_heads_are_dead():
+    """Padded q slots must not affect the function (masked at out_proj)."""
+    cfg = get_config("qwen2.5-14b")
+    from repro.configs import reduced
+
+    cfg = reduced(cfg).replace(dtype="float32", num_heads=3, num_kv_heads=1,
+                               head_dim=8, d_model=24)
+    plan = head_plan(3, 1, 2)  # gp=4 > g=3: one dead slot
+    assert plan.hp > 3
+    params = attn_init(jax.random.key(0), cfg, plan)
+    from repro.models.attention import qkv, out_proj
+
+    x = jax.random.normal(jax.random.key(1), (1, 4, 24), F32)
+    pos = jnp.broadcast_to(jnp.arange(4), (1, 4))
+    q, k, v = qkv(params, x, cfg, plan, pos)
+    out = chunked_attention(q, k, v, chunk=4)
+    y0 = out_proj(params, out, plan)
+    # poison the dead slot's o-proj weights: output must not change
+    mask = np.asarray(q_head_mask(plan))
+    dead = int(np.argmin(mask))
+    poisoned = dict(params)
+    poisoned["wo"] = params["wo"].at[dead].set(1e6)
+    y1 = out_proj(poisoned, out, plan)
+    np.testing.assert_allclose(y0, y1, rtol=1e-6)

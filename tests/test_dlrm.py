@@ -1,0 +1,81 @@
+"""ORCA-DLRM: MERCI rewrite exactness, reduction oracle, host/device split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dlrm
+
+CFG = dlrm.DLRMConfig(num_tables=4, rows=256, dim=16, lookups=8, cluster=4,
+                      memo_ratio=0.25)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = dlrm.init_params(jax.random.key(0), CFG)
+    merci = dlrm.MerciIndex(CFG, seed=0)
+    ext = merci.build_tables(params["tables"])
+    return params, merci, ext
+
+
+def test_embedding_reduce_matches_manual(setup):
+    params, _, _ = setup
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, CFG.rows, (3, CFG.num_tables, CFG.lookups)).astype(np.int32)
+    out = dlrm.embedding_reduce(params["tables"], jnp.asarray(idx))
+    t = np.asarray(params["tables"])
+    for b in range(3):
+        for ti in range(CFG.num_tables):
+            ref = t[ti][idx[b, ti]].sum(0)
+            np.testing.assert_allclose(np.asarray(out)[b, ti], ref, rtol=1e-5)
+
+
+def test_merci_rewrite_preserves_sums(setup):
+    """The memoized query must produce bit-identical reductions."""
+    params, merci, ext = setup
+    rng = np.random.default_rng(2)
+    dense, idx = dlrm.gen_queries(CFG, 32, merci, hit_rate=0.8, rng=rng)
+    new_idx, saved = merci.rewrite_query(idx)
+    assert saved > 0
+    raw = dlrm.embedding_reduce(params["tables"], jnp.asarray(idx))
+    mem = dlrm.embedding_reduce(ext, jnp.asarray(new_idx))
+    np.testing.assert_allclose(np.asarray(raw), np.asarray(mem), rtol=1e-4, atol=1e-5)
+
+
+def test_merci_end_to_end_logits(setup):
+    params, merci, ext = setup
+    rng = np.random.default_rng(3)
+    dense, idx = dlrm.gen_queries(CFG, 16, merci, hit_rate=0.7, rng=rng)
+    new_idx, _ = merci.rewrite_query(idx)
+    a = dlrm.forward(params, jnp.asarray(dense), jnp.asarray(idx), CFG)
+    b = dlrm.forward(params, jnp.asarray(dense), jnp.asarray(new_idx), CFG,
+                     tables_ext=ext)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_merci_reduces_unique_gathers(setup):
+    """The throughput mechanism: memoized queries touch fewer live rows
+    (the freed slots point at the shared zero row)."""
+    _, merci, _ = setup
+    rng = np.random.default_rng(4)
+    _, idx = dlrm.gen_queries(CFG, 64, merci, hit_rate=0.9, rng=rng)
+    new_idx, saved = merci.rewrite_query(idx)
+    zero_row = CFG.rows + merci.n_memo
+    live = int((new_idx != zero_row).sum())
+    assert live == idx.size - saved
+    assert saved / idx.size > 0.2  # at 0.9 hit rate, >20% gathers removed
+
+
+def test_memo_table_size_matches_ratio(setup):
+    _, merci, ext = setup
+    assert merci.n_memo == int(CFG.rows * CFG.memo_ratio)
+    assert ext.shape[1] == CFG.rows + merci.n_memo + 1
+
+
+def test_hit_rate_zero_is_noop(setup):
+    _, merci, _ = setup
+    rng = np.random.default_rng(5)
+    _, idx = dlrm.gen_queries(CFG, 8, None, hit_rate=0.0, rng=rng)
+    new_idx, saved = merci.rewrite_query(idx)
+    # uniform queries rarely contain memoized pairs
+    assert saved <= idx.size // 16

@@ -1,0 +1,102 @@
+"""ORCA-KV: randomized differential testing against a dict model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kvstore as kv
+
+
+def test_get_put_roundtrip():
+    cfg = kv.KVConfig(num_buckets=64, ways=4, key_words=2, val_words=4, pool_size=256)
+    s = kv.make(cfg)
+    keys = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    vals = jnp.array([[10, 11, 12, 13], [20, 21, 22, 23]], jnp.int32)
+    s, ok = kv.put(s, keys, vals)
+    assert bool(jnp.all(ok))
+    got, found = kv.get(s, keys)
+    assert bool(jnp.all(found))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals))
+    _, nf = kv.get(s, jnp.array([[9, 9]], jnp.int32))
+    assert not bool(nf[0])
+
+
+def test_update_in_place():
+    cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=1, val_words=2, pool_size=64)
+    s = kv.make(cfg)
+    k = jnp.array([[7]], jnp.int32)
+    s, _ = kv.put(s, k, jnp.array([[1, 1]], jnp.int32))
+    alloc0 = int(s.alloc)
+    s, _ = kv.put(s, k, jnp.array([[2, 2]], jnp.int32))
+    assert int(s.alloc) == alloc0  # no new slab row for updates
+    got, found = kv.get(s, k)
+    assert bool(found[0]) and list(np.asarray(got)[0]) == [2, 2]
+
+
+def test_in_batch_duplicates_last_writer_wins():
+    cfg = kv.KVConfig(num_buckets=16, ways=4, key_words=1, val_words=1, pool_size=64)
+    s = kv.make(cfg)
+    keys = jnp.array([[5], [5], [5]], jnp.int32)
+    vals = jnp.array([[1], [2], [3]], jnp.int32)
+    s, ok = kv.put(s, keys, vals)
+    got, found = kv.get(s, jnp.array([[5]], jnp.int32))
+    assert bool(found[0]) and int(got[0, 0]) == 3
+    assert int(s.alloc) == 1  # one slab row for one unique key
+
+
+def test_drop_accounting_when_full():
+    cfg = kv.KVConfig(num_buckets=2, ways=1, key_words=1, val_words=1, pool_size=64)
+    s = kv.make(cfg)
+    keys = jnp.arange(1, 9, dtype=jnp.int32)[:, None]
+    s, ok = kv.put(s, keys, keys)
+    assert int(s.dropped) == 8 - int(np.asarray(ok).sum())
+    assert int(s.dropped) > 0  # 8 keys cannot fit in 2 ways + overflow
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_differential_vs_dict(seed):
+    cfg = kv.KVConfig(num_buckets=32, ways=4, key_words=2, val_words=2, pool_size=256)
+    s = kv.make(cfg)
+    rng = np.random.default_rng(seed)
+    ref: dict = {}
+    put = jax.jit(kv.put)
+    getf = jax.jit(kv.get)
+    for _ in range(6):
+        b = 16
+        keys = rng.integers(1, 40, size=(b, 2)).astype(np.int32)
+        vals = rng.integers(0, 99, size=(b, 2)).astype(np.int32)
+        s, ok = put(s, jnp.array(keys), jnp.array(vals))
+        ok = np.asarray(ok)
+        last = {}
+        for i in range(b):
+            last[tuple(keys[i])] = (vals[i], ok[i])
+        for kk, (vv, okk) in last.items():
+            if okk:
+                ref[kk] = vv
+        qk = rng.integers(1, 60, size=(b, 2)).astype(np.int32)
+        gv, gf = getf(s, jnp.array(qk))
+        gv, gf = np.asarray(gv), np.asarray(gf)
+        for i in range(b):
+            kq = tuple(qk[i])
+            if kq in ref:
+                assert gf[i], (kq, seed)
+                np.testing.assert_array_equal(gv[i], ref[kq])
+            else:
+                assert not gf[i], (kq, seed)
+
+
+def test_engine_app_request_format():
+    cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=2, val_words=4, pool_size=64)
+    s = kv.make(cfg)
+    w = kv.request_words(cfg)
+    put_req = jnp.zeros((1, w), jnp.int32).at[0, 0].set(kv.OP_PUT)
+    put_req = put_req.at[0, 1:3].set(jnp.array([4, 5])).at[0, 3:7].set(jnp.array([9, 8, 7, 6]))
+    s, resp = kv.app_step(s, put_req, jnp.array([True]), cfg)
+    assert int(resp[0, 0]) == 1
+    get_req = jnp.zeros((1, w), jnp.int32).at[0, 0].set(kv.OP_GET)
+    get_req = get_req.at[0, 1:3].set(jnp.array([4, 5]))
+    s, resp = kv.app_step(s, get_req, jnp.array([True]), cfg)
+    assert int(resp[0, 0]) == 1
+    assert list(np.asarray(resp[0, 1:5])) == [9, 8, 7, 6]

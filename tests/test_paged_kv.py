@@ -1,0 +1,80 @@
+"""Paged KV pool: allocator lifecycle + kernel attention vs contiguous
+reference across page boundaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import kv_cache as pk
+
+F32 = jnp.float32
+CFG = pk.PagedKVConfig(num_pages=16, page_size=4, max_pages_per_seq=4,
+                       kv_heads=2, head_dim=8, layers=2)
+
+
+def _grow(state, seq, k, v):
+    state, ok = pk.ensure_capacity(state, CFG, seq)
+    assert bool(ok)
+    return pk.append_token(state, CFG, seq, k, v)
+
+
+def test_append_across_page_boundaries_and_attend():
+    rng = np.random.default_rng(0)
+    state = pk.make(CFG, batch=2, dtype=F32)
+    n_tok = {0: 10, 1: 5}  # crosses 2+ page boundaries for seq 0
+    ks = {s: rng.normal(size=(n_tok[s], CFG.layers, CFG.kv_heads, CFG.head_dim))
+          for s in (0, 1)}
+    vs = {s: rng.normal(size=(n_tok[s], CFG.layers, CFG.kv_heads, CFG.head_dim))
+          for s in (0, 1)}
+    for t in range(10):
+        for s in (0, 1):
+            if t < n_tok[s]:
+                state = _grow(state, s, jnp.asarray(ks[s][t], F32),
+                              jnp.asarray(vs[s][t], F32))
+    assert list(np.asarray(state.lengths)) == [10, 5]
+    assert int(pk.pages_in_use(state, CFG)) == 3 + 2  # ceil(10/4)+ceil(5/4)
+
+    g = 3
+    q = jnp.asarray(rng.normal(size=(2, CFG.kv_heads, g, CFG.head_dim)), F32)
+    for layer in range(CFG.layers):
+        out = pk.attend(state, CFG, layer, q)
+        # contiguous reference
+        for s in (0, 1):
+            kk = jnp.asarray(ks[s][: n_tok[s], layer], F32)  # (T, KVH, HD)
+            vv = jnp.asarray(vs[s][: n_tok[s], layer], F32)
+            sc = jnp.einsum("kgh,tkh->kgt", q[s], kk)
+            p = jax.nn.softmax(sc, axis=-1)
+            ref = jnp.einsum("kgt,tkh->kgh", p, vv)
+            np.testing.assert_allclose(
+                np.asarray(out)[s], np.asarray(ref), rtol=2e-4, atol=2e-4
+            )
+
+
+def test_release_returns_pages_and_reuse():
+    state = pk.make(CFG, batch=2, dtype=F32)
+    k = jnp.ones((CFG.layers, CFG.kv_heads, CFG.head_dim), F32)
+    for _ in range(9):
+        state = _grow(state, 0, k, k)
+    used = int(pk.pages_in_use(state, CFG))
+    assert used == 3
+    state = pk.release(state, CFG, 0)
+    assert int(pk.pages_in_use(state, CFG)) == 0
+    assert int(state.lengths[0]) == 0
+    # reuse after release
+    for _ in range(4):
+        state = _grow(state, 1, k, k)
+    assert int(pk.pages_in_use(state, CFG)) == 1
+
+
+def test_pool_exhaustion_backpressure():
+    tiny = CFG._replace(num_pages=2, max_pages_per_seq=4)
+    state = pk.make(tiny, batch=1, dtype=F32)
+    k = jnp.zeros((tiny.layers, tiny.kv_heads, tiny.head_dim), F32)
+    oks = []
+    for _ in range(12):
+        state, ok = pk.ensure_capacity(state, tiny, 0)
+        oks.append(bool(ok))
+        if ok:
+            state = pk.append_token(state, tiny, 0, k, k)
+    # 2 pages x 4 slots = 8 tokens fit; further growth is refused
+    assert sum(oks) == 8 and not oks[-1]
+    assert int(state.lengths[0]) == 8

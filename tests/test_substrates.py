@@ -1,0 +1,262 @@
+"""Substrate tests: optimizer, schedules, gradient compression, data
+pipeline, checkpointing, fault tolerance, placement policy."""
+import dataclasses
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.configs import SHAPES, get_config, reduced
+from repro.core import placement
+from repro.data import DataConfig, TokenPipeline, batch_for_step
+from repro.fault import Heartbeat, StragglerDetector, is_transient, with_retries
+from repro.optim import AdamWConfig, init as opt_init, update as opt_update, warmup_cosine
+from repro.parallel import compress as gc
+
+F32 = jnp.float32
+
+
+# ------------------------------- optimizer ---------------------------------
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = opt_init(params, cfg)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = opt_update(g, opt, params, 0.05, cfg)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_adamw_grad_clip():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros((4,))}
+    opt = opt_init(params, cfg)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = opt_update(g, opt, params, 1e-3, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_bf16_state_dtype():
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = opt_init(params, cfg)
+    assert opt.m["w"].dtype == jnp.bfloat16
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0)) == 0.0
+    assert float(warmup_cosine(100)) == pytest.approx(3e-4, rel=1e-3)
+    assert float(warmup_cosine(10_000)) == pytest.approx(3e-5, rel=1e-2)
+    assert float(warmup_cosine(5000)) < float(warmup_cosine(200))
+
+
+def test_zero1_spec_sharding():
+    from jax.sharding import PartitionSpec as P
+    from repro.optim import zero1_spec
+    from repro.parallel.sharding import ParallelContext
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    ctx = ParallelContext(mesh=FakeMesh())
+    # replicated dim gets the data axis
+    assert zero1_spec(P(None, "model"), (4096, 1024), ctx) == P("data", "model")
+    # non-divisible dims stay put
+    assert zero1_spec(P(None,), (7,), ctx) == P(None)
+    # already data-sharded (fsdp) specs unchanged
+    assert zero1_spec(P("data", "model"), (4096, 1024), ctx) == P("data", "model")
+
+
+# --------------------------- gradient compression --------------------------
+
+def test_compression_error_feedback_converges():
+    """Error feedback: the accumulated applied-update converges to the true
+    gradient sum (the residual stays bounded)."""
+    g = {"w": jnp.array([0.3, -0.7, 0.001, 5.0])}
+    err = gc.init_error(g)
+    applied = jnp.zeros((4,))
+    for i in range(50):
+        deq, err = gc.roundtrip(g, err)
+        applied += deq["w"]
+    total = 50 * g["w"]
+    np.testing.assert_allclose(applied, total, rtol=0.02, atol=0.05)
+    assert float(jnp.max(jnp.abs(err["w"]))) <= float(jnp.max(jnp.abs(g["w"])))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=16))
+def test_property_compression_bounded_error(vals):
+    g = {"w": jnp.array(vals, F32)}
+    err = gc.init_error(g)
+    deq, new_err = gc.roundtrip(g, err)
+    scale = max(abs(v) for v in vals) / 127.0
+    assert float(jnp.max(jnp.abs(new_err["w"]))) <= scale * 0.5 + 1e-6
+
+
+def test_compressed_bytes_4x_smaller_than_f32():
+    params = {"a": jnp.zeros((1024,)), "b": jnp.zeros((256, 4))}
+    assert gc.compressed_bytes(params) * 4 == sum(
+        p.size * 4 for p in jax.tree_util.tree_leaves(params)
+    )
+
+
+# ------------------------------ data pipeline -------------------------------
+
+CFG = reduced(get_config("qwen1.5-0.5b"))
+SH = dataclasses.replace(SHAPES["train_4k"], seq_len=16, global_batch=8)
+
+
+def test_determinism_across_restarts():
+    a = batch_for_step(CFG, SH, DataConfig(seed=1), 7)
+    b = batch_for_step(CFG, SH, DataConfig(seed=1), 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_for_step(CFG, SH, DataConfig(seed=2), 7)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_sharding_partitions_batch():
+    full = batch_for_step(CFG, SH, DataConfig(num_hosts=1, host_id=0), 3)
+    parts = [
+        batch_for_step(CFG, SH, DataConfig(num_hosts=4, host_id=h), 3)
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(
+        full["tokens"], np.concatenate([p["tokens"] for p in parts])
+    )
+
+
+def test_labels_are_shifted_tokens():
+    b = batch_for_step(CFG, SH, DataConfig(), 0)
+    assert b["tokens"].shape == (8, 16) and b["labels"].shape == (8, 16)
+
+
+def test_pipeline_prefetch_and_resume():
+    pipe = TokenPipeline(CFG, SH, DataConfig(seed=3), start_step=5)
+    try:
+        step, batch = next(pipe)
+        assert step == 5
+        ref = batch_for_step(CFG, SH, DataConfig(seed=3), 5)
+        np.testing.assert_array_equal(batch["tokens"], ref["tokens"])
+        step2, _ = next(pipe)
+        assert step2 == 6
+    finally:
+        pipe.close()
+
+
+# ------------------------------- checkpoint --------------------------------
+
+def test_checkpoint_atomic_commit_ignores_partial():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(4.0)}
+        save(d, 10, tree)
+        os.makedirs(os.path.join(d, "step_20.tmp"))  # crashed save
+        assert latest_step(d) == 10
+
+
+def test_checkpoint_restore_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore(d, 1, {"w": jax.ShapeDtypeStruct((5,), F32)})
+
+
+def test_async_checkpointer_overlap():
+    with tempfile.TemporaryDirectory() as d:
+        cp = AsyncCheckpointer(d)
+        for s in (1, 2, 3):
+            cp.save(s, {"w": jnp.full((8,), float(s))})
+        cp.wait()
+        assert latest_step(d) == 3
+        out, _ = restore(d, 3, {"w": jax.ShapeDtypeStruct((8,), F32)})
+        np.testing.assert_array_equal(out["w"], 3.0)
+
+
+def test_checkpoint_opt_state_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        opt = opt_init(params, AdamWConfig())
+        save(d, 2, {"params": params, "opt": opt})
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {"params": params, "opt": opt},
+        )
+        out, step = restore(d, 2, like)
+        assert step == 2 and out["opt"].step == 0
+        assert out["params"]["w"].dtype == jnp.bfloat16
+
+
+# ----------------------------- fault tolerance ------------------------------
+
+def test_straggler_detector_flags_and_evicts():
+    dog = StragglerDetector(alpha=0.5, threshold=2.0, patience=2, warmup=1)
+    for _ in range(5):
+        r = dog.observe(0.1)
+    assert not r["straggler"]
+    r1 = dog.observe(0.5)
+    assert r1["straggler"] and not r1["evict"]
+    r2 = dog.observe(0.5)
+    assert r2["evict"]
+    # recovery resets the consecutive counter
+    dog.observe(0.1)
+    assert dog.consecutive == 0
+
+
+def test_retries_only_on_transient():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("UNAVAILABLE: connection reset")
+        return 42
+
+    assert with_retries(flaky, retries=5, backoff=0.001) == 42
+    with pytest.raises(ValueError):
+        with_retries(lambda: (_ for _ in ()).throw(ValueError("bad logic")),
+                     retries=5, backoff=0.001)
+
+
+def test_heartbeat_detects_dead_hosts():
+    with tempfile.TemporaryDirectory() as d:
+        h0, h1 = Heartbeat(d, 0), Heartbeat(d, 1)
+        h0.beat(); h1.beat()
+        assert Heartbeat.dead_hosts(d, timeout=60) == []
+        assert Heartbeat.dead_hosts(d, timeout=0.0, now=time.time() + 10) == [0, 1]
+
+
+# ------------------------------- placement ---------------------------------
+
+def test_placement_decision_table():
+    """The Fig. 5 semantics: persistent (NVM-like) never cache-staged; hot
+    small regions pinned; bulk streaming to HBM."""
+    doorbell = placement.Region("pointer_buffer", 4 * 1024, access_rate_hz=1e6)
+    table = placement.Region("embedding", 8 << 30, access_rate_hz=1e5)
+    log = placement.Region("redo_log", 1 << 20, access_rate_hz=1e5, persistent=True)
+    assert placement.classify(doorbell) is placement.Tier.VMEM
+    assert placement.classify(table) is placement.Tier.HBM
+    assert placement.classify(log) is placement.Tier.HOST
+
+
+def test_placement_knapsack_respects_budget():
+    regions = [
+        placement.Region(f"r{i}", 30 << 20, access_rate_hz=1e5) for i in range(8)
+    ]
+    plan = placement.plan(regions, vmem_budget=64 << 20)
+    pinned = [n for n, t in plan.items() if t is placement.Tier.VMEM]
+    assert 1 <= len(pinned) <= 2  # only what fits
+
+
+def test_placement_memory_space_mapping():
+    from jax.experimental.pallas import tpu as pltpu
+
+    assert placement.memory_space_for(placement.Tier.VMEM) == pltpu.VMEM
+    assert placement.memory_space_for(placement.Tier.HBM) == pltpu.ANY
