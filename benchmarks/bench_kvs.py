@@ -9,12 +9,18 @@ Arms (per DESIGN.md §2):
 * SmartNIC  — wimpy-core walk with a size-capped local cache: hits pay
               NIC-local access, misses pay a PCIe round trip (§II-B).
 
-Measured: batched GET/PUT walk time per request on this backend.
+Measured: batched GET/PUT walk time per request on this backend, for BOTH
+walk implementations — the jnp oracle and the Pallas kernel path
+(``backend="pallas"``: native on TPU, interpret mode elsewhere — interpret
+numbers measure validation overhead, not the TPU fast path).
 Modeled: transport per request from benchmarks.common constants.
 Reported: Kops throughput (measured+model), latency vs batch size
-(Fig. 10), and Kop/W with the paper's power numbers (Tab. III).
+(Fig. 10), kernel-vs-oracle walk arms, and Kop/W with the paper's power
+numbers (Tab. III).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -100,6 +106,30 @@ def run():
         rows.append(row(
             f"kvs_batch{b}", t_us,
             f"us_per_req={t_us / b:.2f};kops={b * 1e3 / t_us:.0f}",
+        ))
+
+    # --- kernel-path arm: the Pallas APU walk vs the jnp oracle ------------
+    getk = jax.jit(functools.partial(kv.get, backend="pallas"))
+    putk = jax.jit(lambda s, k, v: kv.put(s, k, v, backend="pallas")[0])
+    puto = jax.jit(lambda s, k, v: kv.put(s, k, v, backend="ref")[0])
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    for b in (32, 64):
+        knp = zipf_keys(b, KEY_SPACE, 0.9, rng)
+        keys = jnp.stack([jnp.asarray(knp), jnp.zeros(b, I32)], 1)
+        vals = jnp.asarray(rng.integers(0, 99, (b, CFG.val_words)), I32)
+        t_get_o = measure(getf, store, keys)
+        t_get_k = measure(getk, store, keys)
+        t_put_o = measure(puto, store, keys, vals)
+        t_put_k = measure(putk, store, keys, vals)
+        rows.append(row(
+            f"kvs_kernel_get_batch{b}", t_get_k,
+            f"mode={mode};oracle_us={t_get_o:.2f};kernel_us={t_get_k:.2f};"
+            f"speedup={t_get_o / t_get_k:.2f}x",
+        ))
+        rows.append(row(
+            f"kvs_kernel_put_batch{b}", t_put_k,
+            f"mode={mode};oracle_us={t_put_o:.2f};kernel_us={t_put_k:.2f};"
+            f"speedup={t_put_o / t_put_k:.2f}x",
         ))
 
     # --- Tab. III: power efficiency ----------------------------------------

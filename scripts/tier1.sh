@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the ROADMAP command, verbatim, runnable from anywhere.
+# (pyproject's pytest pythonpath covers `python -m pytest` too; this keeps
+# the documented PYTHONPATH form working in environments that predate it.)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -70,12 +70,32 @@ def init_params(key, cfg: DLRMConfig, dtype=jnp.float32):
 # Embedding reduction (device hot loop; Pallas kernel target + oracle)
 # ---------------------------------------------------------------------------
 
-def embedding_reduce(tables, idx):
-    """tables: (T, R', D); idx: (B, T, L) int32 -> (B, T, D) sum-pool.
+def embedding_reduce(tables, idx, *, backend: Optional[str] = None):
+    """tables: (T, R', D); idx: (B, T, L) int32 -> (B, T, D) f32 sum-pool.
 
-    R' may exceed cfg.rows when a memo extension is appended."""
-    g = jax.vmap(lambda tab, ix: tab[ix], in_axes=(0, 1))(tables, idx)  # (T,B,L,D)
-    return jnp.sum(g, axis=2).transpose(1, 0, 2)  # (B, T, D)
+    R' may exceed cfg.rows when a memo extension is appended. ``backend``
+    is the kernel dispatch knob (``auto | pallas | ref``); the default
+    (None) runs the jnp oracle in :mod:`repro.kernels.ref`, which sums
+    lookups sequentially — the same access order as the Pallas kernel's
+    per-segment VMEM accumulator.
+    """
+    from repro.kernels import ops as _ops
+    from repro.kernels import ref as _ref
+
+    if backend is None or backend == "ref":
+        return _ref.dlrm_embedding_reduce(tables, idx)
+    t, r, d = tables.shape
+    b, _, l = idx.shape
+    _, interpret = _ops.resolve_backend(backend)
+    # flatten to the kernel's (table rows, sorted segment ids) layout:
+    # segment (b, t) -> b*T + t, non-decreasing in (B, T, L) flatten order
+    flat_idx = (idx.astype(jnp.int32) + jnp.arange(t, dtype=jnp.int32)[None, :, None] * r)
+    seg = jnp.repeat(jnp.arange(b * t, dtype=jnp.int32), l)
+    out = _ops.embedding_reduce(
+        tables.reshape(t * r, d), flat_idx.reshape(-1), seg, b * t,
+        interpret=interpret,
+    )
+    return out.reshape(b, t, d)
 
 
 def _mlp_apply(layers, x, final_linear=False):
@@ -86,13 +106,15 @@ def _mlp_apply(layers, x, final_linear=False):
     return x
 
 
-def forward(params, dense, idx, cfg: DLRMConfig, tables_ext=None):
+def forward(params, dense, idx, cfg: DLRMConfig, tables_ext=None, *,
+            backend: Optional[str] = None):
     """dense: (B, F); idx: (B, T, L) -> CTR logits (B,).
 
     ``tables_ext``: optional extended tables (raw ‖ memo ‖ zero-row) when the
-    host rewrote idx with MERCI references."""
+    host rewrote idx with MERCI references. ``backend`` routes the embedding
+    reduction (the device hot loop) through the Pallas kernel path."""
     tables = tables_ext if tables_ext is not None else params["tables"]
-    emb = embedding_reduce(tables, idx).astype(F32)  # (B, T, D)
+    emb = embedding_reduce(tables, idx, backend=backend).astype(F32)  # (B, T, D)
     bot = _mlp_apply(params["bottom"], dense.astype(F32))  # (B, D)
     feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, T+1, D)
     inter = jnp.einsum("bmd,bnd->bmn", feats, feats)
@@ -100,6 +122,47 @@ def forward(params, dense, idx, cfg: DLRMConfig, tables_ext=None):
     flat = inter[:, iu, ju]  # (B, (T+1)T/2)
     z = jnp.concatenate([bot, flat], axis=1)
     return _mlp_apply(params["top"], z, final_linear=True)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Request-level interface (engine app): DLRM inference through the rings.
+# word0 = op (0 nop / 1 infer), words[1:1+F] = dense features (f32 bit-
+# cast), rest = the (T*L) embedding indices (host-rewritten when MERCI is
+# on). Response: word0 = status (1 ok), word1 = CTR logit (f32 bit-cast).
+# ---------------------------------------------------------------------------
+
+OP_NOP, OP_INFER = 0, 1
+
+
+def request_words(cfg: DLRMConfig) -> int:
+    return 1 + cfg.dense_features + cfg.num_tables * cfg.lookups
+
+
+def app_step(params, payloads, valid, cfg: DLRMConfig, *, tables_ext=None,
+             kernel_backend: Optional[str] = "auto"):
+    """Engine hook: payloads (B, 1+F+T*L) int32 -> (params, responses).
+
+    The APU half of the §IV-C collaboration: the embedding reduction (and
+    the dense MLPs) run device-side per request batch, through the Pallas
+    kernel path when ``kernel_backend`` selects it. ``tables_ext`` carries
+    the MERCI-extended tables when the host rewrote the index lists."""
+    tables = tables_ext if tables_ext is not None else params["tables"]
+    f = cfg.dense_features
+    op = payloads[:, 0]
+    dense = jax.lax.bitcast_convert_type(payloads[:, 1 : 1 + f], F32)
+    idx = payloads[:, 1 + f : 1 + f + cfg.num_tables * cfg.lookups]
+    idx = jnp.clip(idx, 0, tables.shape[1] - 1).reshape(
+        payloads.shape[0], cfg.num_tables, cfg.lookups
+    )
+    live = valid & (op == OP_INFER)
+    logits = forward(params, dense, idx, cfg, tables_ext=tables_ext,
+                     backend=kernel_backend)
+    logit_bits = jax.lax.bitcast_convert_type(
+        jnp.where(live, logits, 0.0).astype(F32), jnp.int32
+    )
+    resp = jnp.zeros_like(payloads)
+    resp = resp.at[:, 0].set(live.astype(jnp.int32)).at[:, 1].set(logit_bits)
+    return params, resp
 
 
 # ---------------------------------------------------------------------------

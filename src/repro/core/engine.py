@@ -14,7 +14,8 @@ generation (requests = prompts, responses = generated sequences).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+import inspect
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,38 @@ class EngineConfig(NamedTuple):
     req_words: int = 24
     resp_words: int = 24
     budget: int = 32  # APU batch per step (256 outstanding in the paper)
+    # APU kernel dispatch: "auto" = Pallas (native on TPU, interpret mode
+    # elsewhere), "pallas" = same spelled explicitly, "ref" = jnp oracles.
+    kernel_backend: str = "auto"
+
+
+def _call_app(app_fn: Callable, app, payloads, valid, cfg: EngineConfig):
+    """Invoke the APU, threading ``cfg.kernel_backend`` to apps that take
+    it (kvstore/dlrm/tx_app ``app_step``); plain 3-arg closures keep their
+    own dispatch defaults."""
+    try:
+        params = inspect.signature(app_fn).parameters
+    except (TypeError, ValueError):  # builtins/partials without signatures
+        return app_fn(app, payloads, valid)
+    accepts = "kernel_backend" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+    if accepts:
+        return app_fn(app, payloads, valid, kernel_backend=cfg.kernel_backend)
+    return app_fn(app, payloads, valid)
+
+
+def bind_app(app_step: Callable, app_cfg, cfg: EngineConfig, **kw) -> Callable:
+    """Bind an app module's ``app_step(state, payloads, valid, app_cfg,
+    **kw)`` into the engine's ``app_fn`` shape, carrying the engine's
+    kernel_backend knob so ``engine_step``/``run_steps`` dispatch it."""
+
+    def app_fn(state, payloads, valid, *, kernel_backend=cfg.kernel_backend):
+        return app_step(
+            state, payloads, valid, app_cfg, kernel_backend=kernel_backend, **kw
+        )
+
+    return app_fn
 
 
 class EngineState(NamedTuple):
@@ -79,8 +112,8 @@ def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
     qids, counts = sched.selected_queues(take)
     payloads, srcq, valid = rb.gather_batch(state.req, qids, counts, cfg.budget)
     req = rb.pop(state.req, qids, counts)
-    # 4. APU
-    app, responses = app_fn(state.app, payloads, valid)
+    # 4. APU (kernel dispatch per cfg.kernel_backend)
+    app, responses = _call_app(app_fn, state.app, payloads, valid, cfg)
     # 5. response path (+ response doorbells, batched)
     resp = _enqueue_multi(state.resp, srcq, responses, valid)
     n_served = jnp.sum(valid.astype(I32))

@@ -8,15 +8,22 @@ memory accesses (primary bucket, overflow bucket, value row) and a PUT four
 
 Everything is batched and functional: a batch of requests is one vectorized
 walk, the TPU analogue of the APU's 256-outstanding-request memory-level
-parallelism. The Pallas ``hash_probe`` kernel accelerates the same walk with
-explicit VMEM staging; this module is also its oracle.
+parallelism. The Pallas ``hash_probe`` kernels accelerate the same walk with
+explicit VMEM staging; the jnp implementations here are their oracles, and
+``get``/``put`` dispatch between the two via the ``backend`` knob
+(``auto | pallas | ref``; the engine threads ``EngineConfig.kernel_backend``
+through ``app_step``). PUT splits into :func:`plan_put` (hashes, dedupe,
+way ranking — ALU work, always jnp) and a commit phase that either backend
+applies identically, so the paths agree bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -67,19 +74,29 @@ def _match_ways(state: KVState, bids, keys):
     return hit, way, jnp.where(hit, ptr, -1)
 
 
-def get(state: KVState, keys, mask=None):
+def get(state: KVState, keys, mask=None, *, backend: Optional[str] = "ref"):
     """Batched GET. keys: (B, KW). Returns (vals (B, VW), found (B,)).
 
-    Three gathers: primary bucket, overflow bucket, value pool."""
+    Three gathers: primary bucket, overflow bucket, value pool. ``backend``
+    picks the walk implementation: ``ref`` (default for direct library
+    calls — this is the oracle) or ``auto``/``pallas`` for the kernel fast
+    path; results are identical (integer data, single-match buckets)."""
     nb = state.bucket_keys.shape[0]
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
-    hit1, _, p1 = _match_ways(state, h1, keys)
-    hit2, _, p2 = _match_ways(state, h2, keys)
-    found = hit1 | hit2
-    ptr = jnp.where(hit1, p1, p2)
-    vals = state.pool[jnp.clip(ptr, 0, state.pool.shape[0] - 1)]
-    vals = jnp.where(found[:, None], vals, 0)
+    use_ref, interpret = kops.resolve_backend(backend or "ref")
+    if use_ref:
+        hit1, _, p1 = _match_ways(state, h1, keys)
+        hit2, _, p2 = _match_ways(state, h2, keys)
+        found = hit1 | hit2
+        ptr = jnp.where(hit1, p1, p2)
+        vals = state.pool[jnp.clip(ptr, 0, state.pool.shape[0] - 1)]
+        vals = jnp.where(found[:, None], vals, 0)
+    else:
+        vals, found = kops.hash_get(
+            state.bucket_keys, state.bucket_ptr, state.pool, keys, h1, h2,
+            interpret=interpret,
+        )
     if mask is not None:
         found = found & mask
     return vals, found
@@ -107,15 +124,25 @@ def _nth_empty_way(bp_rows, rank):
     return jnp.where(has, way, bp_rows.shape[-1])
 
 
-def put(state: KVState, keys, vals, mask=None):
-    """Batched PUT/UPDATE. keys: (B,KW), vals: (B,VW). Returns (state, ok).
+class PutPlan(NamedTuple):
+    """The ALU half of a batched PUT: where every write lands.
 
-    In-batch duplicate keys resolve last-writer-wins on the value row;
-    insertion conflicts are resolved exactly via per-bucket ranking (each new
-    key takes the rank-th empty way). Keys that fit in neither bucket are
-    dropped and counted (the chained-allocation path of the paper, reported
-    rather than allocated).
-    """
+    Sentinels follow the scatter convention: ``tb == NB`` means no bucket
+    write, ``wp == NP`` means no value write (both backends drop them —
+    jnp via ``mode="drop"``, Pallas via a pad row)."""
+
+    tb: jax.Array  # (B,) target bucket row
+    tw: jax.Array  # (B,) target way within the bucket
+    bptr_val: jax.Array  # (B,) pool pointer committed at (tb, tw)
+    wp: jax.Array  # (B,) pool row receiving the value
+    alloc: jax.Array  # () updated bump allocator
+    dropped: jax.Array  # () updated drop counter
+    ok: jax.Array  # (B,) per-request success
+
+
+def plan_put(state: KVState, keys, mask=None) -> PutPlan:
+    """Plan a batched PUT/UPDATE (dedupe, match, way ranking) without
+    touching the store. The commit phase (``ref``/Pallas) applies it."""
     b = keys.shape[0]
     if mask is None:
         mask = jnp.ones((b,), bool)
@@ -124,16 +151,24 @@ def put(state: KVState, keys, vals, mask=None):
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
 
-    # dedupe identical keys in the batch: only the first instance inserts,
-    # and only the last instance writes the value row (last-writer-wins).
-    # Lexicographic sort on the full key words — a hashed tag can collide
-    # for distinct keys and silently drop one (found by hypothesis).
-    order = jnp.lexsort(tuple(keys[:, w] for w in reversed(range(keys.shape[1]))))
-    sorted_keys = keys[order]
-    is_first_sorted = jnp.concatenate(
-        [jnp.ones((1,), bool),
-         jnp.any(sorted_keys[1:] != sorted_keys[:-1], axis=-1)]
+    # dedupe identical keys in the batch: only the first LIVE instance
+    # inserts, and only the last LIVE instance writes the value row
+    # (last-writer-wins). Lexicographic sort on the full key words — a
+    # hashed tag can collide for distinct keys and silently drop one (found
+    # by hypothesis). Masked rows sort behind the live section and runs
+    # split at the live/masked boundary, so a masked row sharing a key with
+    # a live PUT can steal neither the run's insert nor its value write
+    # (the engine masks GET rows out of the PUT walk every step).
+    order = jnp.lexsort(
+        tuple(keys[:, w] for w in reversed(range(keys.shape[1])))
+        + ((~mask).astype(I32),)
     )
+    sorted_keys = keys[order]
+    live_sorted = mask[order]
+    run_boundary = jnp.any(sorted_keys[1:] != sorted_keys[:-1], axis=-1) | (
+        live_sorted[1:] != live_sorted[:-1]
+    )
+    is_first_sorted = jnp.concatenate([jnp.ones((1,), bool), run_boundary])
     is_first = jnp.zeros((b,), bool).at[order].set(is_first_sorted)
 
     hit1, way1, p1 = _match_ways(state, h1, keys)
@@ -174,14 +209,11 @@ def put(state: KVState, keys, vals, mask=None):
 
     tb = jnp.where(fits1, h1, jnp.where(fits2, h2, nb))  # nb = dropped row
     tw = jnp.where(fits1, w1, jnp.where(fits2, w2, 0))
-    bucket_keys = state.bucket_keys.at[tb, tw].set(keys, mode="drop")
-    bucket_ptr = state.bucket_ptr.at[tb, tw].set(
-        jnp.where(fits1 | fits2, new_ptr, -1), mode="drop"
-    )
+    bptr_val = jnp.where(fits1 | fits2, new_ptr, -1)
 
     # --- value writes: updates + inserts, last-writer-wins ---------------
-    # .at[].set with duplicate indices is unordered in XLA, so among
-    # duplicate keys only the LAST batch instance writes its value, to the
+    # scatters with duplicate indices are unordered, so among duplicate
+    # keys only the LAST batch instance writes its value, to the
     # pool row the FIRST instance resolved (existing hit or fresh insert).
     first_ptr = jnp.where(
         exists, ptr_existing, jnp.where(fits1 | fits2, new_ptr, -1)
@@ -192,19 +224,43 @@ def put(state: KVState, keys, vals, mask=None):
     )
     eff_ptr_sorted = run_ptr[run_id_sorted]
     eff_ptr = jnp.zeros((b,), I32).at[order].set(eff_ptr_sorted)
-    last_in_sorted = jnp.concatenate(
-        [jnp.any(sorted_keys[1:] != sorted_keys[:-1], axis=-1),
-         jnp.ones((1,), bool)]
-    )
+    last_in_sorted = jnp.concatenate([run_boundary, jnp.ones((1,), bool)])
     is_last = jnp.zeros((b,), bool).at[order].set(last_in_sorted)
     row_live = mask & is_last & (eff_ptr >= 0)
     wp = jnp.where(row_live, eff_ptr, np_)
-    pool = state.pool.at[wp].set(vals, mode="drop")
 
     alloc = state.alloc + jnp.maximum(jnp.sum((fits1 | fits2).astype(I32)), 0)
     dropped = state.dropped + jnp.sum(drop.astype(I32))
     ok = mask & (exists | fits1 | fits2)
-    return KVState(bucket_keys, bucket_ptr, pool, alloc, dropped), ok
+    return PutPlan(tb, tw, bptr_val, wp, alloc, dropped, ok)
+
+
+def put(state: KVState, keys, vals, mask=None, *,
+        backend: Optional[str] = "ref"):
+    """Batched PUT/UPDATE. keys: (B,KW), vals: (B,VW). Returns (state, ok).
+
+    In-batch duplicate keys resolve last-writer-wins on the value row;
+    insertion conflicts are resolved exactly via per-bucket ranking (each new
+    key takes the rank-th empty way). Keys that fit in neither bucket are
+    dropped and counted (the chained-allocation path of the paper, reported
+    rather than allocated).
+
+    The plan (ALU work) is always jnp; ``backend`` picks the commit —
+    ``ref`` (oracle scatters, the default for direct calls) or
+    ``auto``/``pallas`` (the VMEM-staged scatter kernels). Both commits
+    write identical values, so the backends agree bit-for-bit.
+    """
+    plan = plan_put(state, keys, mask)
+    use_ref, interpret = kops.resolve_backend(backend or "ref")
+    bucket_keys, bucket_ptr, pool = kops.hash_put(
+        state.bucket_keys, state.bucket_ptr, state.pool, keys, vals,
+        plan.tb, plan.tw, plan.bptr_val, plan.wp,
+        use_ref=use_ref, interpret=interpret,
+    )
+    return (
+        KVState(bucket_keys, bucket_ptr, pool, plan.alloc, plan.dropped),
+        plan.ok,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +276,22 @@ def request_words(cfg: KVConfig) -> int:
     return 1 + cfg.key_words + cfg.val_words
 
 
-def app_step(state: KVState, payloads, valid, cfg: KVConfig):
-    """Engine hook: payloads (B, 1+KW+VW) int32 -> (state, responses)."""
+def app_step(state: KVState, payloads, valid, cfg: KVConfig, *,
+             kernel_backend: Optional[str] = "auto"):
+    """Engine hook: payloads (B, 1+KW+VW) int32 -> (state, responses).
+
+    ``kernel_backend`` is the engine's dispatch knob — the APU walk runs
+    through the Pallas kernels by default (native on TPU, interpret mode
+    elsewhere); ``ref`` keeps the jnp oracle path."""
     op = payloads[:, 0]
     keys = payloads[:, 1 : 1 + cfg.key_words]
     vals = payloads[:, 1 + cfg.key_words : 1 + cfg.key_words + cfg.val_words]
-    get_vals, found = get(state, keys, mask=valid & (op == OP_GET))
-    state, put_ok = put(state, keys, vals, mask=valid & (op == OP_PUT))
+    get_vals, found = get(
+        state, keys, mask=valid & (op == OP_GET), backend=kernel_backend
+    )
+    state, put_ok = put(
+        state, keys, vals, mask=valid & (op == OP_PUT), backend=kernel_backend
+    )
     status = jnp.where(
         op == OP_GET, found.astype(I32), jnp.where(op == OP_PUT, put_ok.astype(I32), 0)
     )

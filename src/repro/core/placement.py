@@ -90,6 +90,21 @@ def memory_space_for(tier: Tier):
     return pltpu.ANY  # compiler-placed (HBM) — kernel DMAs tiles explicitly
 
 
+def kernel_operand_spaces(regions: list[Region],
+                          vmem_budget: int = VMEM_BUDGET) -> dict:
+    """BlockSpec memory spaces for a kernel's operands, keyed by region name.
+
+    The Pallas wrappers (hash_probe, embedding_reduce) declare one Region
+    per operand — per-step staged blocks are small and hot, bulk walked or
+    scattered arrays are streaming — and consume the same Fig. 5 decision
+    the host-side placement applies: VMEM-tier regions become pipelined
+    VMEM staging blocks, everything else stays compiler-placed (ANY/HBM),
+    with the kernel's index maps doing the explicit tile DMA.
+    """
+    tiers = plan(regions, vmem_budget)
+    return {name: memory_space_for(t) for name, t in tiers.items()}
+
+
 def device_put_tier(x, tier: Tier):
     """Apply the placement to a live array (host tier uses memory kinds)."""
     if tier is Tier.HOST:

@@ -30,7 +30,10 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 I32 = jnp.int32
 
@@ -207,7 +210,7 @@ def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
         return new_rep, ack, mk & ~pr_f
 
     rep_specs = jax.tree_util.tree_map(lambda _: P(axis), chain)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         inner, mesh=mesh,
         in_specs=(rep_specs, P(), P()),
         out_specs=(rep_specs, P(), P()),

@@ -25,11 +25,15 @@ def request_words(cfg: tx.TxConfig) -> int:
     return tx.tx_words(cfg)
 
 
-def app_step(chain: tx.ReplicaState, payloads, valid, cfg: tx.TxConfig):
+def app_step(chain: tx.ReplicaState, payloads, valid, cfg: tx.TxConfig, *,
+             kernel_backend=None):
     """Engine hook. payloads: (B, tx_words). A zero count header = no-op.
 
     Returns (chain, responses (B, tx_words)) where responses carry the
-    commit/deferred status in word 0."""
+    commit/deferred status in word 0. ``kernel_backend`` is accepted for
+    uniform engine binding; the transaction walk has no Pallas kernel yet
+    (see ROADMAP open items), so every backend runs the jnp path."""
+    del kernel_backend
     n_ops = payloads[:, 0]
     live = valid & (n_ops > 0)
     chain, committed, deferred = tx.chain_commit_local(chain, payloads, cfg, live)

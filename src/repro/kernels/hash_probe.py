@@ -1,15 +1,29 @@
-"""Pallas kernel: batched hash-table GET walk (ORCA-KV §IV-A).
+"""Pallas kernels: batched hash-table GET walk + PUT commit (ORCA-KV §IV-A).
 
 The APU's data-structure walker does three dependent memory accesses per GET
-(primary bucket, overflow bucket, value row). On TPU the walk splits into
-two pipelined passes, each a scalar-prefetch gather so the next request's
-bucket is in flight while the current one is compared:
+(primary bucket, overflow bucket, value row) and four per PUT. On TPU the
+GET walk splits into two pipelined passes, each a scalar-prefetch gather so
+the next request's bucket is in flight while the current one is compared:
 
   pass 1 (``probe``):  buckets in, resolved pool pointer + found flag out
   pass 2 (``fetch``):  value rows gathered at the resolved pointers
 
-Hashes are computed by the jitted wrapper (they are ALU work, not memory
-work — the pipelined part is what the paper offloads).
+The PUT commit (``insert``) is the scatter mirror: the jitted wrapper plans
+the batch (hashes, dedupe, way ranking — ALU work; see
+``kvstore.plan_put``), then two scalar-prefetch scatter passes stream the
+planned writes through VMEM with ``input_output_aliases`` so untouched rows
+stay resident:
+
+  pass 1 (``_commit_buckets``): bucket rows gathered at the target bucket,
+      the chosen way overwritten in VMEM, written back in place — entries
+      are pre-sorted by target bucket so same-bucket writers share one
+      staged block (the DDIO-style "hot line stays in cache" path);
+  pass 2 (``_write_rows``):     value rows streamed to their pool slots.
+
+Dropped/no-op entries target a sentinel pad row (the ``mode="drop"``
+analogue), stripped before returning. Operand memory spaces come from
+``core.placement`` — the per-region TPH decision applied at kernel
+construction time.
 """
 from __future__ import annotations
 
@@ -19,6 +33,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import placement
+
+
+def _spaces(block_bytes: dict, bulk_bytes: dict) -> dict:
+    """Placement-fed BlockSpec memory spaces: per-step staged blocks are
+    small + hot (every grid step touches them), bulk scattered/aliased
+    arrays are streaming DMA targets."""
+    regions = [
+        placement.Region(n, nb, access_rate_hz=1e6) for n, nb in block_bytes.items()
+    ] + [
+        placement.Region(n, nb, streaming=True) for n, nb in bulk_bytes.items()
+    ]
+    return placement.kernel_operand_spaces(regions)
 
 
 def _probe_kernel(h1_ref, h2_ref, keys_ref, bk1_ref, bp1_ref, bk2_ref, bp2_ref, out_ref):
@@ -42,17 +70,26 @@ def probe(bucket_keys, bucket_ptr, keys, h1, h2, *, interpret: bool = True):
     h1/h2: (B,) bucket ids. Returns (found (B,) bool, ptr (B,) int32)."""
     b = keys.shape[0]
     w, kw = bucket_keys.shape[1], bucket_keys.shape[2]
+    sp = _spaces(
+        {"query": kw * 4, "bucket": w * kw * 4, "bptr": w * 4, "out": 8}, {}
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # h1, h2
         grid=(b,),
         in_specs=[
-            pl.BlockSpec((1, kw), lambda i, h1, h2: (i, 0)),
-            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h1[i], 0, 0)),
-            pl.BlockSpec((1, w), lambda i, h1, h2: (h1[i], 0)),
-            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h2[i], 0, 0)),
-            pl.BlockSpec((1, w), lambda i, h1, h2: (h2[i], 0)),
+            pl.BlockSpec((1, kw), lambda i, h1, h2: (i, 0),
+                         memory_space=sp["query"]),
+            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h1[i], 0, 0),
+                         memory_space=sp["bucket"]),
+            pl.BlockSpec((1, w), lambda i, h1, h2: (h1[i], 0),
+                         memory_space=sp["bptr"]),
+            pl.BlockSpec((1, w, kw), lambda i, h1, h2: (h2[i], 0, 0),
+                         memory_space=sp["bucket"]),
+            pl.BlockSpec((1, w), lambda i, h1, h2: (h2[i], 0),
+                         memory_space=sp["bptr"]),
         ],
-        out_specs=pl.BlockSpec((1, 2), lambda i, h1, h2: (i, 0)),
+        out_specs=pl.BlockSpec((1, 2), lambda i, h1, h2: (i, 0),
+                               memory_space=sp["out"]),
     )
     out = pl.pallas_call(
         _probe_kernel,
@@ -72,11 +109,14 @@ def fetch(pool, ptr, *, interpret: bool = True):
     """pool: (NP, VW); ptr: (B,) int32 (pre-clamped). Returns (B, VW)."""
     b = ptr.shape[0]
     vw = pool.shape[1]
+    sp = _spaces({"row": vw * 4}, {})
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b,),
-        in_specs=[pl.BlockSpec((1, vw), lambda i, ptr: (ptr[i], 0))],
-        out_specs=pl.BlockSpec((1, vw), lambda i, ptr: (i, 0)),
+        in_specs=[pl.BlockSpec((1, vw), lambda i, ptr: (ptr[i], 0),
+                               memory_space=sp["row"])],
+        out_specs=pl.BlockSpec((1, vw), lambda i, ptr: (i, 0),
+                               memory_space=sp["row"]),
     )
     return pl.pallas_call(
         _fetch_kernel,
@@ -95,3 +135,121 @@ def get(state_bucket_keys, state_bucket_ptr, state_pool, keys, h1, h2, *,
     ptr_safe = jnp.clip(ptr, 0, state_pool.shape[0] - 1)
     vals = fetch(state_pool, ptr_safe, interpret=interpret)
     return jnp.where(found[:, None], vals, 0), found
+
+
+def _commit_kernel(tb_ref, tw_ref, pv_ref, bkd_ref, bpd_ref, key_ref,
+                   bk_ref, bp_ref, ko_ref, po_ref):
+    i = pl.program_id(0)
+    # first writer of a bucket stages the current row; later same-bucket
+    # writers (consecutive after the wrapper's sort) reuse the VMEM copy
+    fresh = jnp.logical_or(i == 0, tb_ref[i] != tb_ref[i - 1])
+
+    @pl.when(fresh)
+    def _():
+        ko_ref[...] = bk_ref[...]
+        po_ref[...] = bp_ref[...]
+
+    w = bp_ref.shape[1]
+    wsel = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1) == tw_ref[i]
+    ko_ref[...] = jnp.where(wsel[..., None], key_ref[...][:, None, :], ko_ref[...])
+    po_ref[...] = jnp.where(wsel, pv_ref[i], po_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def commit_buckets(bucket_keys, bucket_ptr, keys, tb, tw, bptr_val, *,
+                   interpret: bool = True):
+    """Scatter pass 1: set way ``tw[i]`` of bucket row ``tb[i]`` to
+    (keys[i], bptr_val[i]). ``bucket_keys``/``bucket_ptr`` carry a sentinel
+    pad row at index NB that absorbs dropped entries; ``tb`` must be sorted
+    (the wrapper sorts) so duplicate buckets are consecutive."""
+    b, kw = keys.shape
+    w = bucket_ptr.shape[1]
+    sp = _spaces(
+        {"key": kw * 4, "bucket": w * kw * 4, "bptr": w * 4},
+        {"bucket_store": bucket_keys.nbytes, "bptr_store": bucket_ptr.nbytes},
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # tb, tw, bptr_val
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=sp["bucket_store"]),  # aliased dst
+            pl.BlockSpec(memory_space=sp["bptr_store"]),  # aliased dst
+            pl.BlockSpec((1, kw), lambda i, tb, tw, pv: (i, 0),
+                         memory_space=sp["key"]),
+            pl.BlockSpec((1, w, kw), lambda i, tb, tw, pv: (tb[i], 0, 0),
+                         memory_space=sp["bucket"]),
+            pl.BlockSpec((1, w), lambda i, tb, tw, pv: (tb[i], 0),
+                         memory_space=sp["bptr"]),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w, kw), lambda i, tb, tw, pv: (tb[i], 0, 0),
+                         memory_space=sp["bucket"]),
+            pl.BlockSpec((1, w), lambda i, tb, tw, pv: (tb[i], 0),
+                         memory_space=sp["bptr"]),
+        ],
+    )
+    return pl.pallas_call(
+        _commit_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(bucket_keys.shape, bucket_keys.dtype),
+            jax.ShapeDtypeStruct(bucket_ptr.shape, bucket_ptr.dtype),
+        ],
+        # aliases index the full pallas_call operand list (prefetch included)
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(tb, tw, bptr_val, bucket_keys, bucket_ptr, keys, bucket_keys, bucket_ptr)
+
+
+def _write_kernel(wp_ref, pool_ref, val_ref, out_ref):
+    out_ref[...] = val_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def write_rows(pool, vals, wp, *, interpret: bool = True):
+    """Scatter pass 2: stream value row ``vals[i]`` to pool row ``wp[i]``.
+    ``pool`` carries a sentinel pad row at index NP for no-write entries."""
+    b, vw = vals.shape
+    sp = _spaces({"val": vw * 4}, {"pool_store": pool.nbytes})
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # wp
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=sp["pool_store"]),  # aliased dst
+            pl.BlockSpec((1, vw), lambda i, wp: (i, 0),
+                         memory_space=sp["val"]),
+        ],
+        out_specs=pl.BlockSpec((1, vw), lambda i, wp: (wp[i], 0),
+                               memory_space=sp["val"]),
+    )
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(wp, pool, vals)
+
+
+def insert(state_bucket_keys, state_bucket_ptr, state_pool, keys, vals,
+           tb, tw, bptr_val, wp, *, interpret: bool = True):
+    """Full planned PUT commit (see ``kvstore.plan_put`` for the plan).
+
+    Pads each array with one sentinel row (the ``mode="drop"`` analogue:
+    tb == NB / wp == NP land there), sorts entries by target so duplicate
+    targets share a staged block, runs the two scatter passes, strips the
+    pads. Returns (bucket_keys, bucket_ptr, pool)."""
+    nb = state_bucket_keys.shape[0]
+    np_ = state_pool.shape[0]
+    bk = jnp.concatenate([state_bucket_keys,
+                          jnp.zeros_like(state_bucket_keys[:1])], axis=0)
+    bp = jnp.concatenate([state_bucket_ptr,
+                          jnp.zeros_like(state_bucket_ptr[:1])], axis=0)
+    pool = jnp.concatenate([state_pool, jnp.zeros_like(state_pool[:1])], axis=0)
+    ob = jnp.argsort(tb, stable=True)
+    bk, bp = commit_buckets(
+        bk, bp, keys[ob], tb[ob], tw[ob], bptr_val[ob], interpret=interpret
+    )
+    op = jnp.argsort(wp, stable=True)
+    pool = write_rows(pool, vals[op], wp[op], interpret=interpret)
+    return bk[:nb], bp[:nb], pool[:np_]

@@ -22,6 +22,22 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_backend(backend=None):
+    """Map the engine's ``kernel_backend`` knob to ``(use_ref, interpret)``.
+
+    ``auto`` (and None) and ``pallas`` both take the Pallas path — native on
+    TPU, interpret mode elsewhere (which is how CPU containers validate the
+    kernels); ``ref`` routes to the pure-jnp oracles in :mod:`ref`.
+    """
+    if backend in (None, "auto", "pallas"):
+        return False, _auto_interpret()
+    if backend == "ref":
+        return True, False
+    raise ValueError(
+        f"unknown kernel_backend {backend!r} (expected auto | pallas | ref)"
+    )
+
+
 def embedding_reduce(table, idx, seg_ids, num_segments: int, *,
                      use_ref: bool = False, interpret=None):
     if use_ref:
@@ -39,6 +55,22 @@ def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2, *,
         return _ref.hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2)
     it = _auto_interpret() if interpret is None else interpret
     return _hp.get(bucket_keys, bucket_ptr, pool, keys, h1, h2, interpret=it)
+
+
+def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
+             *, use_ref: bool = False, interpret=None):
+    """Commit phase of a planned batched PUT (``kvstore.plan_put`` output).
+
+    Returns the updated (bucket_keys, bucket_ptr, pool) arrays."""
+    if use_ref:
+        return _ref.hash_put(
+            bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp
+        )
+    it = _auto_interpret() if interpret is None else interpret
+    return _hp.insert(
+        bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
+        interpret=it,
+    )
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,

@@ -16,6 +16,36 @@ def embedding_reduce(table, idx, seg_ids, num_segments: int):
     )
 
 
+def dlrm_embedding_reduce(tables, idx):
+    """DLRM-shaped reduction oracle: (T, R', D), (B, T, L) -> (B, T, D) f32.
+
+    Lookups are accumulated sequentially (an explicit add chain XLA keeps in
+    order) — the same association order as a per-row walk over the lookup
+    list, so results match both a host-side ``table[idx].sum(0)`` loop and
+    the Pallas kernel's per-segment VMEM accumulator bit-for-bit on f32.
+    """
+    t_ids = jnp.arange(tables.shape[0])[None, :, None]
+    g = tables[t_ids, idx].astype(F32)  # (B, T, L, D)
+    out = g[:, :, 0]
+    for l in range(1, g.shape[2]):
+        out = out + g[:, :, l]
+    return out
+
+
+def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp):
+    """Commit phase of a planned batched PUT (see ``kvstore.plan_put``).
+
+    tb/tw: (B,) target bucket/way (tb == NB means no bucket write);
+    bptr_val: (B,) pool pointer to store; wp: (B,) pool row for the value
+    write (wp == NP means no write). Out-of-range targets are dropped —
+    the jnp scatter analogue of the Pallas kernel's sentinel pad row.
+    """
+    bucket_keys = bucket_keys.at[tb, tw].set(keys, mode="drop")
+    bucket_ptr = bucket_ptr.at[tb, tw].set(bptr_val, mode="drop")
+    pool = pool.at[wp].set(vals, mode="drop")
+    return bucket_keys, bucket_ptr, pool
+
+
 def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
     """Two-bucket probe + value fetch. Returns (vals, found)."""
     def one(bids):

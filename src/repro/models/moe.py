@@ -19,7 +19,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import act_fn, dense_init
@@ -173,7 +176,7 @@ def moe_apply_tp_shardmap(params, x, cfg: ModelConfig, ctx: ParallelContext):
         y = jax.lax.psum(y, m)  # combine d_ff partial sums (TP all-reduce)
         return y.astype(xb.dtype).reshape(b_loc, s, d), aux
 
-    return jax.shard_map(
+    return compat.shard_map(
         inner, mesh=mesh,
         in_specs=(
             P(),
@@ -264,7 +267,7 @@ def moe_apply_ep_shardmap(params, x, cfg: ModelConfig, ctx: ParallelContext):
         y = jax.lax.all_gather(ym.astype(xb.dtype), m, axis=0, tiled=True)
         return y.reshape(b_loc, s, d), aux
 
-    return jax.shard_map(
+    return compat.shard_map(
         inner,
         mesh=mesh,
         in_specs=(

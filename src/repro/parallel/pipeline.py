@@ -19,7 +19,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
@@ -79,7 +82,7 @@ def pipeline_apply(layers, x, cfg: ModelConfig, ctx: ParallelContext,
     layer_specs = jax.tree_util.tree_map(
         lambda l: P(pod, *([None] * (l.ndim - 1))), layers
     )
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         inner, mesh=mesh,
         in_specs=(layer_specs, P(dspec, None, None), P(*([None] * positions.ndim))),
         out_specs=P(dspec, None, None),

@@ -1,0 +1,145 @@
+"""Tier-1 conftest: degrade gracefully when optional dev deps are missing.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject's ``dev``
+extra); nine test modules import it at collection time, which used to hard-
+fail collection in containers without the package. When it is absent we
+install a minimal deterministic stand-in before collection: ``@given`` draws
+a small fixed number of pseudo-random examples (seeded per test, so runs are
+reproducible) and ``settings``/``assume`` keep their decorator/guard roles.
+Property coverage degrades to a smoke sample instead of disappearing.
+
+Set ``REPRO_FALLBACK_EXAMPLES`` to widen the sample (default 5).
+"""
+from __future__ import annotations
+
+import importlib.util
+import inspect
+import os
+import random
+import sys
+import types
+
+if importlib.util.find_spec("hypothesis") is None:  # pragma: no branch
+    _MAX_EXAMPLES = int(os.environ.get("REPRO_FALLBACK_EXAMPLES", "5"))
+
+    class _AssumeFailed(Exception):
+        pass
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda r: f(self.draw(r)))
+
+        def filter(self, pred):
+            def draw(r):
+                for _ in range(100):
+                    x = self.draw(r)
+                    if pred(x):
+                        return x
+                raise _AssumeFailed("filter never satisfied")
+
+            return _Strategy(draw)
+
+    def _integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    def _sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(lambda r: elems[r.randrange(len(elems))])
+
+    def _just(value):
+        return _Strategy(lambda r: value)
+
+    def _tuples(*ss):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in ss))
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = min_size + 10 if max_size is None else max_size
+        return _Strategy(
+            lambda r: [elements.draw(r) for _ in range(r.randint(min_size, hi))]
+        )
+
+    def _assume(condition):
+        if not condition:
+            raise _AssumeFailed()
+        return True
+
+    def _settings(*_args, **kwargs):
+        max_examples = kwargs.get("max_examples")
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._fb_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            # hypothesis maps positional strategies onto the rightmost params
+            pos_names = names[len(names) - len(arg_strategies):] if arg_strategies else []
+            drawn = dict(zip(pos_names, arg_strategies))
+            drawn.update(kw_strategies)
+            keep = [p for n, p in sig.parameters.items() if n not in drawn]
+
+            def runner(**fixture_kwargs):
+                n = min(getattr(runner, "_fb_max_examples", _MAX_EXAMPLES),
+                        _MAX_EXAMPLES)
+                rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                ran = 0
+                for _attempt in range(max(50 * n, 200)):
+                    if ran >= n:
+                        break
+                    try:
+                        example = {k: s.draw(rnd) for k, s in drawn.items()}
+                        fn(**fixture_kwargs, **example)
+                    except _AssumeFailed:
+                        continue
+                    ran += 1
+                else:  # mirror hypothesis's Unsatisfied instead of spinning
+                    raise RuntimeError(
+                        f"{fn.__qualname__}: assume()/filter() rejected too "
+                        f"many examples ({ran}/{n} ran)"
+                    )
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__module__ = fn.__module__
+            runner.__doc__ = fn.__doc__
+            runner.__signature__ = sig.replace(parameters=keep)
+            runner.is_hypothesis_fallback = True
+            return runner
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.just = _just
+    _st.tuples = _tuples
+    _st.lists = _lists
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = _assume
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    _hyp.is_fallback_stub = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
