@@ -1,0 +1,243 @@
+"""LM serving decode: dense per-slot caches vs the shared KV page pool.
+
+Three comparisons, all on the reduced serving model (CPU-runnable; the
+full configs lower through the same code path):
+
+* **decode arm** — the decode step alone (``models.decode_step`` vs
+  ``models.paged_decode_step``) at full slot occupancy and equal load:
+  the apples-to-apples cost of routing the token walk through the page
+  pool. This is the acceptance comparison — paged-ref tracks dense while
+  touching only Σ-actual-token pages.
+* **engine arm** — one full ``lm_engine_step`` (admission + prefill
+  landing + decode + completion/release). The paged arm additionally pays
+  the batched allocator ops each step; at toy CPU scale that fixed
+  dispatch overhead is visible, and it amortizes as slots grow.
+* **skew arm** — decode attention alone under length skew (one long
+  sequence, many short ones). The dense cache must hold slots x max_len;
+  the pool holds Σ actual tokens rounded to pages — the §IV working-set
+  bet, measured as resident bytes alongside walk time for the jnp oracle
+  and the Pallas page-walk kernel (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import measure, row
+from repro.configs import get_config, reduced
+from repro.core import engine as eng
+from repro.launch.serve import build_engine
+from repro.models import attention as attn_mod
+from repro.models import (
+    decode_step, init_params, make_decode_state, prefill,
+)
+from repro.parallel.sharding import local_context
+from repro.serving import kv_cache as pk
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _fill(step, state, ecfg, cfg, rng):
+    """Inject prompts and tick until every slot is decoding (steady state)."""
+    sent = 0
+    total = 2 * ecfg.slots
+    for _ in range(64):
+        if int(jnp.sum(state.slot_active.astype(I32))) == ecfg.slots:
+            return state
+        qids, pls = [], []
+        for q in range(ecfg.num_queues):
+            if sent < total:
+                qids.append(q)
+                pls.append(rng.integers(
+                    1, cfg.vocab_size, ecfg.prompt_len).astype(np.int32))
+                sent += 1
+        if qids:
+            state = eng.lm_inject(
+                state, jnp.asarray(qids, I32), jnp.asarray(np.stack(pls)))
+        state = step(state)
+    raise RuntimeError("engine never reached full occupancy")
+
+
+def _dense_kv_bytes(cfg, ctx, ecfg) -> int:
+    from repro.models import transformer as tf
+
+    plan = tf.plan_for(cfg, ctx)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return (2 * cfg.num_layers * ecfg.slots * ecfg.cache_len
+            * plan.kv_phys * cfg.resolved_head_dim * itemsize)
+
+
+def _engine_arm(rows, cfg, ctx, params, slots):
+    p_len, g_len = 12, 12
+    base = dict(
+        num_queues=4, capacity=16, prompt_len=p_len, gen_len=g_len,
+        slots=slots, admit_per_step=2, page_size=8,
+        cache_len=p_len + g_len + 2,
+    )
+    arms = [("dense", dict(paged=False)),
+            ("paged_ref", dict(paged=True, kernel_backend="ref"))]
+    if not common.SMOKE or slots <= 4:
+        arms.append(("paged_pallas", dict(paged=True, kernel_backend="pallas")))
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    baseline = None
+    for name, kw in arms:
+        ecfg = eng.LMEngineConfig(**base, **kw)
+        step, state = build_engine(cfg, ctx, ecfg, params)
+        state = _fill(step, state, ecfg, cfg, np.random.default_rng(0))
+        t_us = measure(step, state, iters=8 if name == "paged_pallas" else 40)
+        if ecfg.paged:
+            pcfg = eng.lm_paged_kv_config(ecfg, cfg, ctx)
+            kv_bytes = int(pk.kv_bytes_in_use(state.decode, pcfg))
+        else:
+            kv_bytes = _dense_kv_bytes(cfg, ctx, ecfg)
+        if name == "dense":
+            baseline = t_us
+        extra = "" if baseline is None else f";vs_dense={baseline / t_us:.2f}x"
+        if name == "paged_pallas":
+            extra += f";mode={mode}"
+        rows.append(row(
+            f"lm_engine_{name}_slots{slots}", t_us,
+            f"steps_per_s={1e6 / t_us:.1f};tok_per_s={slots * 1e6 / t_us:.1f};"
+            f"kv_bytes={kv_bytes}" + extra,
+        ))
+
+
+def _decode_arm(rows, cfg, ctx, params, slots):
+    """Decode step alone at full occupancy — the acceptance comparison."""
+    from repro.models import paged_decode_step, prefill_kv
+    from repro.models.model import make_paged_kv_config
+
+    p_len, g_len, ps = 12, 12, 8
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (slots, p_len)), I32)
+    st = make_decode_state(cfg, ctx, slots, p_len + g_len + 2)
+    st, lg = prefill(params, prompts, st, cfg, ctx)
+    toks = jnp.argmax(lg, -1).astype(I32)
+    dense_fn = jax.jit(lambda t, s: decode_step(params, t, s, cfg, ctx))
+    t_dense = measure(dense_fn, toks, st, iters=60)
+    rows.append(row(
+        f"lm_decode_dense_slots{slots}", t_dense,
+        f"tok_per_s={slots * 1e6 / t_dense:.1f}",
+    ))
+
+    mppr = -(-(p_len + g_len - 1) // ps)
+    pcfg = make_paged_kv_config(
+        cfg, ctx, num_pages=slots * mppr, page_size=ps,
+        max_pages_per_seq=mppr)
+    kv = pk.make(pcfg, batch=slots, dtype=jnp.float32)
+    k, v, _ = prefill_kv(params, prompts, cfg, ctx)
+    kv, _ = pk.prefill_into_pages(
+        kv, pcfg, jnp.arange(slots, dtype=I32), k, v,
+        jnp.ones((slots,), bool))
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    for bk in (("ref",) if common.SMOKE else ("ref", "pallas")):
+        fn = jax.jit(lambda t, s, b=bk: paged_decode_step(
+            params, t, s, pcfg, cfg, ctx, kernel_backend=b)[:2])
+        t_paged = measure(fn, toks, kv, iters=8 if bk == "pallas" else 60)
+        extra = f";mode={mode}" if bk == "pallas" else ""
+        rows.append(row(
+            f"lm_decode_paged_{bk}_slots{slots}", t_paged,
+            f"tok_per_s={slots * 1e6 / t_paged:.1f};"
+            f"vs_dense={t_dense / t_paged:.2f}x" + extra,
+        ))
+
+
+def _paged_from_dense(cfg_pk, kc, vc, lengths):
+    """Build a filled pool state from a dense (B, S, KVH, HD) cache."""
+    b, s, kvh, hd = kc.shape
+    ps = cfg_pk.page_size
+    table = np.full((b, cfg_pk.max_pages_per_seq), -1, np.int32)
+    kp = np.zeros((1, cfg_pk.num_pages + 1, ps, kvh, hd), np.float32)
+    vp = np.zeros_like(kp)
+    nxt = 0
+    for i in range(b):
+        for t in range(int(lengths[i])):
+            if t % ps == 0:
+                table[i, t // ps] = nxt
+                nxt += 1
+            kp[0, table[i, t // ps], t % ps] = kc[i, t]
+            vp[0, table[i, t // ps], t % ps] = vc[i, t]
+    assert nxt <= cfg_pk.num_pages
+    free = np.setdiff1d(np.arange(cfg_pk.num_pages), table[table >= 0])
+    stack = np.concatenate([free, np.zeros(cfg_pk.num_pages - len(free), np.int32)])
+    return pk.PagedKVState(
+        k_pages=jnp.asarray(kp), v_pages=jnp.asarray(vp),
+        page_table=jnp.asarray(table), lengths=jnp.asarray(lengths, jnp.int32),
+        free_stack=jnp.asarray(stack, jnp.int32),
+        free_top=jnp.asarray(len(free), jnp.int32),
+    )
+
+
+def _skew_arm(rows):
+    b, kvh, g, hd = 8, 2, 4, 16
+    max_len = 64 if common.SMOKE else 256
+    ps = 16
+    rng = np.random.default_rng(1)
+    lengths = np.full((b,), 16, np.int64)
+    lengths[0] = max_len  # one hot sequence, the rest short
+    total_pages = int(sum(-(-l // ps) for l in lengths))
+    cfg_pk = pk.PagedKVConfig(
+        num_pages=total_pages, page_size=ps,
+        max_pages_per_seq=-(-max_len // ps), kv_heads=kvh, head_dim=hd,
+        layers=1,
+    )
+    kc = rng.normal(size=(b, max_len, kvh, hd)).astype(np.float32)
+    vc = rng.normal(size=(b, max_len, kvh, hd)).astype(np.float32)
+    for i in range(b):
+        kc[i, lengths[i]:] = 0.0
+        vc[i, lengths[i]:] = 0.0
+    state = _paged_from_dense(cfg_pk, kc, vc, lengths)
+    q = jnp.asarray(rng.normal(size=(b, 1, kvh * g, hd)), F32)
+    qg = q[:, 0].reshape(b, kvh, g, hd) * hd ** -0.5
+
+    dense_fn = jax.jit(attn_mod.decode_attention)
+    t_dense = measure(
+        dense_fn, q, jnp.asarray(kc), jnp.asarray(vc),
+        jnp.asarray(lengths, I32),
+    )
+    attend = {
+        bk: jax.jit(functools.partial(
+            lambda st, qq, backend: pk.attend(st, cfg_pk, 0, qq, backend=backend),
+            backend=bk,
+        ))
+        for bk in ("ref", "pallas")
+    }
+    t_ref = measure(attend["ref"], state, qg)
+    t_pal = measure(attend["pallas"], state, qg)
+    dense_bytes = 2 * b * max_len * kvh * hd * 4
+    paged_bytes = int(pk.kv_bytes_in_use(state, cfg_pk))
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    rows.append(row(
+        f"lm_skew_attend_dense_b{b}_max{max_len}", t_dense,
+        f"kv_bytes={dense_bytes}",
+    ))
+    rows.append(row(
+        f"lm_skew_attend_paged_ref_b{b}_max{max_len}", t_ref,
+        f"kv_bytes={paged_bytes};bytes_vs_dense={dense_bytes / paged_bytes:.1f}x",
+    ))
+    rows.append(row(
+        f"lm_skew_attend_paged_pallas_b{b}_max{max_len}", t_pal,
+        f"kv_bytes={paged_bytes};mode={mode}",
+    ))
+
+
+def run():
+    rows = []
+    cfg = reduced(get_config("qwen1.5-0.5b")).replace(dtype="float32")
+    ctx = local_context()
+    params = init_params(jax.random.key(0), cfg, ctx)
+    for slots in ((4,) if common.SMOKE else (4, 8)):
+        _decode_arm(rows, cfg, ctx, params, slots)
+        _engine_arm(rows, cfg, ctx, params, slots)
+    _skew_arm(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

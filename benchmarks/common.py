@@ -9,10 +9,19 @@ the claim is about compute/memory behaviour (e.g. MERCI gather reduction).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+#: --smoke mode (scripts/tier1.sh --smoke / benchmarks/run.py --smoke):
+#: a few iterations per kernel arm so kernel-path breakage fails fast in
+#: tier-1; numbers are not meaningful and are flagged as such on persist.
+SMOKE = False
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # --- transport constants (paper §II-B / §VI + v5e specs) -------------------
 PCIE_RTT_US = 1.0          # "at least 1us" per PCIe round trip (§II-B)
@@ -31,6 +40,8 @@ TPU_V5E_W = 200.0          # v5e chip+HBM under load (public estimates)
 
 def measure(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     """Median wall time per call in microseconds (blocking on outputs)."""
+    if SMOKE:
+        iters, warmup = 2, 1
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -55,3 +66,27 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line)
     return line
+
+
+def persist(app: str, rows: list) -> str:
+    """Write a benchmark's rows to ``BENCH_<app>.json`` at the repo root —
+    the per-PR perf trajectory the driver diffs. Rows are the CSV lines
+    :func:`row` returns; ``derived`` key=val pairs are kept verbatim."""
+    parsed = []
+    for line in rows or []:
+        name, us, derived = line.split(",", 2)
+        parsed.append(
+            {"name": name, "us_per_call": float(us), "derived": derived}
+        )
+    payload = {
+        "app": app,
+        "jax_backend": jax.default_backend(),
+        "smoke": SMOKE,
+        "unix_time": int(time.time()),
+        "rows": parsed,
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{app}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path

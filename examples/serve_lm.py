@@ -17,12 +17,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode through the shared KV page pool")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "ref"))
     args = ap.parse_args()
     serve_mod.main([
         "--arch", args.arch,
         "--requests", str(args.requests),
         "--prompt-len", "12", "--gen-len", "8",
-    ])
+        "--backend", args.backend,
+    ] + (["--paged"] if args.paged else []))
 
 
 if __name__ == "__main__":

@@ -2,6 +2,21 @@
 # Tier-1 verify: the ROADMAP command, verbatim, runnable from anywhere.
 # (pyproject's pytest pythonpath covers `python -m pytest` too; this keeps
 # the documented PYTHONPATH form working in environments that predate it.)
+#
+#   scripts/tier1.sh [--smoke] [pytest args...]
+#
+# --smoke additionally runs every benchmark for a few iterations after the
+# test suite, so kernel-path breakage that only the benches exercise
+# (bench-only configs, persistence, the Pallas arms) fails fast in tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+SMOKE=0
+if [[ "${1:-}" == "--smoke" ]]; then
+  SMOKE=1
+  shift
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [[ "$SMOKE" == 1 ]]; then
+  echo "--- smoke benchmarks (a few iterations per arm) ---"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
+fi

@@ -9,7 +9,14 @@ steps (``run_steps``) — the unsignaled-WQE / batched-doorbell analogue.
 Apps plug in as ``app_fn(app_state, payloads, valid) -> (app_state,
 responses)`` — kvstore/transaction/dlrm provide theirs; the LM serving
 engine below specializes the same loop for continuous-batching token
-generation (requests = prompts, responses = generated sequences).
+generation (requests = prompts, responses = generated sequences). Its
+decode substrate is either dense per-slot ring caches or — with
+``LMEngineConfig.paged`` — the shared KV page pool of
+``serving/kv_cache.py`` walked by the Pallas paged-attention kernel:
+slots allocate pages on admission (back-pressured by page credit, the
+ring-credit analogue for server memory), append per-token KV during
+decode, and release pages on completion, so resident KV is bounded by
+Σ actual tokens instead of slots × max_len.
 """
 from __future__ import annotations
 
@@ -182,7 +189,19 @@ class LMEngineConfig(NamedTuple):
     gen_len: int = 16  # tokens generated per request
     slots: int = 8  # continuous-batching slots
     admit_per_step: int = 2  # prefill admissions per step
-    cache_len: int = 64
+    cache_len: int = 64  # dense path: per-slot ring-cache length
+    # --- paged decode path (serving/kv_cache shared page pool) ------------
+    # paged=True replaces the dense per-slot layer caches with a PagedKVState
+    # page pool: slots allocate pages on admission, append per-token KV
+    # during decode, release on completion; admission is back-pressured by
+    # page credit (the ring-credit analogue for server memory).
+    paged: bool = False
+    page_size: int = 8  # tokens per KV page
+    num_pages: int = 0  # pool size; 0 = worst case (slots x pages/request)
+    # APU kernel dispatch for the page walk: "auto" = Pallas (native on
+    # TPU, interpret mode elsewhere), "pallas" = same spelled explicitly,
+    # "ref" = the jnp oracle.
+    kernel_backend: str = "auto"
 
 
 class LMEngineState(NamedTuple):
@@ -218,6 +237,41 @@ def lm_make(cfg: LMEngineConfig, decode_state) -> LMEngineState:
     )
 
 
+def lm_max_pages_per_request(cfg: LMEngineConfig) -> int:
+    """Worst-case pages a request ever holds: the prompt plus every decoded
+    token's kv except the final one (never stored — it is never attended)."""
+    tokens = cfg.prompt_len + max(cfg.gen_len - 1, 1)
+    return -(-tokens // cfg.page_size)
+
+
+def lm_paged_kv_config(cfg: LMEngineConfig, model_cfg, ctx):
+    """PagedKVConfig for this engine+model pair (pool auto-sized to the
+    dense-equivalent worst case when ``cfg.num_pages`` is 0)."""
+    from repro.models.model import make_paged_kv_config
+
+    mppr = lm_max_pages_per_request(cfg)
+    num_pages = cfg.num_pages or cfg.slots * mppr
+    if num_pages < mppr:
+        raise ValueError(
+            f"num_pages={num_pages} cannot hold even one request "
+            f"({mppr} pages at page_size={cfg.page_size}); admission credit "
+            f"would be 0 forever"
+        )
+    return make_paged_kv_config(
+        model_cfg, ctx, num_pages=num_pages, page_size=cfg.page_size,
+        max_pages_per_seq=mppr,
+    )
+
+
+def lm_make_paged(cfg: LMEngineConfig, model_cfg, ctx) -> LMEngineState:
+    """Engine state whose decode side is the shared page pool."""
+    from repro.serving import kv_cache as pk
+
+    pcfg = lm_paged_kv_config(cfg, model_cfg, ctx)
+    kv = pk.make(pcfg, batch=cfg.slots, dtype=jnp.dtype(model_cfg.dtype))
+    return lm_make(cfg, kv)
+
+
 def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None) -> LMEngineState:
     n = queue_ids.shape[0]
     if mask is None:
@@ -229,9 +283,26 @@ def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None) -> LMEngineSt
 
 
 def lm_engine_step(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
-                   params, prefill_fn, decode_fn):
+                   params, prefill_fn=None, decode_fn=None):
     """Admission (prefill into free slots) + one decode step for all active
-    slots + completion (responses to rings). All shapes static."""
+    slots + completion (responses to rings). All shapes static.
+
+    ``cfg.paged`` selects the decode substrate: the dense per-slot ring
+    caches (``state.decode`` is a models.DecodeState; ``prefill_fn`` /
+    ``decode_fn`` required) or the shared page pool (``state.decode`` is a
+    serving.kv_cache.PagedKVState; ``prefill_fn`` optionally overrides the
+    default ``models.prefill_kv``)."""
+    if cfg.paged:
+        return _lm_step_paged(state, cfg, model_cfg, ctx, params, prefill_fn)
+    if prefill_fn is None or decode_fn is None:
+        raise ValueError("dense lm_engine_step needs prefill_fn and decode_fn")
+    return _lm_step_dense(
+        state, cfg, model_cfg, ctx, params, prefill_fn, decode_fn
+    )
+
+
+def _lm_step_dense(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
+                   params, prefill_fn, decode_fn):
     from repro.models.model import DecodeState
 
     nslots = cfg.slots
@@ -304,14 +375,115 @@ def lm_engine_step(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
     )
 
     # --- completions -------------------------------------------------------
+    # route by the post-admission slot_queue: a request admitted and
+    # finished in the same step (gen_len <= 2) has no entry in the stale one
     finished = active & (slot_done >= cfg.gen_len)
     resp = _enqueue_multi(
-        state.resp, jnp.clip(state.slot_queue, 0, cfg.num_queues - 1),
+        state.resp, jnp.clip(slot_queue, 0, cfg.num_queues - 1),
         slot_out, finished,
     )
     slot_active = slot_active & ~finished
     return LMEngineState(
         req=req, resp=resp, cpoll=cpo, sched=sch, decode=dec_final,
+        slot_active=slot_active,
+        slot_queue=jnp.where(finished, -1, slot_queue),
+        slot_done=jnp.where(finished, 0, slot_done),
+        slot_out=slot_out, slot_last=slot_last,
+        steps=state.steps + 1,
+        completed=state.completed + jnp.sum(finished.astype(I32)),
+    )
+
+
+def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
+                   params, prefill_fn=None):
+    """The paged-decode engine step: admission lands prompt KV directly in
+    pages, decode appends per-token KV through the paged-attention walk,
+    completion releases pages back to the pool."""
+    from repro.models.model import paged_decode_step, prefill_kv
+    from repro.serving import kv_cache as pk
+
+    nslots = cfg.slots
+    pcfg = lm_paged_kv_config(cfg, model_cfg, ctx)
+    kv = state.decode
+    mppr = pcfg.max_pages_per_seq
+
+    # --- admission, back-pressured by page credit -------------------------
+    # Every admitted request may grow to `mppr` pages before it completes;
+    # admitting only what the pool can commit to means a mid-sequence page
+    # allocation can never fail — the same role ring-buffer credit plays
+    # for response slots (paper §III-A flow control).
+    avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
+    free = ~state.slot_active
+    n_free = jnp.sum(free.astype(I32))
+    n_active = nslots - n_free
+    credit = jnp.maximum(pcfg.num_pages - n_active * mppr, 0) // mppr
+    budget = jnp.minimum(jnp.minimum(n_free, credit), cfg.admit_per_step)
+    take, sch = sched.schedule(state.sched, avail, cfg.admit_per_step)
+    cum = jnp.cumsum(take)
+    take = jnp.where(cum <= budget, take, jnp.maximum(take - (cum - budget), 0))
+    cpo = cp.cpoll_partial(state.cpoll, jnp.arange(cfg.num_queues, dtype=I32), take)
+    qids, counts = sched.selected_queues(take)
+    prompts, srcq, valid = rb.gather_batch(
+        state.req, qids, counts, cfg.admit_per_step
+    )
+    req = rb.pop(state.req, qids, counts)
+
+    slot_ids = jnp.argsort(~free, stable=True)[: cfg.admit_per_step].astype(I32)
+    admit_ok = valid & (jnp.arange(cfg.admit_per_step) < n_free)
+
+    # prefill the admitted prompts; land their KV directly into pages
+    if prefill_fn is None:
+        adm_k, adm_v, adm_logits = prefill_kv(
+            params, prompts.astype(I32), model_cfg, ctx
+        )
+    else:
+        adm_k, adm_v, adm_logits = prefill_fn(params, prompts.astype(I32))
+    adm_next = jnp.argmax(adm_logits, axis=-1).astype(I32)
+    # the returned mask folds in the pool's all-or-nothing check: the page
+    # credit makes failure unreachable from lm_make_paged state, but a
+    # mismatched hand-built pool must not leave active slots with no pages
+    kv, admit_ok = pk.prefill_into_pages(
+        kv, pcfg, slot_ids, adm_k, adm_v, admit_ok
+    )
+    slot_tgt = jnp.where(admit_ok, slot_ids, nslots)
+
+    slot_active = state.slot_active.at[slot_tgt].set(True, mode="drop")
+    slot_queue = state.slot_queue.at[slot_tgt].set(
+        jnp.where(admit_ok, srcq, -1), mode="drop"
+    )
+    slot_done = state.slot_done.at[slot_tgt].set(0, mode="drop")
+    slot_last = state.slot_last.at[slot_tgt].set(adm_next, mode="drop")
+    slot_out = state.slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
+    slot_done = slot_done.at[slot_tgt].add(
+        jnp.where(admit_ok, 1, 0), mode="drop"
+    )
+
+    # --- decode one token for every active slot through the page walk -----
+    kv, logits, ok = paged_decode_step(
+        params, slot_last, kv, pcfg, model_cfg, ctx,
+        active=slot_active, kernel_backend=cfg.kernel_backend,
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(I32)
+    advance = slot_active & ok  # ok False = pool dry, slot stalls one step
+    write_pos = jnp.clip(slot_done, 0, cfg.gen_len - 1)
+    slot_out = jnp.where(
+        advance[:, None],
+        slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
+        slot_out,
+    )
+    slot_done = slot_done + advance.astype(I32)
+    slot_last = jnp.where(advance, nxt, slot_last)
+
+    # --- completions: responses out, pages back to the pool ---------------
+    finished = slot_active & (slot_done >= cfg.gen_len)
+    resp = _enqueue_multi(
+        state.resp, jnp.clip(slot_queue, 0, cfg.num_queues - 1),
+        slot_out, finished,
+    )
+    kv = pk.release_batch(kv, pcfg, finished)
+    slot_active = slot_active & ~finished
+    return LMEngineState(
+        req=req, resp=resp, cpoll=cpo, sched=sch, decode=kv,
         slot_active=slot_active,
         slot_queue=jnp.where(finished, -1, slot_queue),
         slot_done=jnp.where(finished, 0, slot_done),

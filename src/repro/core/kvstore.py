@@ -63,40 +63,22 @@ def hash_keys(keys, num_buckets: int, salt: int = 0):
     return (h % jnp.uint32(num_buckets)).astype(I32)
 
 
-def _match_ways(state: KVState, bids, keys):
-    """bids: (B,), keys: (B,KW) -> (hit (B,), way (B,), ptr (B,))."""
-    bk = state.bucket_keys[bids]  # (B, W, KW)
-    bp = state.bucket_ptr[bids]  # (B, W)
-    eq = jnp.all(bk == keys[:, None, :], axis=-1) & (bp >= 0)
-    hit = jnp.any(eq, axis=-1)
-    way = jnp.argmax(eq, axis=-1).astype(I32)
-    ptr = jnp.take_along_axis(bp, way[:, None], axis=-1)[:, 0]
-    return hit, way, jnp.where(hit, ptr, -1)
-
-
 def get(state: KVState, keys, mask=None, *, backend: Optional[str] = "ref"):
     """Batched GET. keys: (B, KW). Returns (vals (B, VW), found (B,)).
 
     Three gathers: primary bucket, overflow bucket, value pool. ``backend``
     picks the walk implementation: ``ref`` (default for direct library
-    calls — this is the oracle) or ``auto``/``pallas`` for the kernel fast
-    path; results are identical (integer data, single-match buckets)."""
+    calls — the ``kernels.ref`` oracle) or ``auto``/``pallas`` for the
+    kernel fast path; results are identical (integer data, single-match
+    buckets)."""
     nb = state.bucket_keys.shape[0]
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
     use_ref, interpret = kops.resolve_backend(backend or "ref")
-    if use_ref:
-        hit1, _, p1 = _match_ways(state, h1, keys)
-        hit2, _, p2 = _match_ways(state, h2, keys)
-        found = hit1 | hit2
-        ptr = jnp.where(hit1, p1, p2)
-        vals = state.pool[jnp.clip(ptr, 0, state.pool.shape[0] - 1)]
-        vals = jnp.where(found[:, None], vals, 0)
-    else:
-        vals, found = kops.hash_get(
-            state.bucket_keys, state.bucket_ptr, state.pool, keys, h1, h2,
-            interpret=interpret,
-        )
+    vals, found = kops.hash_get(
+        state.bucket_keys, state.bucket_ptr, state.pool, keys, h1, h2,
+        use_ref=use_ref, interpret=interpret,
+    )
     if mask is not None:
         found = found & mask
     return vals, found
@@ -140,9 +122,16 @@ class PutPlan(NamedTuple):
     ok: jax.Array  # (B,) per-request success
 
 
-def plan_put(state: KVState, keys, mask=None) -> PutPlan:
+def plan_put(state: KVState, keys, mask=None, *,
+             backend: Optional[str] = "ref") -> PutPlan:
     """Plan a batched PUT/UPDATE (dedupe, match, way ranking) without
-    touching the store. The commit phase (``ref``/Pallas) applies it."""
+    touching the store. The commit phase (``ref``/Pallas) applies it.
+
+    The way ranking and dedupe are ALU work and stay jnp, but the
+    existence check — the PUT's first two memory accesses — dispatches to
+    the Pallas ``probe`` kernel under ``backend in (auto, pallas)``, so a
+    kernel-backed PUT touches memory through kernels end to end (probe,
+    probe, bucket commit, value write)."""
     b = keys.shape[0]
     if mask is None:
         mask = jnp.ones((b,), bool)
@@ -150,6 +139,7 @@ def plan_put(state: KVState, keys, mask=None) -> PutPlan:
     np_ = state.pool.shape[0]
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
+    use_ref, interpret = kops.resolve_backend(backend or "ref")
 
     # dedupe identical keys in the batch: only the first LIVE instance
     # inserts, and only the last LIVE instance writes the value row
@@ -171,10 +161,12 @@ def plan_put(state: KVState, keys, mask=None) -> PutPlan:
     is_first_sorted = jnp.concatenate([jnp.ones((1,), bool), run_boundary])
     is_first = jnp.zeros((b,), bool).at[order].set(is_first_sorted)
 
-    hit1, way1, p1 = _match_ways(state, h1, keys)
-    hit2, way2, p2 = _match_ways(state, h2, keys)
-    exists = hit1 | hit2
-    ptr_existing = jnp.where(hit1, p1, p2)
+    # existence check (memory accesses 1+2): probe kernel or jnp oracle —
+    # both return ptr only where found, which is the only place it is read
+    exists, ptr_existing = kops.hash_probe(
+        state.bucket_keys, state.bucket_ptr, keys, h1, h2,
+        use_ref=use_ref, interpret=interpret,
+    )
 
     # --- inserts: two-phase so primary and spill writers never collide ---
     # phase 1: primary-bucket inserters rank among themselves per bucket
@@ -245,12 +237,13 @@ def put(state: KVState, keys, vals, mask=None, *,
     dropped and counted (the chained-allocation path of the paper, reported
     rather than allocated).
 
-    The plan (ALU work) is always jnp; ``backend`` picks the commit —
-    ``ref`` (oracle scatters, the default for direct calls) or
-    ``auto``/``pallas`` (the VMEM-staged scatter kernels). Both commits
-    write identical values, so the backends agree bit-for-bit.
+    ``backend`` picks both the plan's existence probe and the commit —
+    ``ref`` (oracle gathers/scatters, the default for direct calls) or
+    ``auto``/``pallas`` (the scalar-prefetch probe + VMEM-staged scatter
+    kernels: all four PUT memory accesses kernelized). Both backends
+    write identical values, so they agree bit-for-bit.
     """
-    plan = plan_put(state, keys, mask)
+    plan = plan_put(state, keys, mask, backend=backend)
     use_ref, interpret = kops.resolve_backend(backend or "ref")
     bucket_keys, bucket_ptr, pool = kops.hash_put(
         state.bucket_keys, state.bucket_ptr, state.pool, keys, vals,

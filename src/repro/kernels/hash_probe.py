@@ -37,16 +37,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import placement
 
 
-def _spaces(block_bytes: dict, bulk_bytes: dict) -> dict:
-    """Placement-fed BlockSpec memory spaces: per-step staged blocks are
-    small + hot (every grid step touches them), bulk scattered/aliased
-    arrays are streaming DMA targets."""
-    regions = [
-        placement.Region(n, nb, access_rate_hz=1e6) for n, nb in block_bytes.items()
-    ] + [
-        placement.Region(n, nb, streaming=True) for n, nb in bulk_bytes.items()
-    ]
-    return placement.kernel_operand_spaces(regions)
+# Placement-fed BlockSpec memory spaces: per-step staged blocks are
+# small + hot (every grid step touches them), bulk scattered/aliased
+# arrays are streaming DMA targets.
+_spaces = placement.block_spaces
 
 
 def _probe_kernel(h1_ref, h2_ref, keys_ref, bk1_ref, bp1_ref, bk2_ref, bp2_ref, out_ref):

@@ -49,6 +49,18 @@ def embedding_reduce(table, idx, seg_ids, num_segments: int, *,
     return jnp.where(counts[:, None] > 0, out, 0.0)
 
 
+def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2, *,
+               use_ref: bool = False, interpret=None):
+    """Two-bucket existence probe. Returns (found (B,), ptr (B,)).
+
+    The first two memory accesses of both the GET walk and the PUT plan
+    (``kvstore.plan_put``'s existence check) — one scalar-prefetch pass."""
+    if use_ref:
+        return _ref.hash_probe(bucket_keys, bucket_ptr, keys, h1, h2)
+    it = _auto_interpret() if interpret is None else interpret
+    return _hp.probe(bucket_keys, bucket_ptr, keys, h1, h2, interpret=it)
+
+
 def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2, *,
              use_ref: bool = False, interpret=None):
     if use_ref:

@@ -7,6 +7,19 @@ while page ``p`` is being reduced (online softmax), the same
 memory-level-parallelism pattern as the other walkers. Query-head groups
 (GQA) ride along the kv-head block so the MXU sees a (G, hd) × (hd, PS)
 matmul per page.
+
+Dead page-table entries (-1, or pages past the sequence length) are masked
+in the scalar-prefetch index map: they resolve to the **last physical
+page** — the pool's zero sentinel when the caller allocates one
+(``serving.kv_cache.make`` does) — rather than silently refetching live
+page 0. Compute for dead pages is skipped either way via the length mask;
+the index-map mask keeps the dead DMA off other sequences' live data.
+
+Operand memory spaces come from ``core.placement.block_spaces`` — the
+per-region TPH/DDIO decision applied at kernel construction time: the tiny
+q/output blocks and the per-step staged KV page are VMEM-tier (hot,
+touched every grid step); the pool itself stays compiler-placed with the
+index map doing the explicit page DMA.
 """
 from __future__ import annotations
 
@@ -16,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import placement
 
 NEG_INF = -1e30
 
@@ -61,27 +76,42 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool = True):
     """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd);
-    page_table: (B, MaxP) int32; lengths: (B,). Returns (B, KVH, G, hd) f32.
+    page_table: (B, MaxP) int32, -1 = unmapped; lengths: (B,).
+    Returns (B, KVH, G, hd) f32.
     """
     b, kvh, g, hd = q.shape
     n_pages, ps = k_pages.shape[0], k_pages.shape[1]
     maxp = page_table.shape[1]
 
     def pt_idx(bb, kv, p, pt, ln):
-        # clamp dead pages to page 0 (cheap refetch, compute skipped)
+        # dead entries (-1 / past the sequence length) resolve to the last
+        # physical page — the zero sentinel when the pool allocates one —
+        # instead of refetching live page 0; compute is skipped regardless.
         page = pt[bb, p]
-        return (jnp.clip(page, 0, n_pages - 1), 0, kv, 0)
+        dead = (page < 0) | (p * ps >= ln[bb])
+        return (jnp.where(dead, n_pages - 1, jnp.clip(page, 0, n_pages - 1)),
+                0, kv, 0)
 
+    sp = placement.block_spaces(
+        {
+            "q": g * hd * 4,
+            "page": ps * hd * k_pages.dtype.itemsize,
+            "out": g * hd * 4,
+        },
+        {},
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # page_table, lengths
         grid=(b, kvh, maxp),
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd), pt_idx),
-            pl.BlockSpec((1, ps, 1, hd), pt_idx),
+            pl.BlockSpec((1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0),
+                         memory_space=sp["q"]),
+            pl.BlockSpec((1, ps, 1, hd), pt_idx, memory_space=sp["page"]),
+            pl.BlockSpec((1, ps, 1, hd), pt_idx, memory_space=sp["page"]),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0)
+            (1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0),
+            memory_space=sp["out"],
         ),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),

@@ -46,8 +46,10 @@ def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp):
     return bucket_keys, bucket_ptr, pool
 
 
-def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
-    """Two-bucket probe + value fetch. Returns (vals, found)."""
+def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2):
+    """Two-bucket existence probe (the first two of a GET/PUT's memory
+    accesses). Returns (found (B,) bool, ptr (B,) int32 — 0 where missed),
+    mirroring the Pallas ``hash_probe.probe`` kernel exactly."""
     def one(bids):
         bk = bucket_keys[bids]
         bp = bucket_ptr[bids]
@@ -60,18 +62,27 @@ def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
     hit2, p2 = one(h2)
     found = hit1 | hit2
     ptr = jnp.where(hit1, p1, p2)
+    return found, jnp.where(found, ptr, 0)
+
+
+def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
+    """Two-bucket probe + value fetch. Returns (vals, found)."""
+    found, ptr = hash_probe(bucket_keys, bucket_ptr, keys, h1, h2)
     vals = pool[jnp.clip(ptr, 0, pool.shape[0] - 1)]
     return jnp.where(found[:, None], vals, 0), found
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths):
-    """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd)."""
+    """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd);
+    page_table entries < 0 (unmapped) resolve to the last physical page —
+    the pool's zero sentinel — matching the kernel's index-map mask."""
     b, kvh, g, hd = q.shape
     np_, ps = k_pages.shape[0], k_pages.shape[1]
     maxp = page_table.shape[1]
+    pt = jnp.where(page_table < 0, np_ - 1, jnp.clip(page_table, 0, np_ - 1))
     # materialize per-sequence K/V: (B, MaxP*PS, KVH, hd)
-    kk = k_pages[jnp.clip(page_table, 0, np_ - 1)].reshape(b, maxp * ps, kvh, hd)
-    vv = v_pages[jnp.clip(page_table, 0, np_ - 1)].reshape(b, maxp * ps, kvh, hd)
+    kk = k_pages[pt].reshape(b, maxp * ps, kvh, hd)
+    vv = v_pages[pt].reshape(b, maxp * ps, kvh, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", q.astype(F32), kk.astype(F32))
     pos = jnp.arange(maxp * ps)[None, :]
     s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, NEG_INF)

@@ -29,6 +29,14 @@ from repro.parallel.sharding import local_context
 
 
 def build_engine(cfg, ctx, ecfg: eng.LMEngineConfig, params):
+    if ecfg.paged:
+        # page-pool decode: admission prefill lands prompt KV directly in
+        # pages (default models.prefill_kv), no per-slot dense caches
+        step = jax.jit(
+            lambda s: eng.lm_engine_step(s, ecfg, cfg, ctx, params)
+        )
+        return step, eng.lm_make_paged(ecfg, cfg, ctx)
+
     def prefill_fn(p, prompts):
         st = make_decode_state(cfg, ctx, ecfg.admit_per_step, ecfg.cache_len)
         return prefill(p, prompts, st, cfg, ctx, chunk=16)
@@ -53,6 +61,12 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--queues", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode through the shared KV page pool")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="kernel dispatch for the paged-attention walk")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch)).replace(dtype="float32")
@@ -62,6 +76,8 @@ def main(argv=None):
         num_queues=args.queues, capacity=16,
         prompt_len=args.prompt_len, gen_len=args.gen_len,
         slots=8, admit_per_step=2, cache_len=args.prompt_len + args.gen_len + 4,
+        paged=args.paged, page_size=args.page_size,
+        kernel_backend=args.backend,
     )
     step, state = build_engine(cfg, ctx, ecfg, params)
 

@@ -249,6 +249,30 @@ def chunked_attention(
 # Decode attention against a contiguous KV cache
 # ---------------------------------------------------------------------------
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           use_ref: bool = False, interpret=None):
+    """Decode attention against a paged KV pool (one layer's page slice).
+
+    q: (B, 1, H, hd); k_pages/v_pages: (NP, PS, KV, hd) with the new
+    token's kv already written at position ``lengths - 1``; page_table:
+    (B, MaxP) int32 (-1 = unmapped, resolved to the pool's zero sentinel
+    inside the walk); lengths: (B,) valid tokens. Dispatches to the Pallas
+    scalar-prefetch page-walk kernel or the jnp oracle; returns
+    (B, 1, H, hd) in q's dtype.
+    """
+    from repro.kernels import ops as kops
+
+    B, _, H, hd = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, hd).astype(F32) * hd ** -0.5
+    out = kops.paged_attention(
+        qg, k_pages, v_pages, page_table, lengths,
+        use_ref=use_ref, interpret=interpret,
+    )
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0):
     """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); lengths: (B,) valid len
     (the new token's k/v must already be written at ``lengths - 1``)."""

@@ -161,6 +161,112 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# Serving: paged decode (shared page pool instead of per-slot ring caches)
+# ---------------------------------------------------------------------------
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """The paged path stores pages in bshd layout and walks full causal
+    context; families with recurrent state or windowed/dot-layout caches
+    keep the dense decode path."""
+    if cfg.attn_free or cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"paged decode needs a pure-attention family, got {cfg.family}"
+        )
+    if cfg.kv_cache_layout != "bshd":
+        raise NotImplementedError("paged decode stores pages in bshd layout")
+    if cfg.sliding_window:
+        raise NotImplementedError("paged decode does not window the page walk")
+
+
+def make_paged_kv_config(cfg: ModelConfig, ctx: ParallelContext, *,
+                         num_pages: int, page_size: int,
+                         max_pages_per_seq: int):
+    """A PagedKVConfig matching this model's physical KV geometry."""
+    from repro.serving.kv_cache import PagedKVConfig
+
+    check_paged_support(cfg)
+    plan = tf.plan_for(cfg, ctx)
+    return PagedKVConfig(
+        num_pages=num_pages, page_size=page_size,
+        max_pages_per_seq=max_pages_per_seq,
+        kv_heads=plan.kv_phys, head_dim=cfg.resolved_head_dim,
+        layers=cfg.num_layers,
+    )
+
+
+def paged_decode_step(
+    params, tokens, kv, pcfg, cfg: ModelConfig, ctx: ParallelContext, *,
+    active=None, kernel_backend: Optional[str] = "auto",
+):
+    """One token per active sequence against the shared page pool.
+
+    tokens: (B,); kv: ``serving.kv_cache.PagedKVState`` whose batch is the
+    slot count; active: (B,) bool (inactive slots neither append nor
+    advance — their logits are garbage the caller must mask). Each token's
+    kv is appended to the slot's current page (allocating a fresh page at
+    boundaries), then every layer attends through the paged walk dispatched
+    per ``kernel_backend`` (auto | pallas | ref). Returns
+    (kv', logits (B, V), ok (B,)) — ok False where the pool was dry (the
+    slot stalled: nothing appended, logits invalid, retry after release).
+    """
+    from repro.kernels import ops as kops
+    from repro.serving import kv_cache as pk
+
+    check_paged_support(cfg)
+    use_ref, interpret = kops.resolve_backend(kernel_backend)
+    plan = tf.plan_for(cfg, ctx)
+    b = tokens.shape[0]
+    if active is None:
+        active = jnp.ones((b,), bool)
+    kv, ok = pk.ensure_capacity_batch(kv, pcfg, active)
+    eff = active & ok
+    cur = kv.lengths  # (B,) position of the new token
+    page = kv.page_table[
+        jnp.arange(b), jnp.clip(cur // pcfg.page_size, 0, pcfg.max_pages_per_seq - 1)
+    ]
+    aux = tf.PagedAux(
+        row=jnp.where(eff & (page >= 0), page, kv.k_pages.shape[1]),
+        off=cur % pcfg.page_size,
+        page_table=kv.page_table,
+        new_len=cur + eff.astype(jnp.int32),
+        use_ref=use_ref, interpret=interpret,
+    )
+    tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    h = embed_apply(params["embed"], tok, cfg)
+    h = shard(h, ctx, ctx.batch_axes, None, None)
+    positions = cur[:, None].astype(jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    h, new_states, _ = tf.stack_apply(
+        params["layers"], h, cfg, plan, ctx, positions,
+        states={"kp": kv.k_pages, "vp": kv.v_pages}, paged=aux,
+    )
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_head_apply(
+        params.get("lm_head"), h, cfg, embed_params=params["embed"]
+    )
+    kv = kv._replace(
+        k_pages=new_states["kp"], v_pages=new_states["vp"], lengths=aux.new_len
+    )
+    return kv, logits[:, 0], ok
+
+
+def prefill_kv(params, tokens, cfg: ModelConfig, ctx: ParallelContext, *,
+               chunk: int = 512):
+    """Prefill that also hands back the prompt KV for page landing.
+
+    Runs the standard admission prefill into a prompt-sized ring cache
+    (identity layout for S <= cache_len) and returns
+    (k (L, B, S, kvp, hd), v, last_logits) — the engine scatters k/v
+    straight into the page pool (``kv_cache.prefill_into_pages``).
+    """
+    s = tokens.shape[1]
+    st = make_decode_state(cfg, ctx, tokens.shape[0], s)
+    st, logits = prefill(params, tokens, st, cfg, ctx, chunk=chunk)
+    return st.layers["k"], st.layers["v"], logits
+
+
+# ---------------------------------------------------------------------------
 # Gradient post-processing (kv-replica tying)
 # ---------------------------------------------------------------------------
 

@@ -84,6 +84,48 @@ def layer_state_zeros(cfg: ModelConfig, plan: HeadPlan, batch: int, cache_len: i
 
 
 # ---------------------------------------------------------------------------
+# Attention decode against the shared page pool (serving.kv_cache)
+# ---------------------------------------------------------------------------
+
+class PagedAux(NamedTuple):
+    """Shared per-step paged-decode context threaded through the layer scan.
+
+    The page walk is per-sequence, not per-layer, so one PagedAux serves
+    every layer: ``row``/``off`` locate the physical slot receiving this
+    token's kv in each layer's page slice (``row`` out of bounds = masked
+    slot, dropped), ``page_table``/``new_len`` drive the attention walk
+    after the write. ``use_ref``/``interpret`` are the resolved
+    ``kernel_backend`` dispatch (static under jit)."""
+
+    row: Any  # (B,) physical page receiving this token (OOB = drop)
+    off: Any  # (B,) slot within the page
+    page_table: Any  # (B, MaxP) int32, -1 = unmapped
+    new_len: Any  # (B,) post-append lengths (attention mask bound)
+    use_ref: bool = False
+    interpret: Optional[bool] = None
+
+
+def _paged_decode_attn(params, x, cfg, plan, state, cur_pos, paged: PagedAux):
+    """x: (B,1,D); state: {"kp","vp"} (NP+1, PS, kvp, hd) — one layer's page
+    slice. Write the new token's kv at (row, off), then attend over the
+    paged cache through the kernel/oracle walk. Returns (y, new slice)."""
+    pos = cur_pos[:, None]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+    q, k, v = attn_mod.qkv(params, x, cfg, plan, pos)
+    kp = state["kp"].at[paged.row, paged.off].set(
+        k[:, 0].astype(state["kp"].dtype), mode="drop")
+    vp = state["vp"].at[paged.row, paged.off].set(
+        v[:, 0].astype(state["vp"].dtype), mode="drop")
+    out = attn_mod.paged_decode_attention(
+        q, kp, vp, paged.page_table, paged.new_len,
+        use_ref=paged.use_ref, interpret=paged.interpret,
+    )
+    y = attn_mod.out_proj(params, out, plan)
+    return y, {"kp": kp, "vp": vp}
+
+
+# ---------------------------------------------------------------------------
 # Attention decode against ring cache with per-slot positions
 # ---------------------------------------------------------------------------
 
@@ -206,12 +248,14 @@ def _ring_prefill_write(state, k, v, cfg, start_pos=0):
 def block_apply(
     params, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
     positions, state: Optional[dict] = None, *, chunk: int = 512,
-    gla_chunk: int = 32,
+    gla_chunk: int = 32, paged: Optional[PagedAux] = None,
 ):
     """One decoder block. Returns (y, new_state, aux_loss).
 
     mode is inferred: ``state is None`` -> train; seq==1 with state -> decode;
-    else prefill (state initialized and filled).
+    else prefill (state initialized and filled). When ``paged`` is given the
+    decode state is a page-pool slice ({"kp","vp"}) and attention walks the
+    shared page table instead of a per-slot ring cache.
     """
     aux = jnp.zeros((), F32)
     S = x.shape[1]
@@ -248,7 +292,12 @@ def block_apply(
             cur_pos = positions[:, 0]
         else:
             cur_pos = positions
-        if cfg.decode_appended_kv:
+        if paged is not None:
+            att, att_state = _paged_decode_attn(
+                params["attn"], h, cfg, plan, state, cur_pos, paged
+            )
+            new_state.update(att_state)
+        elif cfg.decode_appended_kv:
             att, kv_new = _ring_decode_attn_ro(
                 params["attn"], h, cfg, plan, state, cur_pos
             )
@@ -325,10 +374,13 @@ def stack_init(key, cfg: ModelConfig, plan: HeadPlan):
 def stack_apply(
     layers, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
     positions, states=None, *, chunk: int = 512,
+    paged: Optional[PagedAux] = None,
 ):
     """Scan the block over stacked layer params (and states when decoding).
 
-    Returns (y, new_states, total_aux)."""
+    Returns (y, new_states, total_aux). ``paged`` (one shared PagedAux, the
+    page walk is per-sequence) switches decode to the page-pool path:
+    ``states`` then carries the L-stacked page slices {"kp","vp"}."""
 
     def body(carry, layer_and_state):
         h, aux = carry
@@ -337,7 +389,7 @@ def stack_apply(
         else:
             lp, st = layer_and_state
         y, new_st, a = block_apply(
-            lp, h, cfg, plan, ctx, positions, st, chunk=chunk
+            lp, h, cfg, plan, ctx, positions, st, chunk=chunk, paged=paged
         )
         if ctx.sp and ctx.mesh is not None and states is None:
             # Megatron sequence sharding: residual/norm regions live sharded
@@ -360,7 +412,7 @@ def stack_apply(
     (y, aux), new_states = jax.lax.scan(
         fn, (x, jnp.zeros((), F32)), xs, unroll=max(1, unroll)
     )
-    if decode and cfg.decode_appended_kv and cfg.family != "ssm":
+    if decode and paged is None and cfg.decode_appended_kv and cfg.family != "ssm":
         # read-only-cache mode: scan ys carried only the per-layer new k/v
         # (and small ssm states); merge into the caches with ONE scatter
         if positions.ndim == 3:

@@ -5,14 +5,27 @@ table to KV pages. Pages live in one global pool (the "server memory");
 sequences own pages through a table; a functional stack allocator
 provides alloc/release (the slab allocator of §IV-A). Attention over the
 paged cache is the Pallas ``paged_attention`` kernel (scalar-prefetch page
-walk) with ``ref.paged_attention`` as oracle.
+walk) with ``ref.paged_attention`` as oracle, dispatched through the same
+``backend`` knob (``auto | pallas | ref``) the request apps use.
+
+All allocator operations come in batched-across-slots form
+(:func:`ensure_capacity_batch` / :func:`append_token_batch` /
+:func:`release_batch` / :func:`prefill_into_pages`) so one jitted engine
+step serves every continuous-batching slot — the 256-outstanding-request
+memory-level-parallelism shape of the APU. The per-sequence scalar forms
+are thin delegating wrappers kept for direct library use.
+
+The pool carries one extra zero **sentinel page** at physical index
+``num_pages``: unmapped page-table entries (-1) resolve there during the
+attention walk instead of silently refetching live page 0, and batched
+scatters aim dropped writes past it (``mode="drop"``).
 
 Used by the continuous-batching engine when sequences have wildly different
 lengths: memory is bounded by Σ actual tokens, not slots × max_len.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +36,7 @@ I32 = jnp.int32
 
 
 class PagedKVConfig(NamedTuple):
-    num_pages: int = 64  # global pool size (per layer)
+    num_pages: int = 64  # global pool size (per layer), excluding the sentinel
     page_size: int = 16
     max_pages_per_seq: int = 8
     kv_heads: int = 2
@@ -32,7 +45,7 @@ class PagedKVConfig(NamedTuple):
 
 
 class PagedKVState(NamedTuple):
-    k_pages: jax.Array  # (L, NP, PS, KVH, HD)
+    k_pages: jax.Array  # (L, NP + 1, PS, KVH, HD); row NP is the sentinel
     v_pages: jax.Array
     page_table: jax.Array  # (B, MaxP) int32, -1 = unmapped
     lengths: jax.Array  # (B,) tokens stored per sequence
@@ -41,10 +54,15 @@ class PagedKVState(NamedTuple):
 
 
 def make(cfg: PagedKVConfig, batch: int, dtype=jnp.bfloat16) -> PagedKVState:
+    """Allocate the pool. One extra zero page at physical index
+    ``cfg.num_pages`` is the sentinel dead-page target (never handed out by
+    the allocator): the attention kernels resolve unmapped page-table
+    entries there, so a dead walk step fetches zeros instead of another
+    sequence's live page 0."""
     return PagedKVState(
-        k_pages=jnp.zeros((cfg.layers, cfg.num_pages, cfg.page_size,
+        k_pages=jnp.zeros((cfg.layers, cfg.num_pages + 1, cfg.page_size,
                            cfg.kv_heads, cfg.head_dim), dtype),
-        v_pages=jnp.zeros((cfg.layers, cfg.num_pages, cfg.page_size,
+        v_pages=jnp.zeros((cfg.layers, cfg.num_pages + 1, cfg.page_size,
                            cfg.kv_heads, cfg.head_dim), dtype),
         page_table=jnp.full((batch, cfg.max_pages_per_seq), -1, I32),
         lengths=jnp.zeros((batch,), I32),
@@ -57,64 +75,177 @@ def pages_in_use(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
     return cfg.num_pages - state.free_top
 
 
+def kv_bytes_in_use(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
+    """Resident KV bytes — bounded by Σ actual tokens, rounded to pages."""
+    per_page = (2 * cfg.layers * cfg.page_size * cfg.kv_heads * cfg.head_dim
+                * state.k_pages.dtype.itemsize)
+    return pages_in_use(state, cfg) * per_page
+
+
+# ---------------------------------------------------------------------------
+# Batched allocator ops (one jitted call serves every slot)
+# ---------------------------------------------------------------------------
+
+def ensure_capacity_batch(state: PagedKVState, cfg: PagedKVConfig, need):
+    """Map a fresh page for every sequence in ``need`` (B,) bool whose next
+    token would cross a page boundary. Allocations pop distinct entries off
+    the free-stack top in batch order. Returns (state, ok (B,)) — ok False
+    where the pool or the sequence's page table is exhausted (back-pressure
+    to the engine's admission, like ring-buffer credit)."""
+    b = state.lengths.shape[0]
+    ln = state.lengths
+    page_idx = ln // cfg.page_size
+    wants = need & (ln % cfg.page_size == 0)
+    alloc_req = wants & (page_idx < cfg.max_pages_per_seq)
+    rank = jnp.cumsum(alloc_req.astype(I32)) - 1  # rank among allocators
+    can = alloc_req & (rank < state.free_top)
+    # allocator with rank r pops free_stack[free_top - 1 - r]; ranks are
+    # contiguous from 0 so the popped set is exactly the stack top
+    src = jnp.clip(state.free_top - 1 - rank, 0, state.free_stack.shape[0] - 1)
+    page = state.free_stack[src]
+    rows = jnp.where(can, jnp.arange(b, dtype=I32), b)
+    cols = jnp.clip(page_idx, 0, cfg.max_pages_per_seq - 1)
+    table = state.page_table.at[rows, cols].set(page, mode="drop")
+    free_top = state.free_top - jnp.sum(can.astype(I32))
+    ok = (~wants) | can
+    return state._replace(page_table=table, free_top=free_top), ok
+
+
+def append_token_batch(state: PagedKVState, cfg: PagedKVConfig, k_new, v_new,
+                       mask):
+    """Append one token's KV for every masked sequence at once.
+
+    k_new/v_new: (L, B, KVH, HD) — the new token's kv for every layer and
+    slot; mask: (B,) bool. Pages must already be mapped (see
+    :func:`ensure_capacity_batch`); unmapped targets are dropped."""
+    ln = state.lengths
+    b = ln.shape[0]
+    page = state.page_table[
+        jnp.arange(b), jnp.clip(ln // cfg.page_size, 0, cfg.max_pages_per_seq - 1)
+    ]
+    live = mask & (page >= 0)
+    row = jnp.where(live, page, state.k_pages.shape[1])  # OOB sentinel: drop
+    off = ln % cfg.page_size
+    kp = state.k_pages.at[:, row, off].set(
+        k_new.astype(state.k_pages.dtype), mode="drop")
+    vp = state.v_pages.at[:, row, off].set(
+        v_new.astype(state.v_pages.dtype), mode="drop")
+    return state._replace(
+        k_pages=kp, v_pages=vp, lengths=ln + live.astype(I32)
+    )
+
+
+def release_batch(state: PagedKVState, cfg: PagedKVConfig, mask) -> PagedKVState:
+    """Return every masked sequence's pages to the pool in one batched push
+    (slab free). Sequences with length 0 are no-ops, so releasing an
+    already-released slot never double-frees."""
+    b = state.lengths.shape[0]
+    n_pages = (state.lengths + cfg.page_size - 1) // cfg.page_size  # (B,)
+    cols = jnp.arange(cfg.max_pages_per_seq, dtype=I32)
+    live = mask[:, None] & (cols[None, :] < n_pages[:, None])  # (B, MaxP)
+    flat_live = live.reshape(-1)
+    flat_pages = state.page_table.reshape(-1)
+    rank = jnp.cumsum(flat_live.astype(I32)) - 1
+    pos = jnp.where(flat_live, state.free_top + rank, state.free_stack.shape[0])
+    stack = state.free_stack.at[pos].set(flat_pages, mode="drop")
+    free_top = state.free_top + jnp.sum(flat_live.astype(I32))
+    table = jnp.where(mask[:, None], -1, state.page_table)
+    lengths = jnp.where(mask, 0, state.lengths)
+    return state._replace(
+        page_table=table, lengths=lengths, free_stack=stack, free_top=free_top
+    )
+
+
+def prefill_into_pages(state: PagedKVState, cfg: PagedKVConfig, slot_ids,
+                       k, v, mask):
+    """Land prompt KV directly into pages for a batch of admitted slots.
+
+    slot_ids: (A,) target sequences; k/v: (L, A, P, KVH, HD) the prompt KV
+    from the admission prefill; mask: (A,) which admissions are real.
+    Allocates ``ceil(P / page_size)`` pages per masked slot (all-or-nothing
+    across the batch: if the pool cannot cover every masked slot, nothing is
+    admitted — the caller's page credit should prevent this), writes the P
+    tokens, and sets lengths. Returns (state, ok (A,))."""
+    ell, a, p = k.shape[0], k.shape[1], k.shape[2]
+    ps = cfg.page_size
+    npg = -(-p // ps)
+    if npg > cfg.max_pages_per_seq:
+        raise ValueError(
+            f"prompt of {p} tokens needs {npg} pages > max_pages_per_seq"
+            f" {cfg.max_pages_per_seq}"
+        )
+    want = jnp.broadcast_to(mask[:, None], (a, npg))
+    enough = jnp.sum(want.astype(I32)) <= state.free_top
+    mask = mask & enough
+    want = want & enough
+    flat = want.reshape(-1)
+    rank = jnp.cumsum(flat.astype(I32)) - 1
+    src = jnp.clip(state.free_top - 1 - rank, 0, state.free_stack.shape[0] - 1)
+    pages = state.free_stack[src]  # (A*npg,)
+    slot_rows = jnp.where(flat, jnp.repeat(slot_ids, npg), state.lengths.shape[0])
+    cols = jnp.tile(jnp.arange(npg, dtype=I32), a)
+    table = state.page_table.at[slot_rows, cols].set(pages, mode="drop")
+    free_top = state.free_top - jnp.sum(flat.astype(I32))
+
+    # scatter the prompt tokens: token t -> (page[t // ps], t % ps)
+    tok = jnp.arange(p, dtype=I32)
+    tok_page = pages.reshape(a, npg)[:, tok // ps]  # (A, P)
+    row = jnp.where(mask[:, None], tok_page, state.k_pages.shape[1])
+    off = jnp.broadcast_to(tok % ps, (a, p))
+    kp = state.k_pages.at[:, row, off].set(
+        k.astype(state.k_pages.dtype), mode="drop")
+    vp = state.v_pages.at[:, row, off].set(
+        v.astype(state.v_pages.dtype), mode="drop")
+    lengths = state.lengths.at[
+        jnp.where(mask, slot_ids, state.lengths.shape[0])
+    ].set(p, mode="drop")
+    return state._replace(
+        k_pages=kp, v_pages=vp, page_table=table, lengths=lengths,
+        free_top=free_top,
+    ), mask
+
+
+# ---------------------------------------------------------------------------
+# Per-sequence scalar forms (delegate to the batched ops)
+# ---------------------------------------------------------------------------
+
+def _one_hot(state: PagedKVState, seq) -> jax.Array:
+    return jnp.zeros((state.lengths.shape[0],), bool).at[seq].set(True)
+
+
 def ensure_capacity(state: PagedKVState, cfg: PagedKVConfig, seq: int):
     """Map a fresh page for ``seq`` when its next token would cross a page
-    boundary. Returns (state, ok) — ok False when the pool is exhausted
-    (back-pressure to the engine's admission, like ring-buffer credit)."""
-    ln = state.lengths[seq]
-    page_idx = ln // cfg.page_size
-    needs = (ln % cfg.page_size == 0)
-    have_room = page_idx < cfg.max_pages_per_seq
-    can_alloc = state.free_top > 0
-    do = needs & have_room & can_alloc
-    new_top = jnp.where(do, state.free_top - 1, state.free_top)
-    page = state.free_stack[jnp.maximum(new_top, 0)]
-    table = jnp.where(
-        do,
-        state.page_table.at[seq, jnp.minimum(page_idx, cfg.max_pages_per_seq - 1)].set(page),
-        state.page_table,
-    )
-    ok = (~needs) | do
-    return state._replace(page_table=table, free_top=new_top), ok
+    boundary. Returns (state, ok) — ok False when the pool is exhausted."""
+    state, ok = ensure_capacity_batch(state, cfg, _one_hot(state, seq))
+    return state, ok[seq]
 
 
 def append_token(state: PagedKVState, cfg: PagedKVConfig, seq: int, k_new, v_new):
     """k_new/v_new: (L, KVH, HD) — the new token's kv for every layer."""
-    ln = state.lengths[seq]
-    page = state.page_table[seq, ln // cfg.page_size]
-    off = ln % cfg.page_size
-    kp = state.k_pages.at[:, page, off].set(k_new.astype(state.k_pages.dtype))
-    vp = state.v_pages.at[:, page, off].set(v_new.astype(state.v_pages.dtype))
-    return state._replace(
-        k_pages=kp, v_pages=vp, lengths=state.lengths.at[seq].add(1)
-    )
+    b = state.lengths.shape[0]
+    kb = jnp.broadcast_to(k_new[:, None], (k_new.shape[0], b) + k_new.shape[1:])
+    vb = jnp.broadcast_to(v_new[:, None], (v_new.shape[0], b) + v_new.shape[1:])
+    return append_token_batch(state, cfg, kb, vb, _one_hot(state, seq))
 
 
 def release(state: PagedKVState, cfg: PagedKVConfig, seq: int) -> PagedKVState:
     """Return a finished sequence's pages to the pool (slab free)."""
-    n_pages = (state.lengths[seq] + cfg.page_size - 1) // cfg.page_size
+    return release_batch(state, cfg, _one_hot(state, seq))
 
-    def body(i, st):
-        page = st.page_table[seq, i]
-        live = i < n_pages
-        top = jnp.where(live, st.free_top + 1, st.free_top)
-        stack = jnp.where(
-            live, st.free_stack.at[st.free_top].set(page), st.free_stack
-        )
-        return st._replace(free_stack=stack, free_top=top)
 
-    state = jax.lax.fori_loop(0, cfg.max_pages_per_seq, body, state)
-    return state._replace(
-        page_table=state.page_table.at[seq].set(-1),
-        lengths=state.lengths.at[seq].set(0),
-    )
-
+# ---------------------------------------------------------------------------
+# Attention over the paged cache
+# ---------------------------------------------------------------------------
 
 def attend(state: PagedKVState, cfg: PagedKVConfig, layer: int, q, *,
-           use_ref: bool = False):
-    """q: (B, KVH, G, HD) pre-scaled -> (B, KVH, G, HD) f32."""
-    pt = jnp.clip(state.page_table, 0, cfg.num_pages - 1)
+           backend: Optional[str] = "auto"):
+    """q: (B, KVH, G, HD) pre-scaled -> (B, KVH, G, HD) f32.
+
+    The page table is passed raw: dead entries (-1) resolve to the pool's
+    zero sentinel page inside the walk (kernel index map / oracle gather)
+    instead of being clamped to live page 0 here."""
+    use_ref, interpret = kops.resolve_backend(backend)
     return kops.paged_attention(
-        q, state.k_pages[layer], state.v_pages[layer], pt, state.lengths,
-        use_ref=use_ref,
+        q, state.k_pages[layer], state.v_pages[layer], state.page_table,
+        state.lengths, use_ref=use_ref, interpret=interpret,
     )

@@ -138,6 +138,43 @@ def test_app_step_get_and_put_same_key_same_batch():
     np.testing.assert_array_equal(np.asarray(v[0]), [8, 8])  # PUT landed
 
 
+def test_plan_put_probe_backends_agree():
+    """The PUT plan's existence check runs through the Pallas probe kernel
+    under backend=pallas; every planned write target must match the jnp
+    oracle plan field-for-field (present keys, missing keys, duplicates,
+    masked rows)."""
+    cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=2, val_words=4,
+                      pool_size=48)
+    rng = np.random.default_rng(21)
+    s = kv.make(cfg)
+    seed_keys = jnp.asarray(rng.integers(1, 25, (20, 2)), I32)
+    seed_vals = jnp.asarray(rng.integers(0, 99, (20, 4)), I32)
+    s, _ = kv.put(s, seed_keys, seed_vals)
+    qk = np.concatenate([np.asarray(seed_keys)[:10],
+                         rng.integers(30, 60, (10, 2))]).astype(np.int32)
+    qk[5] = qk[12]  # duplicate spanning hit/miss halves
+    mask = jnp.asarray(rng.random(20) < 0.8)
+    p_ref = kv.plan_put(s, jnp.asarray(qk), mask, backend="ref")
+    p_pal = kv.plan_put(s, jnp.asarray(qk), mask, backend="pallas")
+    _assert_states_equal(p_ref, p_pal)
+
+
+def test_hash_probe_dispatch_matches_oracle():
+    cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=1, val_words=2,
+                      pool_size=32)
+    s, _ = kv.put(kv.make(cfg), jnp.asarray([[3], [9]], I32),
+                  jnp.asarray([[1, 1], [2, 2]], I32))
+    keys = jnp.asarray([[3], [4], [9], [9]], I32)
+    h1 = kv.hash_keys(keys, cfg.num_buckets)
+    h2 = kv.hash_keys(keys, cfg.num_buckets, salt=0x9E3779B9)
+    f_ref, p_ref = ops.hash_probe(s.bucket_keys, s.bucket_ptr, keys, h1, h2,
+                                  use_ref=True)
+    f_pal, p_pal = ops.hash_probe(s.bucket_keys, s.bucket_ptr, keys, h1, h2)
+    np.testing.assert_array_equal(np.asarray(f_ref), [True, False, True, True])
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_pal))
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pal))
+
+
 # --------------------------- embedding dispatch ----------------------------
 
 @pytest.mark.parametrize("batch", [1, 3, 5])

@@ -1,8 +1,11 @@
 """Paged KV pool: allocator lifecycle + kernel attention vs contiguous
-reference across page boundaries."""
+reference across page boundaries, batched-op/scalar-op agreement, and an
+admit/append/release churn property (no page leaks or double-frees)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.serving import kv_cache as pk
 
@@ -63,6 +66,111 @@ def test_release_returns_pages_and_reuse():
     for _ in range(4):
         state = _grow(state, 1, k, k)
     assert int(pk.pages_in_use(state, CFG)) == 1
+
+
+def test_batched_ops_match_scalar_loop():
+    """One batched grow step across every sequence must equal the scalar
+    per-sequence calls (same table, lengths, pool contents, free list)."""
+    rng = np.random.default_rng(5)
+    cfg = CFG._replace(num_pages=8)
+    sa = sb = pk.make(cfg, batch=3, dtype=F32)
+    for t in range(7):
+        mask = np.array([True, t % 2 == 0, t < 3])
+        k = rng.normal(size=(cfg.layers, 3, cfg.kv_heads, cfg.head_dim))
+        v = rng.normal(size=(cfg.layers, 3, cfg.kv_heads, cfg.head_dim))
+        sa, ok = pk.ensure_capacity_batch(sa, cfg, jnp.asarray(mask))
+        assert bool(ok.all())
+        sa = pk.append_token_batch(sa, cfg, jnp.asarray(k, F32),
+                                   jnp.asarray(v, F32), jnp.asarray(mask))
+        for s in range(3):
+            if mask[s]:
+                sb, ok1 = pk.ensure_capacity(sb, cfg, s)
+                assert bool(ok1)
+                sb = pk.append_token(sb, cfg, s, jnp.asarray(k[:, s], F32),
+                                     jnp.asarray(v[:, s], F32))
+    for la, lb in zip(jax.tree_util.tree_leaves(sa),
+                      jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # batched release of two sequences == two scalar releases
+    rel = jnp.asarray([True, False, True])
+    ra = pk.release_batch(sa, cfg, rel)
+    rb_ = pk.release(pk.release(sb, cfg, 0), cfg, 2)
+    assert int(pk.pages_in_use(ra, cfg)) == int(pk.pages_in_use(rb_, cfg))
+    np.testing.assert_array_equal(np.asarray(ra.lengths), np.asarray(rb_.lengths))
+    np.testing.assert_array_equal(np.asarray(ra.page_table),
+                                  np.asarray(rb_.page_table))
+
+
+def test_prefill_into_pages_matches_token_appends():
+    """Landing a prompt in one batched call must leave the pool readable
+    exactly like growing it token by token (attend output equality)."""
+    rng = np.random.default_rng(6)
+    batch, p = 2, 7
+    k = rng.normal(size=(CFG.layers, batch, p, CFG.kv_heads, CFG.head_dim))
+    v = rng.normal(size=(CFG.layers, batch, p, CFG.kv_heads, CFG.head_dim))
+    sa = pk.make(CFG, batch=batch, dtype=F32)
+    sa, ok = pk.prefill_into_pages(
+        sa, CFG, jnp.arange(batch, dtype=jnp.int32),
+        jnp.asarray(k, F32), jnp.asarray(v, F32), jnp.ones((batch,), bool))
+    assert bool(ok.all())
+    sb = pk.make(CFG, batch=batch, dtype=F32)
+    for t in range(p):
+        for s in range(batch):
+            sb = _grow(sb, s, jnp.asarray(k[:, s, t], F32),
+                       jnp.asarray(v[:, s, t], F32))
+    assert list(np.asarray(sa.lengths)) == [p, p]
+    assert int(pk.pages_in_use(sa, CFG)) == int(pk.pages_in_use(sb, CFG))
+    q = jnp.asarray(rng.normal(size=(batch, CFG.kv_heads, 3, CFG.head_dim)), F32)
+    for layer in range(CFG.layers):
+        np.testing.assert_allclose(
+            np.asarray(pk.attend(sa, CFG, layer, q, backend="ref")),
+            np.asarray(pk.attend(sb, CFG, layer, q, backend="ref")),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+def _pool_invariants(state, cfg, batch):
+    """No leak, no double-free, no aliasing: free pages + mapped pages
+    partition the pool exactly."""
+    free = set(np.asarray(state.free_stack[: int(state.free_top)]).tolist())
+    table = np.asarray(state.page_table)
+    mapped = table[table >= 0].tolist()
+    assert len(mapped) == len(set(mapped)), "page owned twice"
+    assert not (free & set(mapped)), "page both free and mapped"
+    assert len(free) + len(mapped) == cfg.num_pages, "pages leaked"
+    # mapped pages per sequence must cover exactly ceil(len / ps)
+    lengths = np.asarray(state.lengths)
+    for s in range(batch):
+        n = -(-int(lengths[s]) // cfg.page_size)
+        assert (table[s] >= 0).sum() == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2)),
+                min_size=1, max_size=40))
+def test_page_pool_churn_never_leaks(ops):
+    """Random admit/append/release churn across slots: the free stack and
+    the page tables must partition the pool after every operation."""
+    cfg = pk.PagedKVConfig(num_pages=6, page_size=2, max_pages_per_seq=3,
+                           kv_heads=1, head_dim=4, layers=1)
+    batch = 4
+    state = pk.make(cfg, batch=batch, dtype=F32)
+    k = jnp.ones((cfg.layers, batch, cfg.kv_heads, cfg.head_dim), F32)
+    for op, arg in ops:
+        if op == 0:  # grow one slot
+            need = jnp.zeros((batch,), bool).at[arg].set(True)
+            state, ok = pk.ensure_capacity_batch(state, cfg, need)
+            state = pk.append_token_batch(state, cfg, k, k, need & ok)
+        elif op == 1:  # release one slot (possibly already empty: no-op)
+            state = pk.release_batch(
+                state, cfg, jnp.zeros((batch,), bool).at[arg].set(True))
+        elif op == 2:  # grow several slots at once
+            need = jnp.asarray([True, arg > 0, arg > 1, False])
+            state, ok = pk.ensure_capacity_batch(state, cfg, need)
+            state = pk.append_token_batch(state, cfg, k, k, need & ok)
+        else:  # release everything
+            state = pk.release_batch(state, cfg, jnp.ones((batch,), bool))
+        _pool_invariants(state, cfg, batch)
 
 
 def test_pool_exhaustion_backpressure():
