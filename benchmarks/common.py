@@ -68,25 +68,80 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     return line
 
 
+def _git_rev() -> str:
+    """Short HEAD rev, with a ``-dirty`` suffix for uncommitted trees so a
+    pre-commit benchmark run is never attributed to the parent commit."""
+    try:
+        import subprocess
+
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        )
+        rev = out.stdout.strip()
+        if not rev:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        )
+        return rev + ("-dirty" if dirty.stdout.strip() else "")
+    except Exception:
+        return "unknown"
+
+
 def persist(app: str, rows: list) -> str:
-    """Write a benchmark's rows to ``BENCH_<app>.json`` at the repo root —
-    the per-PR perf trajectory the driver diffs. Rows are the CSV lines
-    :func:`row` returns; ``derived`` key=val pairs are kept verbatim."""
+    """Append a benchmark's rows to ``BENCH_<app>.json`` at the repo root.
+
+    Each call adds a run record keyed by git rev + timestamp instead of
+    overwriting, so the perf trajectory accumulates across PRs (the driver
+    diffs the latest run, the history stays inspectable). Rows are the CSV
+    lines :func:`row` returns; ``derived`` key=val pairs are kept verbatim.
+    A legacy single-run file is converted to the ``runs`` list in place."""
     parsed = []
     for line in rows or []:
         name, us, derived = line.split(",", 2)
         parsed.append(
             {"name": name, "us_per_call": float(us), "derived": derived}
         )
-    payload = {
-        "app": app,
+    run = {
+        "git_rev": _git_rev(),
+        "unix_time": int(time.time()),
         "jax_backend": jax.default_backend(),
         "smoke": SMOKE,
-        "unix_time": int(time.time()),
         "rows": parsed,
     }
     path = os.path.join(REPO_ROOT, f"BENCH_{app}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+    runs = None
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+                runs = prev["runs"]
+            elif isinstance(prev, dict) and "rows" in prev:
+                # pre-trajectory format: one overwritten run per file
+                runs = [{k: prev[k] for k in
+                         ("git_rev", "unix_time", "jax_backend", "smoke",
+                          "rows") if k in prev}]
+        except (json.JSONDecodeError, OSError):
+            pass
+        if runs is None:
+            # unparseable or unrecognized shape: don't silently destroy the
+            # trajectory — keep the old file next to the fresh history
+            # (unique name so repeated rescues never clobber each other)
+            bak = f"{path}.corrupt.{int(time.time())}"
+            try:
+                os.replace(path, bak)
+                print(f"# warning: {path} unreadable, moved to {bak}")
+            except OSError:
+                pass
+    runs = runs or []
+    runs.append(run)
+    # write-then-rename so an interrupted dump never truncates the history
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"app": app, "runs": runs}, f, indent=1)
         f.write("\n")
+    os.replace(tmp, path)
     return path

@@ -16,7 +16,11 @@ decode substrate is either dense per-slot ring caches or — with
 slots allocate pages on admission (back-pressured by page credit, the
 ring-credit analogue for server memory), append per-token KV during
 decode, and release pages on completion, so resident KV is bounded by
-Σ actual tokens instead of slots × max_len.
+Σ actual tokens instead of slots × max_len. The decode layer scan is
+read-only over the pool (stale-pages stats walk + fresh-token LSE merge);
+each step commits every layer's new KV with one batched page append — the
+in-place, no-payload-bouncing discipline of the paper's APU applied to the
+engine's own hot loop.
 """
 from __future__ import annotations
 
@@ -397,8 +401,9 @@ def _lm_step_dense(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
 def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
                    params, prefill_fn=None):
     """The paged-decode engine step: admission lands prompt KV directly in
-    pages, decode appends per-token KV through the paged-attention walk,
-    completion releases pages back to the pool."""
+    pages (straight off the prefill scan, no dense staging cache), decode
+    attends read-only through the paged stats walk and commits one batched
+    KV append per step, completion releases pages back to the pool."""
     from repro.models.model import paged_decode_step, prefill_kv
     from repro.serving import kv_cache as pk
 

@@ -95,6 +95,21 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
     )
 
 
+def paged_attention_stats(q, k_pages, v_pages, page_table, lengths, *,
+                          use_ref: bool = False, interpret=None):
+    """Online-softmax stats (acc, m, l) over the first ``lengths`` pool
+    tokens — the read-only decode path LSE-merges the current token's
+    fresh k/v into these instead of writing the pool inside the scan."""
+    if use_ref:
+        return _ref.paged_attention_stats(
+            q, k_pages, v_pages, page_table, lengths
+        )
+    it = _auto_interpret() if interpret is None else interpret
+    return _pa.paged_attention_stats(
+        q, k_pages, v_pages, page_table, lengths, interpret=it
+    )
+
+
 def flash_attention(q, k, v, *, window: int = 0, block_q: int = 128,
                     block_k: int = 128, use_ref: bool = False, interpret=None):
     if use_ref:

@@ -8,12 +8,22 @@ memory-level-parallelism pattern as the other walkers. Query-head groups
 (GQA) ride along the kv-head block so the MXU sees a (G, hd) × (hd, PS)
 matmul per page.
 
+The kernel emits its raw online-softmax state — unnormalized accumulator
+``acc = Σ exp(s - m) v``, row max ``m``, and normalizer ``l = Σ exp(s - m)``
+— so callers can either normalize (:func:`paged_attention`) or LSE-merge
+the stats with contributions the pool does not hold yet
+(:func:`paged_attention_stats`): the read-only decode path attends over the
+*stale* pool and folds the current token's fresh k/v in afterwards, which
+is what lets the layer scan stop carrying the pool entirely.
+
 Dead page-table entries (-1, or pages past the sequence length) are masked
 in the scalar-prefetch index map: they resolve to the **last physical
 page** — the pool's zero sentinel when the caller allocates one
 (``serving.kv_cache.make`` does) — rather than silently refetching live
 page 0. Compute for dead pages is skipped either way via the length mask;
 the index-map mask keeps the dead DMA off other sequences' live data.
+A zero-length sequence yields (acc=0, m=NEG_INF, l=0), the empty online
+softmax, which merges safely.
 
 Operand memory spaces come from ``core.placement.block_spaces`` — the
 per-region TPH/DDIO decision applied at kernel construction time: the tiny
@@ -35,7 +45,8 @@ from repro.core import placement
 NEG_INF = -1e30
 
 
-def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+            m_ref, l_ref, acc_ref):
     b = pl.program_id(0)
     p = pl.program_id(2)
     np_ = pl.num_programs(2)
@@ -69,15 +80,18 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
 
     @pl.when(p == np_ - 1)
     def _():
-        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = out.astype(o_ref.dtype)
+        acc_out[0, 0] = acc_ref[...].astype(acc_out.dtype)
+        m_out[0, 0] = m_ref[:, 0].astype(m_out.dtype)
+        l_out[0, 0] = l_ref[:, 0].astype(l_out.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool = True):
+def paged_attention_stats(q, k_pages, v_pages, page_table, lengths, *,
+                          interpret: bool = True):
     """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd);
     page_table: (B, MaxP) int32, -1 = unmapped; lengths: (B,).
-    Returns (B, KVH, G, hd) f32.
+    Returns online-softmax stats over the first ``lengths`` pool tokens:
+    (acc (B, KVH, G, hd), m (B, KVH, G), l (B, KVH, G)), all f32.
     """
     b, kvh, g, hd = q.shape
     n_pages, ps = k_pages.shape[0], k_pages.shape[1]
@@ -109,10 +123,14 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool
             pl.BlockSpec((1, ps, 1, hd), pt_idx, memory_space=sp["page"]),
             pl.BlockSpec((1, ps, 1, hd), pt_idx, memory_space=sp["page"]),
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0),
-            memory_space=sp["out"],
-        ),
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, kv, p, pt, ln: (bb, kv, 0, 0),
+                         memory_space=sp["out"]),
+            pl.BlockSpec((1, 1, g), lambda bb, kv, p, pt, ln: (bb, kv, 0),
+                         memory_space=sp["out"]),
+            pl.BlockSpec((1, 1, g), lambda bb, kv, p, pt, ln: (bb, kv, 0),
+                         memory_space=sp["out"]),
+        ],
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
@@ -122,6 +140,21 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *, interpret: bool
     return pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        ),
         interpret=interpret,
     )(page_table, lengths, q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    interpret: bool = True):
+    """Normalized paged decode attention (the stats kernel + final divide).
+    Returns (B, KVH, G, hd) f32."""
+    acc, _, l = paged_attention_stats(
+        q, k_pages, v_pages, page_table, lengths, interpret=interpret
+    )
+    return acc / jnp.maximum(l, 1e-30)[..., None]

@@ -72,10 +72,15 @@ def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
     return jnp.where(found[:, None], vals, 0), found
 
 
-def paged_attention(q, k_pages, v_pages, page_table, lengths):
-    """q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd);
-    page_table entries < 0 (unmapped) resolve to the last physical page —
-    the pool's zero sentinel — matching the kernel's index-map mask."""
+def paged_attention_stats(q, k_pages, v_pages, page_table, lengths):
+    """Online-softmax stats over the paged pool, mirroring the Pallas
+    kernel's raw state: (acc = Σ exp(s - m) v, m = row max, l = Σ exp(s - m)).
+
+    q: (B, KVH, G, hd) pre-scaled; pages: (NP, PS, KVH, hd); page_table
+    entries < 0 (unmapped) resolve to the last physical page — the pool's
+    zero sentinel — matching the kernel's index-map mask. A zero-length
+    sequence yields (0, NEG_INF, 0): the empty softmax, safe to LSE-merge.
+    """
     b, kvh, g, hd = q.shape
     np_, ps = k_pages.shape[0], k_pages.shape[1]
     maxp = page_table.shape[1]
@@ -85,9 +90,21 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths):
     vv = v_pages[pt].reshape(b, maxp * ps, kvh, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", q.astype(F32), kk.astype(F32))
     pos = jnp.arange(maxp * ps)[None, :]
-    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bkgs,bskh->bkgh", p, vv.astype(F32))
+    valid = (pos < lengths[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    # exp through the mask, not the raw scores: an all-masked row has
+    # m == NEG_INF, where exp(s - m) would be exp(0) = 1 per position
+    pexp = jnp.where(valid, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(pexp, axis=-1)
+    acc = jnp.einsum("bkgs,bskh->bkgh", pexp, vv.astype(F32))
+    return acc, m, l
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths):
+    """Normalized paged decode attention (stats oracle + final divide)."""
+    acc, _, l = paged_attention_stats(q, k_pages, v_pages, page_table, lengths)
+    return acc / jnp.maximum(l, 1e-30)[..., None]
 
 
 def flash_attention(q, k, v, *, window: int = 0):

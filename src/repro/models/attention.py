@@ -249,6 +249,59 @@ def chunked_attention(
 # Decode attention against a contiguous KV cache
 # ---------------------------------------------------------------------------
 
+def merge_fresh_token(acc, m, l, s_cur, v_new):
+    """LSE-merge online-softmax stats over a *stale* cache with the current
+    token's not-yet-written k/v, then normalize.
+
+    acc: (B, KV, G, hd) f32 unnormalized accumulator Σ exp(s - m) v over the
+    cache; m/l: (B, KV, G) row max and normalizer; s_cur: (B, KV, G) the
+    current token's pre-scaled q·k_new scores; v_new: (B, KV, hd).
+    Returns (B, KV, G, hd) f32 — exactly the attention that would result
+    from writing the token first (up to float association). An empty cache
+    (m = NEG_INF, l = 0) degenerates to attending the fresh token alone.
+
+    This is the one place the "attend stale + fold in the fresh token"
+    trick lives: both the ring read-only decode path and the paged
+    read-only decode path route through it, which is what lets their layer
+    scans carry only the per-layer new k/v instead of the whole cache.
+    """
+    m_t = jnp.maximum(m, s_cur)
+    corr = jnp.exp(m - m_t)
+    p_cur = jnp.exp(s_cur - m_t)
+    l_t = l * corr + p_cur
+    acc_t = acc * corr[..., None] + p_cur[..., None] * v_new.astype(F32)[:, :, None, :]
+    return acc_t / jnp.maximum(l_t, 1e-30)[..., None]
+
+
+def paged_decode_attention_ro(q, k_pages, v_pages, page_table, lengths,
+                              k_new, v_new, *, use_ref: bool = False,
+                              interpret=None):
+    """Read-only decode attention against a paged KV pool.
+
+    The pool is *stale*: it holds the first ``lengths`` committed tokens
+    and is never written here. The kernel/oracle walk returns online-
+    softmax stats over the stale pages; the current token's fresh
+    k_new/v_new ((B, KV, hd), produced this step and committed by the
+    caller after the layer scan) is folded in via :func:`merge_fresh_token`.
+    q: (B, 1, H, hd); pages: (NP, PS, KV, hd); page_table: (B, MaxP) int32
+    (-1 = unmapped, resolved to the pool's zero sentinel inside the walk).
+    Returns (B, 1, H, hd) in q's dtype.
+    """
+    from repro.kernels import ops as kops
+
+    B, _, H, hd = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, hd).astype(F32) * hd ** -0.5
+    acc, m, l = kops.paged_attention_stats(
+        qg, k_pages, v_pages, page_table, lengths,
+        use_ref=use_ref, interpret=interpret,
+    )
+    s_cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new.astype(F32))
+    out = merge_fresh_token(acc, m, l, s_cur, v_new)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
                            use_ref: bool = False, interpret=None):
     """Decode attention against a paged KV pool (one layer's page slice).

@@ -202,12 +202,15 @@ def paged_decode_step(
 
     tokens: (B,); kv: ``serving.kv_cache.PagedKVState`` whose batch is the
     slot count; active: (B,) bool (inactive slots neither append nor
-    advance — their logits are garbage the caller must mask). Each token's
-    kv is appended to the slot's current page (allocating a fresh page at
-    boundaries), then every layer attends through the paged walk dispatched
-    per ``kernel_backend`` (auto | pallas | ref). Returns
-    (kv', logits (B, V), ok (B,)) — ok False where the pool was dry (the
-    slot stalled: nothing appended, logits invalid, retry after release).
+    advance — their logits are garbage the caller must mask). The layer
+    scan attends READ-ONLY over the stale pool (kernel/oracle stats walk
+    per ``kernel_backend``, auto | pallas | ref) with each layer LSE-merging
+    the current token's fresh k/v; the scan ys carry only the per-layer
+    (B, KVH, HD) new kv, which is committed afterwards with ONE
+    ``kv_cache.append_token_batch`` scatter across all layers — the pool
+    never round-trips through the scan. Returns (kv', logits (B, V),
+    ok (B,)) — ok False where the pool was dry (the slot stalled: nothing
+    appended, logits invalid, retry after release).
     """
     from repro.kernels import ops as kops
     from repro.serving import kv_cache as pk
@@ -220,15 +223,9 @@ def paged_decode_step(
         active = jnp.ones((b,), bool)
     kv, ok = pk.ensure_capacity_batch(kv, pcfg, active)
     eff = active & ok
-    cur = kv.lengths  # (B,) position of the new token
-    page = kv.page_table[
-        jnp.arange(b), jnp.clip(cur // pcfg.page_size, 0, pcfg.max_pages_per_seq - 1)
-    ]
+    cur = kv.lengths  # (B,) stale length = position of the new token
     aux = tf.PagedAux(
-        row=jnp.where(eff & (page >= 0), page, kv.k_pages.shape[1]),
-        off=cur % pcfg.page_size,
-        page_table=kv.page_table,
-        new_len=cur + eff.astype(jnp.int32),
+        page_table=kv.page_table, lengths=cur,
         use_ref=use_ref, interpret=interpret,
     )
     tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
@@ -245,25 +242,35 @@ def paged_decode_step(
     logits = lm_head_apply(
         params.get("lm_head"), h, cfg, embed_params=params["embed"]
     )
-    kv = kv._replace(
-        k_pages=new_states["kp"], v_pages=new_states["vp"], lengths=aux.new_len
+    # one batched commit for every layer's new kv (the single scatter the
+    # dense decode_appended_kv path does for its ring caches)
+    kv = pk.append_token_batch(
+        kv, pcfg, new_states["k_new"], new_states["v_new"], eff
     )
     return kv, logits[:, 0], ok
 
 
 def prefill_kv(params, tokens, cfg: ModelConfig, ctx: ParallelContext, *,
                chunk: int = 512):
-    """Prefill that also hands back the prompt KV for page landing.
-
-    Runs the standard admission prefill into a prompt-sized ring cache
-    (identity layout for S <= cache_len) and returns
-    (k (L, B, S, kvp, hd), v, last_logits) — the engine scatters k/v
-    straight into the page pool (``kv_cache.prefill_into_pages``).
-    """
-    s = tokens.shape[1]
-    st = make_decode_state(cfg, ctx, tokens.shape[0], s)
-    st, logits = prefill(params, tokens, st, cfg, ctx, chunk=chunk)
-    return st.layers["k"], st.layers["v"], logits
+    """Direct paged prefill: the prompt KV comes straight off the prefill
+    layer scan (``stack_apply(emit_kv=True)`` ys), never staged through a
+    dense prompt-sized ring cache. Returns (k (L, B, S, kvp, hd), v,
+    last_logits) — the engine scatters k/v straight into the page pool
+    (``kv_cache.prefill_into_pages``)."""
+    check_paged_support(cfg)
+    plan = tf.plan_for(cfg, ctx)
+    h = embed_apply(params["embed"], tokens, cfg)
+    h = shard(h, ctx, ctx.batch_axes, None, None)
+    positions = _positions_for(cfg, tokens)
+    h, kvs, _ = tf.stack_apply(
+        params["layers"], h, cfg, plan, ctx, positions, chunk=chunk,
+        emit_kv=True,
+    )
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = lm_head_apply(
+        params.get("lm_head"), h, cfg, embed_params=params["embed"]
+    )
+    return kvs["k"], kvs["v"], logits[:, 0]
 
 
 # ---------------------------------------------------------------------------

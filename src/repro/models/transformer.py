@@ -91,38 +91,37 @@ class PagedAux(NamedTuple):
     """Shared per-step paged-decode context threaded through the layer scan.
 
     The page walk is per-sequence, not per-layer, so one PagedAux serves
-    every layer: ``row``/``off`` locate the physical slot receiving this
-    token's kv in each layer's page slice (``row`` out of bounds = masked
-    slot, dropped), ``page_table``/``new_len`` drive the attention walk
-    after the write. ``use_ref``/``interpret`` are the resolved
-    ``kernel_backend`` dispatch (static under jit)."""
+    every layer: ``page_table``/``lengths`` drive the read-only attention
+    walk over the *stale* pool (``lengths`` counts only tokens already
+    committed — the current token's kv rides the scan ys and is appended by
+    the caller after the scan, one batched scatter for all layers).
+    ``use_ref``/``interpret`` are the resolved ``kernel_backend`` dispatch
+    (static under jit)."""
 
-    row: Any  # (B,) physical page receiving this token (OOB = drop)
-    off: Any  # (B,) slot within the page
     page_table: Any  # (B, MaxP) int32, -1 = unmapped
-    new_len: Any  # (B,) post-append lengths (attention mask bound)
+    lengths: Any  # (B,) committed tokens (stale: excludes the current one)
     use_ref: bool = False
     interpret: Optional[bool] = None
 
 
-def _paged_decode_attn(params, x, cfg, plan, state, cur_pos, paged: PagedAux):
+def _paged_decode_attn_ro(params, x, cfg, plan, state, cur_pos, paged: PagedAux):
     """x: (B,1,D); state: {"kp","vp"} (NP+1, PS, kvp, hd) — one layer's page
-    slice. Write the new token's kv at (row, off), then attend over the
-    paged cache through the kernel/oracle walk. Returns (y, new slice)."""
+    slice, consumed READ-ONLY. Attend over the stale pool through the
+    kernel/oracle stats walk and LSE-merge the current token's fresh k/v
+    (the shared ``attention.merge_fresh_token`` trick, same as the dense
+    ``decode_appended_kv`` path). Returns (y, {"k_new","v_new"}): the scan
+    ys carry only the (B, kvp, hd) new kv per layer — never the pool."""
     pos = cur_pos[:, None]
     if cfg.mrope:
         pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
     q, k, v = attn_mod.qkv(params, x, cfg, plan, pos)
-    kp = state["kp"].at[paged.row, paged.off].set(
-        k[:, 0].astype(state["kp"].dtype), mode="drop")
-    vp = state["vp"].at[paged.row, paged.off].set(
-        v[:, 0].astype(state["vp"].dtype), mode="drop")
-    out = attn_mod.paged_decode_attention(
-        q, kp, vp, paged.page_table, paged.new_len,
-        use_ref=paged.use_ref, interpret=paged.interpret,
+    k_new, v_new = k[:, 0], v[:, 0]  # (B, kvp, hd)
+    out = attn_mod.paged_decode_attention_ro(
+        q, state["kp"], state["vp"], paged.page_table, paged.lengths,
+        k_new, v_new, use_ref=paged.use_ref, interpret=paged.interpret,
     )
     y = attn_mod.out_proj(params, out, plan)
-    return y, {"kp": kp, "vp": vp}
+    return y, {"k_new": k_new, "v_new": v_new}
 
 
 # ---------------------------------------------------------------------------
@@ -205,18 +204,23 @@ def _ring_decode_attn_ro(params, x, cfg, plan, state, cur_pos):
     if cfg.sliding_window:
         valid &= pos > (cur_pos[:, None] - cfg.sliding_window)
     s_cache = jnp.where(valid[:, None, None, :], s_cache, attn_mod.NEG_INF)
-    s_cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new.astype(dt),
-                       preferred_element_type=F32)
-    s = jnp.concatenate([s_cache, s_cur[..., None]], axis=-1)
-    p = jax.nn.softmax(s, axis=-1)
+    # online-softmax stats over the stale cache, then the shared LSE-merge
+    # of the current token (attention.merge_fresh_token — same helper the
+    # paged read-only path uses). exp through the mask: an empty cache has
+    # m == NEG_INF, where exp(s - m) would be 1 per masked position.
+    m = jnp.max(s_cache, axis=-1)  # (B, kvp, g)
+    pexp = jnp.where(valid[:, None, None, :],
+                     jnp.exp(s_cache - m[..., None]), 0.0)
+    l = jnp.sum(pexp, axis=-1)
     if dot_layout:
-        out = jnp.einsum("bkgs,bksh->bkgh", p[..., :-1].astype(dt), state["v"],
+        acc = jnp.einsum("bkgs,bksh->bkgh", pexp.astype(dt), state["v"],
                          preferred_element_type=F32)
     else:
-        out = jnp.einsum("bkgs,bskh->bkgh", p[..., :-1].astype(dt), state["v"],
+        acc = jnp.einsum("bkgs,bskh->bkgh", pexp.astype(dt), state["v"],
                          preferred_element_type=F32)
-    # current token's contribution: p[..., -1] (B,kvp,g) x v_new (B,kvp,hd)
-    out = out + p[..., -1][..., None] * v_new[:, :, None, :].astype(F32)
+    s_cur = jnp.einsum("bkgh,bkh->bkg", qg, k_new.astype(dt),
+                       preferred_element_type=F32)
+    out = attn_mod.merge_fresh_token(acc, m, l, s_cur, v_new)
     out = out.reshape(B, 1, H, hd).astype(x.dtype)
     y = attn_mod.out_proj(params, out, plan)
     return y, {"k_new": k_new, "v_new": v_new}
@@ -249,13 +253,18 @@ def block_apply(
     params, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
     positions, state: Optional[dict] = None, *, chunk: int = 512,
     gla_chunk: int = 32, paged: Optional[PagedAux] = None,
+    emit_kv: bool = False,
 ):
     """One decoder block. Returns (y, new_state, aux_loss).
 
     mode is inferred: ``state is None`` -> train; seq==1 with state -> decode;
     else prefill (state initialized and filled). When ``paged`` is given the
-    decode state is a page-pool slice ({"kp","vp"}) and attention walks the
-    shared page table instead of a per-slot ring cache.
+    decode state is a page-pool slice ({"kp","vp"}, read-only) and attention
+    walks the shared page table instead of a per-slot ring cache.
+    ``emit_kv`` (stateless prefill, attention families only) returns the
+    layer's raw prompt {"k","v"} instead of filling a ring cache — the
+    direct paged-prefill path, where pages are written from the scan output
+    without a dense staging cache.
     """
     aux = jnp.zeros((), F32)
     S = x.shape[1]
@@ -293,10 +302,10 @@ def block_apply(
         else:
             cur_pos = positions
         if paged is not None:
-            att, att_state = _paged_decode_attn(
+            att, kv_new = _paged_decode_attn_ro(
                 params["attn"], h, cfg, plan, state, cur_pos, paged
             )
-            new_state.update(att_state)
+            new_state = dict(kv_new)  # caller appends after the scan
         elif cfg.decode_appended_kv:
             att, kv_new = _ring_decode_attn_ro(
                 params["attn"], h, cfg, plan, state, cur_pos
@@ -308,7 +317,7 @@ def block_apply(
                 new_state.update(att_state)
     else:
         q, k, v = attn_mod.qkv(params["attn"], h, cfg, plan, positions)
-        if cfg.use_pallas_flash and state is not None \
+        if cfg.use_pallas_flash and (state is not None or emit_kv) \
                 and S % min(cfg.flash_block, S) == 0:
             # TPU production path (prefill, forward-only: the kernel has no
             # VJP — training keeps the differentiable masked form)
@@ -320,7 +329,7 @@ def block_apply(
                 v.transpose(0, 2, 1, 3), window=cfg.sliding_window,
                 block_q=blk, block_k=blk,
             ).transpose(0, 2, 1, 3).astype(q.dtype)
-        elif state is None and S <= attn_mod.TRAIN_FULL_ATTN_MAX:
+        elif state is None and not emit_kv and S <= attn_mod.TRAIN_FULL_ATTN_MAX:
             # training: masked-full form (differentiation-friendly; see
             # attention.py) — the 2x causal-FLOP waste is a recorded
             # baseline cost that the flash kernel removes on TPU
@@ -332,6 +341,8 @@ def block_apply(
         att = attn_mod.out_proj(params["attn"], out, plan)
         if new_state is not None:
             new_state.update(_ring_prefill_write(state, k, v, cfg))
+        elif emit_kv:
+            new_state = {"k": k, "v": v}  # ys: raw prompt kv, no staging
 
     if cfg.family == "hybrid":
         if decode:
@@ -374,13 +385,18 @@ def stack_init(key, cfg: ModelConfig, plan: HeadPlan):
 def stack_apply(
     layers, x, cfg: ModelConfig, plan: HeadPlan, ctx: ParallelContext,
     positions, states=None, *, chunk: int = 512,
-    paged: Optional[PagedAux] = None,
+    paged: Optional[PagedAux] = None, emit_kv: bool = False,
 ):
     """Scan the block over stacked layer params (and states when decoding).
 
     Returns (y, new_states, total_aux). ``paged`` (one shared PagedAux, the
-    page walk is per-sequence) switches decode to the page-pool path:
-    ``states`` then carries the L-stacked page slices {"kp","vp"}."""
+    page walk is per-sequence) switches decode to the read-only page-pool
+    path: ``states`` feeds the L-stacked page slices {"kp","vp"} as scan
+    xs (read-only), and the returned ys carry only each layer's new
+    {"k_new","v_new"} (B, kvp, hd) — the caller commits them with ONE
+    batched page append after the scan, so the pool never round-trips
+    through the scan carry/ys. ``emit_kv`` (stateless prefill) makes the
+    ys each layer's raw prompt {"k","v"} for direct page landing."""
 
     def body(carry, layer_and_state):
         h, aux = carry
@@ -389,7 +405,8 @@ def stack_apply(
         else:
             lp, st = layer_and_state
         y, new_st, a = block_apply(
-            lp, h, cfg, plan, ctx, positions, st, chunk=chunk, paged=paged
+            lp, h, cfg, plan, ctx, positions, st, chunk=chunk, paged=paged,
+            emit_kv=emit_kv,
         )
         if ctx.sp and ctx.mesh is not None and states is None:
             # Megatron sequence sharding: residual/norm regions live sharded

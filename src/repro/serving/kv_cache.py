@@ -6,7 +6,10 @@ sequences own pages through a table; a functional stack allocator
 provides alloc/release (the slab allocator of §IV-A). Attention over the
 paged cache is the Pallas ``paged_attention`` kernel (scalar-prefetch page
 walk) with ``ref.paged_attention`` as oracle, dispatched through the same
-``backend`` knob (``auto | pallas | ref``) the request apps use.
+``backend`` knob (``auto | pallas | ref``) the request apps use. The
+decode hot loop never writes pages inside the model's layer scan: it
+attends read-only (``paged_attention_stats`` + fresh-token LSE merge) and
+commits all layers' new kv with one :func:`append_token_batch` per step.
 
 All allocator operations come in batched-across-slots form
 (:func:`ensure_capacity_batch` / :func:`append_token_batch` /

@@ -88,6 +88,77 @@ def test_paged_attention_sweep(dtype, ps, maxp, g):
     np.testing.assert_allclose(out, gold, rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("ps,maxp,g", [(4, 3, 1), (8, 5, 4)])
+def test_paged_attention_stats_sweep(dtype, ps, maxp, g):
+    """Raw online-softmax state (acc, m, l) of the kernel vs the oracle,
+    including a zero-length sequence (the empty softmax: 0, NEG_INF, 0)."""
+    rng = np.random.default_rng(5)
+    b, kvh, hd = 3, 2, 16
+    npages = b * maxp + 2
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)) * hd ** -0.5, dtype)
+    kp = jnp.asarray(rng.normal(size=(npages, ps, kvh, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(npages, ps, kvh, hd)), dtype)
+    pt = jnp.asarray(rng.permutation(npages)[: b * maxp].reshape(b, maxp),
+                     jnp.int32)
+    lengths = jnp.asarray([0, ps * maxp, ps * maxp - 3], jnp.int32)
+    outs = ops.paged_attention_stats(q, kp, vp, pt, lengths)
+    golds = ref.paged_attention_stats(q, kp, vp, pt, lengths)
+    tol = 1e-5 if dtype == F32 else 3e-2
+    for out, gold in zip(outs, golds):
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gold), rtol=tol, atol=tol
+        )
+
+
+@pytest.mark.parametrize("use_ref", [True, False])
+def test_paged_ro_merge_matches_write_then_attend(use_ref):
+    """The read-only decode identity: stats over the stale pool + LSE-merge
+    of the fresh token == writing the token first and attending over the
+    grown pool (what the pre-refactor scan did)."""
+    from repro.models.attention import (
+        paged_decode_attention, paged_decode_attention_ro,
+    )
+
+    rng = np.random.default_rng(8)
+    b, kvh, g, hd, ps, maxp = 2, 2, 3, 16, 4, 3
+    npages = b * maxp + 1  # last page = zero sentinel
+    H = kvh * g
+    lengths = np.asarray([5, ps * maxp - 1], np.int32)  # stale token counts
+    kp = np.zeros((npages, ps, kvh, hd), np.float32)
+    vp = np.zeros_like(kp)
+    pt = np.full((b, maxp), -1, np.int32)
+    nxt = 0
+    for i in range(b):
+        for t in range(int(lengths[i]) + 1):  # map room for the fresh token
+            if t % ps == 0:
+                pt[i, t // ps] = nxt
+                nxt += 1
+            if t < lengths[i]:
+                kp[pt[i, t // ps], t % ps] = rng.normal(size=(kvh, hd))
+                vp[pt[i, t // ps], t % ps] = rng.normal(size=(kvh, hd))
+    q = jnp.asarray(rng.normal(size=(b, 1, H, hd)), F32)
+    k_new = jnp.asarray(rng.normal(size=(b, kvh, hd)), F32)
+    v_new = jnp.asarray(rng.normal(size=(b, kvh, hd)), F32)
+    out_ro = paged_decode_attention_ro(
+        q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(pt),
+        jnp.asarray(lengths), k_new, v_new, use_ref=use_ref,
+    )
+    # write-then-attend baseline
+    kp2, vp2 = kp.copy(), vp.copy()
+    for i in range(b):
+        t = int(lengths[i])
+        kp2[pt[i, t // ps], t % ps] = np.asarray(k_new[i])
+        vp2[pt[i, t // ps], t % ps] = np.asarray(v_new[i])
+    out_wr = paged_decode_attention(
+        q, jnp.asarray(kp2), jnp.asarray(vp2), jnp.asarray(pt),
+        jnp.asarray(lengths + 1), use_ref=use_ref,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_ro), np.asarray(out_wr), rtol=2e-5, atol=2e-5
+    )
+
+
 # ---------------------------- flash_attention ------------------------------
 
 @pytest.mark.parametrize("dtype", [F32, BF16])

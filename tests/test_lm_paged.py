@@ -98,6 +98,56 @@ def test_paged_engine_matches_dense_and_backends_bit_for_bit():
     assert results["paged_pallas"] == results["paged_ref"]
 
 
+def _scan_eqns(jaxpr):
+    """All `scan` equations in a jaxpr, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            yield eqn
+        for val in eqn.params.values():
+            for v in val if isinstance(val, (tuple, list)) else (val,):
+                if hasattr(v, "eqns"):  # open Jaxpr
+                    yield from _scan_eqns(v)
+                elif hasattr(v, "jaxpr"):  # ClosedJaxpr
+                    yield from _scan_eqns(v.jaxpr)
+
+
+def test_paged_decode_scan_never_carries_the_pool():
+    """The tentpole invariant of the read-only paged decode: no scan in the
+    decode step may carry or stack a pool-sized (num_pages-dim) array — the
+    pool enters the layer scan as read-only xs, the ys are only the
+    per-layer new k/v, and the single page append happens after the scan."""
+    from repro.models.model import make_paged_kv_config, paged_decode_step
+
+    cfg, ctx, params = _setup()
+    # a pool dim (37/38) no other model/engine dim collides with
+    pcfg = make_paged_kv_config(cfg, ctx, num_pages=37, page_size=4,
+                                max_pages_per_seq=7)
+    kv = pk.make(pcfg, batch=5, dtype=jnp.float32)
+    toks = jnp.zeros((5,), I32)
+    jx = jax.make_jaxpr(
+        lambda t, s: paged_decode_step(params, t, s, pcfg, cfg, ctx,
+                                       kernel_backend="ref")
+    )(toks, kv)
+    pool_dims = {pcfg.num_pages, pcfg.num_pages + 1}
+    scans = list(_scan_eqns(jx.jaxpr))
+    assert scans, "paged decode must scan the layer stack"
+    # sanity anchor: the pool does flow through some scan — as read-only xs
+    assert any(
+        set(tuple(v.aval.shape)) & pool_dims
+        for eqn in scans
+        for v in eqn.invars[eqn.params["num_consts"]
+                            + eqn.params["num_carry"]:]
+    ), "expected the page pool to enter the layer scan as xs"
+    for eqn in scans:
+        nc, nk = eqn.params["num_consts"], eqn.params["num_carry"]
+        for var in list(eqn.invars[nc:nc + nk]) + list(eqn.outvars):
+            shape = tuple(getattr(var.aval, "shape", ()))
+            assert not (set(shape) & pool_dims), (
+                f"pool-sized array round-trips through a scan "
+                f"carry/output: {shape}"
+            )
+
+
 def test_undersized_pool_rejected_at_config_time():
     """A pool that cannot hold even one request would zero the admission
     credit forever (silent livelock) — reject it when the config is built."""

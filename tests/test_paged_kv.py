@@ -129,6 +129,32 @@ def test_prefill_into_pages_matches_token_appends():
         )
 
 
+def test_prefill_into_pages_all_or_nothing_admission():
+    """When the free stack cannot cover every masked slot, nothing may be
+    admitted (the docstring's all-or-nothing promise): pool contents,
+    tables, lengths and the free list all stay untouched."""
+    p = 7  # needs 2 pages per slot at page_size 4
+    tiny = CFG._replace(num_pages=3)  # 2 masked slots want 4 > 3 free
+    batch = 2
+    state = pk.make(tiny, batch=batch, dtype=F32)
+    k = jnp.ones((tiny.layers, batch, p, tiny.kv_heads, tiny.head_dim), F32)
+    st2, ok = pk.prefill_into_pages(
+        state, tiny, jnp.arange(batch, dtype=jnp.int32), k, k,
+        jnp.ones((batch,), bool))
+    assert not bool(ok.any())
+    for after, before in zip(jax.tree_util.tree_leaves(st2),
+                             jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(after), np.asarray(before))
+    # masking one slot off brings the demand within the pool: admitted
+    st3, ok3 = pk.prefill_into_pages(
+        state, tiny, jnp.arange(batch, dtype=jnp.int32), k, k,
+        jnp.asarray([True, False]))
+    assert list(np.asarray(ok3)) == [True, False]
+    assert int(pk.pages_in_use(st3, tiny)) == 2
+    assert list(np.asarray(st3.lengths)) == [p, 0]
+    _pool_invariants(st3, tiny, batch)
+
+
 def _pool_invariants(state, cfg, batch):
     """No leak, no double-free, no aliasing: free pages + mapped pages
     partition the pool exactly."""
