@@ -37,10 +37,19 @@ def run():
         t_poll = measure(poll_fn, ring.entries)
         b_cpoll = cp.bytes_scanned_cpoll(q)
         b_poll = q * capacity * 4  # head word of every slot
+        # q>=1024 on the CPU backend crosses XLA:CPU's intra-op threshold:
+        # the 4*Q-byte compare is handed to the thread pool instead of
+        # running inline on the calling thread, and the cross-thread wakeup
+        # (tens of us on small/loaded hosts; worse pinned to one core)
+        # dwarfs the scan itself. An executor artifact, not cpoll traffic —
+        # bytes stays 4*Q and TPU dispatch does not pay it.
+        cliff = ""
+        if q >= 1024 and jax.default_backend() == "cpu":
+            cliff = ";cliff=xla-cpu-intra-op-threadpool-dispatch(>=4KiB)"
         rows.append(row(
             f"cpoll_scan_q{q}", t_cpoll,
             f"bytes={b_cpoll};poll_us={t_poll:.2f};poll_bytes={b_poll};"
-            f"traffic_ratio={b_poll / b_cpoll:.0f}x",
+            f"traffic_ratio={b_poll / b_cpoll:.0f}x" + cliff,
         ))
         # paper claim: polling-15 a single 1024-entry ring costs ~1.6 GB/s
         # of interconnect; cpoll needs 4 B per notification

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import measure, row
 from repro.core import dlrm
 
@@ -59,25 +60,36 @@ def run():
         ))
 
     # --- kernel-path arm: Pallas embedding reduction vs the jnp oracle -----
-    # Native on TPU at the full batch; elsewhere interpret mode emulates the
-    # grid step-by-step (validation, not speed), so the arm shrinks to stay
-    # runnable — the mode label says which number you are looking at.
-    fwd_kern = jax.jit(
-        lambda d, i: dlrm.forward(params, d, i, CFG, backend="pallas")
-    )
+    # Native on TPU at the full batch. Off-TPU, interpret mode emulates the
+    # grid step-by-step at seconds per call — a number that poisons the
+    # persisted trajectory (it is emulation overhead, not the TPU fast
+    # path), so full runs record an explicit interpret-skipped row instead;
+    # --smoke still exercises the kernel at a tiny batch so kernel-path
+    # breakage keeps failing fast in tier-1.
     on_tpu = jax.default_backend() == "tpu"
-    mode = "native" if on_tpu else "interpret"
-    b_k = b if on_tpu else 4
-    kw = dict(iters=20, warmup=3) if on_tpu else dict(iters=3, warmup=1)
-    dense, idx = dlrm.gen_queries(CFG, b_k, None, hit_rate=0.0, rng=rng)
-    dj, ij = jnp.asarray(dense), jnp.asarray(idx)
-    t_oracle = measure(fwd_raw, dj, ij, **kw)
-    t_kern = measure(fwd_kern, dj, ij, **kw)
-    rows.append(row(
-        "dlrm_kernel_path", t_kern,
-        f"mode={mode};batch={b_k};oracle_us={t_oracle:.0f};"
-        f"kernel_us={t_kern:.0f};speedup={t_oracle / t_kern:.2f}x",
-    ))
+    if on_tpu or common.SMOKE:
+        fwd_kern = jax.jit(
+            lambda d, i: dlrm.forward(params, d, i, CFG, backend="pallas")
+        )
+        mode = "native" if on_tpu else "interpret"
+        b_k = b if on_tpu else 1
+        kw = dict(iters=20, warmup=3) if on_tpu else dict(iters=2, warmup=1)
+        dense, idx = dlrm.gen_queries(CFG, b_k, None, hit_rate=0.0, rng=rng)
+        dj, ij = jnp.asarray(dense), jnp.asarray(idx)
+        t_oracle = measure(fwd_raw, dj, ij, **kw)
+        t_kern = measure(fwd_kern, dj, ij, **kw)
+        rows.append(row(
+            "dlrm_kernel_path", t_kern,
+            f"mode={mode};batch={b_k};oracle_us={t_oracle:.0f};"
+            f"kernel_us={t_kern:.0f};speedup={t_oracle / t_kern:.2f}x",
+        ))
+    else:
+        rows.append(row(
+            "dlrm_kernel_path", 0.0,
+            "mode=interpret-skipped;reason=interpret-mode emulation runs "
+            "seconds/call off-TPU; equivalence is covered by tier-1 tests "
+            "and scripts/tier1.sh --smoke",
+        ))
 
     # host/device collaboration split (the ORCA-DLRM §IV-C path): host
     # preprocessing (rewrite) vs device inference

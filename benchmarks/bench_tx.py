@@ -5,8 +5,19 @@ OPERATION; ORCA packs the multi-op transaction into one log entry and
 traverses once. Latency = measured replica apply time + modeled chain
 transport (hops x NET_RTT + per-replica PCIe/NVM costs). The (0,1) case
 must come out ~equal (paper: ORCA within 3%) and (4,2) must show the
-63-69% reduction."""
+63-69% reduction.
+
+The apply path follows the plan/commit split (``transaction.plan_commit``
+once per batch, ``replica_commit`` per replica): every main row reports
+the ``plan_us``/``commit_us`` decomposition, a chain-length sweep shows
+the plan cost NOT scaling with replicas, and the kernel arm compares the
+``ref`` oracle against the fused Pallas ``tx_commit`` walk
+(``kernel_backend="pallas"``: native on TPU, interpret mode elsewhere —
+interpret numbers measure validation overhead, not the TPU fast path).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +42,29 @@ def _batch(cfg, n_read, n_write, val_words, rng, batch=8):
     return jnp.asarray(out)
 
 
+def _commit_planned(chain, plan, *, use_ref=True, interpret=None):
+    """The chain scan alone: apply a precomputed plan to every replica."""
+    def step(carry, rep):
+        return carry, tx.replica_commit(
+            rep, plan, use_ref=use_ref, interpret=interpret
+        )
+
+    _, new_chain = jax.lax.scan(step, None, chain)
+    return new_chain
+
+
+def _split(cfg, chain, batch, per_tx=False):
+    """(plan_us, commit_us) for the ref backend — per batch call, or per
+    transaction (``per_tx``, the same unit as the main rows' apply_us)."""
+    plan_f = jax.jit(functools.partial(tx.plan_commit, cfg=cfg))
+    commit_f = jax.jit(_commit_planned)
+    plan_us = measure(plan_f, batch)
+    plan = jax.block_until_ready(plan_f(batch))
+    commit_us = measure(commit_f, chain, plan)
+    div = batch.shape[0] if per_tx else 1
+    return plan_us / div, commit_us / div
+
+
 def run():
     rows = []
     rng = np.random.default_rng(0)
@@ -43,6 +77,7 @@ def run():
         for (r, wr) in ((0, 1), (4, 2)):
             batch = _batch(cfg, r, wr, vw, rng)
             t_us = measure(lambda c, b: commit(c, b)[0], chain, batch)
+            plan_us, commit_us = _split(cfg, chain, batch, per_tx=True)
             apply_us = t_us / batch.shape[0]
             n_ops = r + wr
 
@@ -62,8 +97,45 @@ def run():
                 f"tx_{val_bytes}B_r{r}w{wr}_orca", orca_us,
                 f"hyperloop_us={hloop_us:.1f};reduction={red:.1f}%"
                 f";paper=63.2-66.8%(multi-op),~0%(single-op)"
-                f";apply_us={apply_us:.2f}",
+                f";apply_us={apply_us:.2f}"
+                f";plan_us={plan_us:.2f};commit_us={commit_us:.2f}",
             ))
+
+    # --- plan-once chain-length sweep: plan cost must not scale ------------
+    for cl in (2, 4, 8):
+        cfg = tx.TxConfig(num_keys=4096, val_words=16, max_ops=8,
+                          chain_len=cl, log_capacity=256)
+        chain = tx.make_chain(cfg)
+        batch = _batch(cfg, 4, 2, 16, rng)
+        commit = jax.jit(lambda c, b: tx.chain_commit_local(c, b, cfg)[0])
+        t_us = measure(commit, chain, batch)
+        plan_us, commit_us = _split(cfg, chain, batch)
+        rows.append(row(
+            f"tx_chain_len{cl}", t_us,
+            f"plan_us={plan_us:.2f};commit_us={commit_us:.2f};"
+            f"commit_per_replica_us={commit_us / cl:.2f}",
+        ))
+
+    # --- kernel-path arm: the fused Pallas tx_commit walk vs the oracle ----
+    cfg = tx.TxConfig(num_keys=4096, val_words=16, max_ops=8, chain_len=2,
+                      log_capacity=256)
+    chain = tx.make_chain(cfg)
+    batch = _batch(cfg, 4, 2, 16, rng)
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    arms = {
+        be: jax.jit(functools.partial(
+            lambda c, b, be: tx.chain_commit_local(
+                c, b, cfg, kernel_backend=be)[0], be=be))
+        for be in ("ref", "pallas")
+    }
+    t_ref = measure(arms["ref"], chain, batch)
+    t_pal = measure(arms["pallas"], chain, batch)
+    rows.append(row(
+        "tx_kernel_commit_b8", t_pal,
+        f"mode={mode};oracle_us={t_ref:.2f};kernel_us={t_pal:.2f};"
+        f"speedup={t_ref / t_pal:.2f}x",
+    ))
+
     # conflict-control overhead: batch with a hot key
     cfg = tx.TxConfig(num_keys=64, val_words=16, max_ops=4, chain_len=2,
                       log_capacity=256)

@@ -13,6 +13,15 @@ by one outstanding transaction; the others are buffered in order"): within a
 batch, a transaction proceeds iff it is the lowest-indexed claimant of every
 offset it writes; the rest are deferred back to the client queue (retry).
 
+Execution follows the plan/commit split of ``kvstore.plan_put``:
+:func:`plan_commit` runs the ALU half ONCE per batch (parse, concurrency
+control, intra-tx write dedupe, log-slot ranking) and emits a flat
+:class:`TxCommitPlan`; each replica then only runs :func:`replica_commit`,
+which dispatches the memory half — the write-ahead log append + store
+scatter — through ``kernels.ops.tx_commit`` (the fused Pallas kernel in
+``kernels/tx_commit.py``, or its jnp oracle, per the ``kernel_backend``
+knob; both agree bit-for-bit).
+
 Two executions with identical semantics:
 * :func:`chain_commit_local` — the replica chain as a leading array axis,
   traversed with ``lax.scan`` (single-device tests/benchmarks).
@@ -25,8 +34,7 @@ is the persistence domain and is what the checkpointer (fault layer) saves.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 
@@ -107,36 +116,81 @@ def concurrency_control(n_ops, offsets, cfg: TxConfig, mask=None):
     return ok
 
 
-def _apply_writes(store, n_ops, offsets, values, proceed):
-    b, m = offsets.shape
-    live = (jnp.arange(m)[None, :] < n_ops[:, None]) & proceed[:, None]
-    nk = store.shape[0]
-    off = jnp.where(live, offsets, nk)
-    return store.at[off.reshape(-1)].set(
-        values.reshape(-1, values.shape[-1]), mode="drop"
-    )
+class TxCommitPlan(NamedTuple):
+    """The ALU half of a transaction batch, computed ONCE per batch (not
+    once per replica): everything a replica commit needs except its own
+    ``log_tail``. Sentinels follow the scatter convention of
+    ``kvstore.PutPlan`` — ``store_rows == num_keys`` means no store write;
+    a non-proceeding transaction's log slot resolves to ``log_capacity``
+    inside :func:`replica_commit` (both backends drop sentinels)."""
+
+    batch: jax.Array  # (B, TW) raw log records (what the ring persists)
+    values: jax.Array  # (B, M, VW) parsed op values
+    store_rows: jax.Array  # (B*M,) target store row per op, NK = dead
+    log_rank: jax.Array  # (B,) rank among proceeding txs (log-slot offset)
+    proceed: jax.Array  # (B,) bool — the live mask
+    n_commit: jax.Array  # () int32 — log_tail / committed bump
 
 
-def _append_log(state: ReplicaState, batch, proceed):
-    lc = state.log.shape[0]
-    rank = jnp.cumsum(proceed.astype(I32)) - 1
-    slot = (state.log_tail + rank) % lc
-    slot = jnp.where(proceed, slot, lc)
-    log = state.log.at[slot].set(batch, mode="drop")
-    return ReplicaState(
-        state.store, log, state.log_tail + jnp.sum(proceed.astype(I32)),
-        state.committed,
-    )
+def plan_commit(batch, cfg: TxConfig, mask=None, proceed=None) -> TxCommitPlan:
+    """Plan a transaction batch without touching any replica: parse,
+    first-claimant concurrency control, intra-tx write dedupe, log-slot
+    ranking. Every replica then only runs :func:`replica_commit` — the
+    chain scan no longer re-derives any of this per replica.
 
+    ``proceed`` overrides concurrency control when the decision was made
+    elsewhere (the SPMD chain forwards the head's decision down the ring).
 
-def replica_apply(state: ReplicaState, batch, proceed, cfg: TxConfig) -> ReplicaState:
-    """Append to redo-log, then apply writes (write-ahead ordering)."""
+    Within one transaction, duplicate write offsets resolve
+    last-writer-wins (serial op order, §IV-B); shadowed ops get the drop
+    sentinel. Combined with concurrency control keeping proceeding
+    transactions' write sets disjoint, every live store row is unique —
+    which is what lets the commit be a conflict-free dual scatter."""
+    b = batch.shape[0]
+    m = cfg.max_ops
     n, off, val = parse_tx(batch, cfg)
-    state = _append_log(state, batch, proceed)
-    store = _apply_writes(state.store, n, off, val, proceed)
+    if proceed is None:
+        proceed = concurrency_control(n, off, cfg, mask)
+    live = (jnp.arange(m)[None, :] < n[:, None]) & proceed[:, None]  # (B, M)
+    # intra-tx dedupe: op j writes iff no later live op in the same tx
+    # targets the same offset (last-writer-wins = serial op order)
+    j = jnp.arange(m)
+    shadowed = jnp.any(
+        (off[:, :, None] == off[:, None, :])
+        & live[:, None, :]
+        & (j[None, None, :] > j[None, :, None]),
+        axis=-1,
+    )
+    write = live & ~shadowed
+    store_rows = jnp.where(write, off, cfg.num_keys).reshape(b * m)
+    log_rank = jnp.cumsum(proceed.astype(I32)) - 1
+    return TxCommitPlan(
+        batch, val, store_rows, log_rank, proceed,
+        jnp.sum(proceed.astype(I32)),
+    )
+
+
+def replica_commit(state: ReplicaState, plan: TxCommitPlan, *,
+                   use_ref: bool = True, interpret=None) -> ReplicaState:
+    """Execute the planned memory half on one replica: redo-log append +
+    store scatter (write-ahead ordering), fused in ``ops.tx_commit``."""
+    lc = state.log.shape[0]
+    # a batch committing more than LC transactions laps the ring within one
+    # scatter: two ranks share a slot iff they differ by a multiple of LC,
+    # so keeping only the last LC ranks IS sequential append order — and
+    # keeps the duplicate-free scatter deterministic on every backend
+    # (a jnp scatter with duplicate indices has unspecified update order)
+    survives = plan.log_rank >= plan.n_commit - lc
+    slot = jnp.where(
+        plan.proceed & survives, (state.log_tail + plan.log_rank) % lc, lc
+    )
+    log, store = kops.tx_commit(
+        state.log, state.store, plan.batch, plan.values, slot,
+        plan.store_rows, use_ref=use_ref, interpret=interpret,
+    )
     return ReplicaState(
-        store, state.log, state.log_tail,
-        state.committed + jnp.sum(proceed.astype(I32)),
+        store, log, state.log_tail + plan.n_commit,
+        state.committed + plan.n_commit,
     )
 
 
@@ -144,17 +198,26 @@ def replica_apply(state: ReplicaState, batch, proceed, cfg: TxConfig) -> Replica
 # Local (scan) chain
 # ---------------------------------------------------------------------------
 
-def chain_commit_local(chain: ReplicaState, batch, cfg: TxConfig, mask=None):
+def chain_commit_local(chain: ReplicaState, batch, cfg: TxConfig, mask=None,
+                       *, kernel_backend: Optional[str] = "ref"):
     """Commit a batch through the whole chain. Returns (chain, committed,
-    deferred). ``committed[i]`` True once every replica applied tx i."""
-    n, off, _ = parse_tx(batch, cfg)
-    proceed = concurrency_control(n, off, cfg, mask)
+    deferred). ``committed[i]`` True once every replica applied tx i.
+
+    The plan is computed once; the replica scan only runs the commit,
+    dispatched per ``kernel_backend`` (``ref`` default for direct library
+    calls, like ``kvstore.get``/``put``; ``auto``/``pallas`` = the fused
+    Pallas kernel — both agree bit-for-bit)."""
+    plan = plan_commit(batch, cfg, mask)
+    use_ref, interpret = kops.resolve_backend(kernel_backend or "ref")
 
     def step(carry, replica):
-        new_rep = replica_apply(replica, batch, proceed, cfg)
+        new_rep = replica_commit(
+            replica, plan, use_ref=use_ref, interpret=interpret
+        )
         return carry, new_rep
 
     _, new_chain = jax.lax.scan(step, None, chain)
+    proceed = plan.proceed
     deferred = (mask if mask is not None else jnp.ones_like(proceed)) & ~proceed
     return new_chain, proceed, deferred
 
@@ -171,13 +234,19 @@ def chain_hops(cfg: TxConfig, n_ops: int, per_op: bool) -> int:
 # ---------------------------------------------------------------------------
 
 def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
-                      axis: str = "data", mask=None):
+                      axis: str = "data", mask=None,
+                      *, kernel_backend: Optional[str] = "ref"):
     """Replicas sharded over ``axis`` (leading dim == chain_len). The head
     (rank 0) runs concurrency control; the log batch ppermutes down the
-    chain; every rank applies; the ACK ppermutes back (counted, not carried:
-    the commit flag returns to the head after 2*(R-1) hops)."""
+    chain; every rank commits the forwarded plan; the ACK ppermutes back
+    (counted, not carried: the commit flag returns to the head after
+    2*(R-1) hops). ``kernel_backend`` is API-equal to
+    :func:`chain_commit_local` — each rank plans from the forwarded batch
+    + decision (free in wall-clock: ranks are parallel devices) and runs
+    the same dispatched commit."""
     r = cfg.chain_len
     mask_arr = mask if mask is not None else jnp.ones((batch.shape[0],), bool)
+    use_ref, interpret = kops.resolve_backend(kernel_backend or "ref")
 
     def inner(rep, bb, mk):
         # shard_map blocks carry a leading chain dim of 1 — strip it
@@ -198,7 +267,10 @@ def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
             )
 
         bb_f, pr_f = jax.lax.fori_loop(0, r - 1, fwd, (bb, proceed))
-        new_rep = replica_apply(rep, bb_f, pr_f, cfg)
+        plan = plan_commit(bb_f, cfg, proceed=pr_f)
+        new_rep = replica_commit(
+            rep, plan, use_ref=use_ref, interpret=interpret
+        )
         # ACK back-propagation: tail -> head
         ack = pr_f
         def bwd(i, a):

@@ -26,17 +26,20 @@ def request_words(cfg: tx.TxConfig) -> int:
 
 
 def app_step(chain: tx.ReplicaState, payloads, valid, cfg: tx.TxConfig, *,
-             kernel_backend=None):
+             kernel_backend="auto"):
     """Engine hook. payloads: (B, tx_words). A zero count header = no-op.
 
     Returns (chain, responses (B, tx_words)) where responses carry the
-    commit/deferred status in word 0. ``kernel_backend`` is accepted for
-    uniform engine binding; the transaction walk has no Pallas kernel yet
-    (see ROADMAP open items), so every backend runs the jnp path."""
-    del kernel_backend
+    commit/deferred status in word 0. ``kernel_backend`` dispatches the
+    replica commit walk (``auto``/``pallas`` = the fused
+    ``kernels/tx_commit.py`` log-append + store-scatter kernel, ``ref`` =
+    the jnp oracle; bit-for-bit identical) — the APU default, like
+    ``kvstore.app_step``."""
     n_ops = payloads[:, 0]
     live = valid & (n_ops > 0)
-    chain, committed, deferred = tx.chain_commit_local(chain, payloads, cfg, live)
+    chain, committed, deferred = tx.chain_commit_local(
+        chain, payloads, cfg, live, kernel_backend=kernel_backend
+    )
     status = jnp.where(
         committed, RESP_COMMITTED, jnp.where(deferred, RESP_DEFERRED, 0)
     ).astype(I32)

@@ -16,6 +16,7 @@ from repro.kernels import embedding_reduce as _er
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hash_probe as _hp
 from repro.kernels import paged_attention as _pa
+from repro.kernels import tx_commit as _tc
 
 
 def _auto_interpret() -> bool:
@@ -83,6 +84,19 @@ def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
         bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
         interpret=it,
     )
+
+
+def tx_commit(log, store, batch, values, slot, rows, *,
+              use_ref: bool = False, interpret=None):
+    """Fused ORCA-TX replica commit: write-ahead log append + store scatter
+    of a planned transaction batch (``core.transaction.plan_commit``).
+
+    Returns the updated (log, store). Both backends drop sentinel targets
+    (slot == LC / rows == NK) and agree bit-for-bit."""
+    if use_ref:
+        return _ref.tx_commit(log, store, batch, values, slot, rows)
+    it = _auto_interpret() if interpret is None else interpret
+    return _tc.commit(log, store, batch, values, slot, rows, interpret=it)
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,

@@ -46,6 +46,23 @@ def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp):
     return bucket_keys, bucket_ptr, pool
 
 
+def tx_commit(log, store, batch, values, slot, rows):
+    """Fused ORCA-TX replica commit (see ``core.transaction.plan_commit``):
+    write-ahead log append + planned store scatter, in one pass.
+
+    log: (LC, TW); store: (NK, VW); batch: (B, TW) raw log records;
+    values: (B, M, VW); slot: (B,) absolute log slot (LC = drop);
+    rows: (B*M,) store row per op (NK = drop). The plan guarantees live
+    targets are unique, so both scatters are conflict-free — out-of-range
+    sentinels are dropped, the jnp analogue of the Pallas kernel's pad row.
+    """
+    log = log.at[slot].set(batch, mode="drop")
+    store = store.at[rows].set(
+        values.reshape(-1, values.shape[-1]), mode="drop"
+    )
+    return log, store
+
+
 def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2):
     """Two-bucket existence probe (the first two of a GET/PUT's memory
     accesses). Returns (found (B,) bool, ptr (B,) int32 — 0 where missed),

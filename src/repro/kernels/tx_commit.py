@@ -1,0 +1,96 @@
+"""Pallas kernel: fused ORCA-TX commit — redo-log append + store scatter
+(§IV-B, the near-data transaction walk).
+
+The jnp half of a transaction batch (parse, first-claimant concurrency
+control, intra-tx write dedupe, log-slot ranking) runs ONCE in
+``core.transaction.plan_commit``; this kernel is the memory half every
+replica executes: append each proceeding transaction's log entry to its
+ring slot AND scatter its planned store writes, in one VMEM-staged
+aliased-in/out ``pallas_call`` (the ``hash_probe.insert`` scatter style).
+
+Grid = (B, max_ops): step (i, j) streams transaction i's log entry to
+``slot[i]`` (revisited across j — consecutive, so the staged block is
+written once per entry) and op j's value row to store row ``rows[i*M+j]``.
+The plan guarantees live targets are unique — concurrency control keeps
+proceeding transactions' write sets disjoint and the intra-tx dedupe keeps
+one writer per (tx, offset) — so no read-modify-write staging (and no
+target sort) is needed: this is a pure dual scatter. Dead entries
+(deferred transactions, dead ops, intra-tx shadowed writes) target the
+sentinel pad row (``slot == LC`` / ``rows == NK``), the Pallas analogue of
+the oracle's ``mode="drop"``; pads are stripped before returning.
+
+Operand memory spaces come from ``core.placement`` — per-step staged
+blocks (log entry, value row) are small and hot, the aliased log ring and
+store are bulk streaming targets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import placement
+
+_spaces = placement.block_spaces
+
+
+def _commit_kernel(slot_ref, row_ref, log_dst_ref, store_dst_ref,
+                   entry_ref, val_ref, log_out_ref, store_out_ref):
+    # pure dual scatter: write-ahead log entry + planned store row. The
+    # aliased full-array refs (log_dst/store_dst) exist only to pin the
+    # in-place aliasing; the grid only stages the touched blocks.
+    log_out_ref[...] = entry_ref[...]
+    store_out_ref[...] = val_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def commit(log, store, batch, values, slot, rows, *, interpret: bool = True):
+    """Fused planned-transaction commit.
+
+    log: (LC, TW); store: (NK, VW); batch: (B, TW) raw log records;
+    values: (B, M, VW) parsed op values; slot: (B,) int32 absolute log
+    slot (LC = drop); rows: (B*M,) int32 store row per op (NK = drop).
+    Returns the updated (log, store)."""
+    lc, tw = log.shape
+    nk, vw = store.shape
+    b, m = values.shape[0], values.shape[1]
+    # sentinel pad row per scatter target (the mode="drop" analogue)
+    log_p = jnp.concatenate([log, jnp.zeros_like(log[:1])], axis=0)
+    store_p = jnp.concatenate([store, jnp.zeros_like(store[:1])], axis=0)
+    sp = _spaces(
+        {"entry": tw * 4, "val": vw * 4},
+        {"log_store": log_p.nbytes, "store_store": store_p.nbytes},
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # slot, rows
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec(memory_space=sp["log_store"]),  # aliased dst
+            pl.BlockSpec(memory_space=sp["store_store"]),  # aliased dst
+            pl.BlockSpec((1, tw), lambda i, j, slot, rows: (i, 0),
+                         memory_space=sp["entry"]),
+            pl.BlockSpec((1, 1, vw), lambda i, j, slot, rows: (i, j, 0),
+                         memory_space=sp["val"]),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tw), lambda i, j, slot, rows: (slot[i], 0),
+                         memory_space=sp["entry"]),
+            pl.BlockSpec((1, vw), lambda i, j, slot, rows: (rows[i * m + j], 0),
+                         memory_space=sp["val"]),
+        ],
+    )
+    log_o, store_o = pl.pallas_call(
+        _commit_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(log_p.shape, log.dtype),
+            jax.ShapeDtypeStruct(store_p.shape, store.dtype),
+        ],
+        # aliases index the full pallas_call operand list (prefetch included)
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(slot, rows, log_p, store_p, batch, values)
+    return log_o[:lc], store_o[:nk]

@@ -123,12 +123,25 @@ def test_chain_commit_spmd_matches_local():
                 batch[i, base+1:base+3] = rng.integers(0, 9, 2)
         b = jnp.asarray(batch)
         local, p_l, d_l = tx.chain_commit_local(chain, b, cfg)
+        # the pallas-dispatched local walk agrees with the ref default
+        pal, p_k, d_k = tx.chain_commit_local(chain, b, cfg,
+                                              kernel_backend="pallas")
         chain_sh = jax.device_put(chain, jax.tree_util.tree_map(
             lambda _: NamedSharding(mesh, P("data")), chain))
-        spmd, p_s, d_s = tx.chain_commit_spmd(chain_sh, b, cfg, mesh, axis="data")
+        spmd, p_s, d_s = tx.chain_commit_spmd(chain_sh, b, cfg, mesh,
+                                              axis="data",
+                                              kernel_backend="ref")
+        # the pallas commit also runs under shard_map/ppermute
+        spmd_k, p_sk, _ = tx.chain_commit_spmd(chain_sh, b, cfg, mesh,
+                                               axis="data",
+                                               kernel_backend="pallas")
         np.testing.assert_array_equal(np.asarray(p_l), np.asarray(p_s))
-        np.testing.assert_array_equal(np.asarray(local.store), np.asarray(spmd.store))
-        np.testing.assert_array_equal(np.asarray(local.log), np.asarray(spmd.log))
+        np.testing.assert_array_equal(np.asarray(p_l), np.asarray(p_k))
+        np.testing.assert_array_equal(np.asarray(p_l), np.asarray(p_sk))
+        for ref, *others in zip(*(jax.tree_util.tree_leaves(t) for t in
+                                  (local, spmd, pal, spmd_k))):
+            for o in others:
+                np.testing.assert_array_equal(np.asarray(ref), np.asarray(o))
         print("SPMD chain OK")
     """)
 

@@ -76,6 +76,19 @@ def test_redo_log_write_ahead():
         assert entry[0] == 1 and entry[1] == 5 and entry[2] == 42
 
 
+def test_intra_tx_duplicate_offsets_last_writer_wins():
+    """Duplicate write offsets within one transaction resolve in serial op
+    order (the plan's intra-tx dedupe) — deterministically, on every
+    backend, not at the mercy of scatter ordering."""
+    chain = tx.make_chain(CFG)
+    batch = _mk_batch(CFG, [[(5, (1, 1)), (9, (2, 2)), (5, (3, 3))]])
+    chain, proceed, _ = tx.chain_commit_local(chain, batch, CFG)
+    assert bool(proceed[0])
+    store = np.asarray(chain.store)[0]
+    np.testing.assert_array_equal(store[5], [3, 3])  # last op won
+    np.testing.assert_array_equal(store[9], [2, 2])
+
+
 def test_hop_model_matches_paper_claims():
     """Fig. 11: ORCA traverses the chain once per tx; HyperLoop once per op.
     For a (4,2) transaction (6 ops) the saving is 6x in chain traversals —
@@ -85,6 +98,67 @@ def test_hop_model_matches_paper_claims():
     orca = tx.chain_hops(cfg2, 6, per_op=False)
     hloop = tx.chain_hops(cfg2, 6, per_op=True)
     assert hloop == 6 * orca
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_proceeding_write_sets_disjoint(seed):
+    """Concurrency control must never let two proceeding transactions write
+    the same offset (the §IV-B single-owner invariant) — this is what makes
+    the planned commit a conflict-free scatter. Batches deliberately include
+    masked rows and duplicate offsets within and across transactions."""
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(2, 9))
+    txs = [
+        [(int(rng.integers(0, 8)), tuple(rng.integers(0, 9, CFG.val_words)))
+         for _ in range(int(rng.integers(1, CFG.max_ops + 1)))]
+        for _ in range(b)
+    ]
+    batch = _mk_batch(CFG, txs)
+    mask = jnp.asarray(rng.random(b) < 0.7)
+    plan = tx.plan_commit(batch, CFG, mask)
+    proceed = np.asarray(plan.proceed)
+    assert not np.any(proceed & ~np.asarray(mask))  # masked rows never proceed
+    claimed = set()
+    for i, ops in enumerate(txs):
+        if not proceed[i]:
+            continue
+        mine = {off for off, _ in ops}
+        assert not (mine & claimed), f"tx {i} shares offsets {mine & claimed}"
+        claimed |= mine
+    # the plan's live store rows are globally unique (dual-scatter safety)
+    rows = np.asarray(plan.store_rows)
+    live_rows = rows[rows < CFG.num_keys]
+    assert len(live_rows) == len(set(live_rows.tolist()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_log_ring_wraparound(seed):
+    """The redo-log ring must keep absorbing commits past ``log_capacity``:
+    slots wrap modulo LC while ``log_tail`` counts monotonically, matching a
+    python ring model entry-for-entry."""
+    cfg = tx.TxConfig(num_keys=32, val_words=2, max_ops=2, chain_len=2,
+                      log_capacity=8)
+    rng = np.random.default_rng(seed)
+    chain = tx.make_chain(cfg)
+    model = np.zeros((cfg.log_capacity, tx.tx_words(cfg)), np.int32)
+    model_tail = 0
+    for _ in range(6):  # 6 rounds x up to 4 commits >> capacity 8
+        txs = [
+            [(int(rng.integers(0, 32)), tuple(rng.integers(0, 99, 2)))
+             for _ in range(int(rng.integers(1, 3)))]
+            for _ in range(4)
+        ]
+        batch = _mk_batch(cfg, txs)
+        chain, proceed, _ = tx.chain_commit_local(chain, batch, cfg)
+        for i in np.flatnonzero(np.asarray(proceed)):
+            model[model_tail % cfg.log_capacity] = np.asarray(batch)[i]
+            model_tail += 1
+    assert model_tail > cfg.log_capacity  # the wrap actually happened
+    assert int(chain.log_tail[0]) == model_tail
+    for r in range(cfg.chain_len):
+        np.testing.assert_array_equal(np.asarray(chain.log)[r], model)
 
 
 @settings(max_examples=15, deadline=None)
