@@ -8,10 +8,13 @@ must come out ~equal (paper: ORCA within 3%) and (4,2) must show the
 63-69% reduction.
 
 The apply path follows the plan/commit split (``transaction.plan_commit``
-once per batch, ``replica_commit`` per replica): every main row reports
-the ``plan_us``/``commit_us`` decomposition, a chain-length sweep shows
-the plan cost NOT scaling with replicas, and the kernel arm compares the
-``ref`` oracle against the fused Pallas ``tx_commit`` walk
+once per batch, one whole-chain batched commit via
+``transaction.chain_commit_apply``): every main row reports the
+``plan_us``/``commit_us`` decomposition, a chain-length sweep shows
+the plan cost NOT scaling with replicas, a state-capacity sweep shows the
+marginal commit cost NOT scaling with log/store size (the
+sentinel-resident layout vs the old pad-per-call wrapper), and the kernel
+arm compares the ``ref`` oracle against the fused Pallas ``tx_commit`` walk
 (``kernel_backend="pallas"``: native on TPU, interpret mode elsewhere —
 interpret numbers measure validation overhead, not the TPU fast path).
 """
@@ -23,8 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import NET_RTT_US, PCIE_RTT_US, UPI_HOP_US, measure, row
+from benchmarks.common import (
+    NET_RTT_US, PCIE_RTT_US, UPI_HOP_US, marginal_step_us, measure, row,
+)
 from repro.core import transaction as tx
+from repro.kernels import ops as kops
 
 NVM_WRITE_US = 0.8  # Optane media write (paper §IV-B region, [74,172])
 
@@ -43,14 +49,10 @@ def _batch(cfg, n_read, n_write, val_words, rng, batch=8):
 
 
 def _commit_planned(chain, plan, *, use_ref=True, interpret=None):
-    """The chain scan alone: apply a precomputed plan to every replica."""
-    def step(carry, rep):
-        return carry, tx.replica_commit(
-            rep, plan, use_ref=use_ref, interpret=interpret
-        )
-
-    _, new_chain = jax.lax.scan(step, None, chain)
-    return new_chain
+    """The chain commit alone: one whole-chain scatter of a prebuilt plan."""
+    return tx.chain_commit_apply(
+        chain, plan, use_ref=use_ref, interpret=interpret
+    )
 
 
 def _split(cfg, chain, batch, per_tx=False):
@@ -115,6 +117,79 @@ def run():
             f"plan_us={plan_us:.2f};commit_us={commit_us:.2f};"
             f"commit_per_replica_us={commit_us / cl:.2f}",
         ))
+
+    # --- state-capacity sweep: commit cost vs log/store size ---------------
+    # The sentinel-resident layout's claim: per-commit cost no longer
+    # scales with log_capacity/num_keys. Measured the way the engine runs
+    # commits — repeated rounds as a lax.scan carry (run_steps), where XLA
+    # updates the state in place — via common.marginal_step_us. The legacy
+    # arm is the same round loop with the pre-resident wrapper body
+    # emulated exactly (per-replica scan that pads each replica's
+    # log+store per commit, scatters, strips).
+    def _resident_loop(chain0, plan, steps):
+        def one_round(c, _):
+            return tx.chain_commit_apply(c, plan, use_ref=True), None
+
+        return jax.lax.scan(one_round, chain0, None, length=steps)[0]
+
+    def _legacy_loop(live_log0, live_store0, plan, lc, steps):
+        survives = plan.log_rank >= plan.n_commit - lc
+        slot = jnp.where(plan.proceed & survives, plan.log_rank % lc, lc)
+
+        def one_round(c, _):
+            def step(carry, rep):
+                log, store = rep  # old layout: pad, commit, strip
+                logp = jnp.concatenate(
+                    [log, jnp.zeros_like(log[:1])], axis=0
+                )
+                storep = jnp.concatenate(
+                    [store, jnp.zeros_like(store[:1])], axis=0
+                )
+                logp, storep = kops.tx_commit(
+                    logp, storep, plan.batch, plan.values, slot,
+                    plan.store_rows, use_ref=True,
+                )
+                return carry, (logp[:-1], storep[:-1])
+
+            return jax.lax.scan(step, None, c)[1], None
+
+        return jax.lax.scan(
+            one_round, (live_log0, live_store0), None, length=steps
+        )[0]
+
+    legacy_f = jax.jit(_legacy_loop, static_argnames=("lc", "steps"))
+    resident_f = jax.jit(_resident_loop, static_argnames=("steps",))
+    n_steps = 32
+    sweep = {}
+    for cap_bits in (8, 11, 14):
+        lc = 1 << cap_bits
+        cfg = tx.TxConfig(num_keys=4 * lc, val_words=16, max_ops=8,
+                          chain_len=2, log_capacity=lc)
+        chain = tx.make_chain(cfg)
+        batch = _batch(cfg, 4, 2, 16, rng)
+        plan = jax.block_until_ready(tx.plan_commit(batch, cfg))
+        live = (chain.live_log, chain.live_store)
+        leg, res = marginal_step_us(
+            [functools.partial(legacy_f, *live, plan, lc),
+             functools.partial(resident_f, chain, plan)],
+            n_steps,
+        )
+        sweep[lc] = (leg, res)
+        rows.append(row(
+            f"tx_commit_capacity{lc}", res,
+            f"log_rows={lc};store_rows={4 * lc};batch=8;chain_len=2;"
+            f"resident_us={res:.2f};legacy_pad_copy_us={leg:.2f};"
+            f"speedup={leg / res:.2f}x",
+        ))
+    caps = sorted(sweep)
+    leg_scale = sweep[caps[-1]][0] / sweep[caps[0]][0]
+    res_scale = sweep[caps[-1]][1] / sweep[caps[0]][1]
+    rows.append(row(
+        "tx_commit_capacity_flatness", 0.0,
+        f"capacity_ratio={caps[-1] // caps[0]}x;"
+        f"resident_scaling={res_scale:.2f}x;legacy_scaling={leg_scale:.2f}x"
+        f";flat_means_copies_no_longer_O(state)",
+    ))
 
     # --- kernel-path arm: the fused Pallas tx_commit walk vs the oracle ----
     cfg = tx.TxConfig(num_keys=4096, val_words=16, max_ops=8, chain_len=2,

@@ -54,6 +54,27 @@ def measure(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     return float(np.median(times))
 
 
+def marginal_step_us(arm_fns, n_steps: int, *, episodes: int = 3,
+                     iters: int = 10, floor: float = 0.01):
+    """Marginal per-step cost of N arms, measured as (t(2n) - t(n)) / n.
+
+    Each arm is a callable taking ONE argument — the scan length — and is
+    expected to run that many steps under one jit (loop-carry style, the
+    ``run_steps`` shape). The differencing cancels any O(state) one-time
+    cost a non-donated jit boundary charges (carry initialization); arms
+    are interleaved within each episode so wall-clock drift cannot fake a
+    comparison. A marginal below the timer noise floor differences to ~0
+    (occasionally negative) and is clamped to ``floor`` so rows/ratios
+    stay meaningful. Returns a list of per-arm medians, in arm order."""
+    samples = [[] for _ in arm_fns]
+    for _ in range(episodes):
+        for k, fn in enumerate(arm_fns):
+            tn = measure(fn, n_steps, iters=iters)
+            t2n = measure(fn, 2 * n_steps, iters=iters)
+            samples[k].append((t2n - tn) / n_steps)
+    return [max(float(np.median(s)), floor) for s in samples]
+
+
 def zipf_keys(n: int, key_space: int, theta: float, rng) -> np.ndarray:
     """Zipf(theta) keys over [1, key_space] (paper's 0.9 skew)."""
     ranks = np.arange(1, key_space + 1, dtype=np.float64)

@@ -18,5 +18,11 @@ fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 if [[ "$SMOKE" == 1 ]]; then
   echo "--- smoke benchmarks (a few iterations per arm) ---"
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke
+  # BENCH_PERSIST=1 (CI) appends the smoke rows to BENCH_<app>.json so the
+  # workflow can upload them as the per-PR perf-trajectory artifact
+  EXTRA=()
+  [[ "${BENCH_PERSIST:-0}" == 1 ]] && EXTRA+=(--persist)
+  # ${EXTRA[@]+...}: empty-array expansion is an unbound-variable error
+  # under set -u on bash <= 4.3 (macOS default bash 3.2)
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke ${EXTRA[@]+"${EXTRA[@]}"}
 fi

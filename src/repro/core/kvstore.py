@@ -38,18 +38,40 @@ class KVConfig(NamedTuple):
 
 
 class KVState(NamedTuple):
-    bucket_keys: jax.Array  # (NB, W, KW) int32
-    bucket_ptr: jax.Array  # (NB, W) int32 value-pool row, -1 = empty
-    pool: jax.Array  # (NP, VW) int32
+    """Sentinel-resident layout: every scatter-target array carries one
+    permanent all-zero pad row past its live extent (the shared convention
+    of ``serving.kv_cache``'s zero sentinel page) — dropped/no-op writes
+    land there as zeros instead of the kernel wrappers concatenating and
+    stripping an O(state) padded copy around every commit."""
+
+    bucket_keys: jax.Array  # (NB + 1, W, KW) int32; row NB = zero sentinel
+    bucket_ptr: jax.Array  # (NB + 1, W) int32 value-pool row, -1 = empty
+    pool: jax.Array  # (NP + 1, VW) int32; row NP = zero sentinel
     alloc: jax.Array  # () int32 bump allocator
     dropped: jax.Array  # () int32 PUTs rejected (both buckets full)
 
+    @property
+    def num_buckets(self) -> int:
+        """Live bucket rows (the resident sentinel row excluded)."""
+        return self.bucket_keys.shape[0] - 1
+
+    @property
+    def pool_size(self) -> int:
+        """Live value-pool rows (the resident sentinel row excluded)."""
+        return self.pool.shape[0] - 1
+
 
 def make(cfg: KVConfig) -> KVState:
+    # the sentinel row of bucket_ptr is 0 (not -1) so every sentinel row in
+    # the state is all-zero — the hygiene invariant the property tests pin
     return KVState(
-        bucket_keys=jnp.zeros((cfg.num_buckets, cfg.ways, cfg.key_words), I32),
-        bucket_ptr=jnp.full((cfg.num_buckets, cfg.ways), -1, I32),
-        pool=jnp.zeros((cfg.pool_size, cfg.val_words), I32),
+        bucket_keys=jnp.zeros(
+            (cfg.num_buckets + 1, cfg.ways, cfg.key_words), I32
+        ),
+        bucket_ptr=jnp.full(
+            (cfg.num_buckets + 1, cfg.ways), -1, I32
+        ).at[cfg.num_buckets].set(0),
+        pool=jnp.zeros((cfg.pool_size + 1, cfg.val_words), I32),
         alloc=jnp.zeros((), I32),
         dropped=jnp.zeros((), I32),
     )
@@ -71,7 +93,7 @@ def get(state: KVState, keys, mask=None, *, backend: Optional[str] = "ref"):
     calls — the ``kernels.ref`` oracle) or ``auto``/``pallas`` for the
     kernel fast path; results are identical (integer data, single-match
     buckets)."""
-    nb = state.bucket_keys.shape[0]
+    nb = state.num_buckets
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
     use_ref, interpret = kops.resolve_backend(backend or "ref")
@@ -110,8 +132,13 @@ class PutPlan(NamedTuple):
     """The ALU half of a batched PUT: where every write lands.
 
     Sentinels follow the scatter convention: ``tb == NB`` means no bucket
-    write, ``wp == NP`` means no value write (both backends drop them —
-    jnp via ``mode="drop"``, Pallas via a pad row)."""
+    write, ``wp == NP`` means no value write — both backends aim them at
+    the state's resident zero sentinel row and zero the payload, so the
+    sentinel stays zero and no padded state copy is ever materialized.
+
+    The target sort orders (``bucket_order``/``row_order``) are part of the
+    plan — ALU staging, computed once here so the Pallas commit's
+    same-target VMEM-block sharing never re-sorts per dispatch."""
 
     tb: jax.Array  # (B,) target bucket row
     tw: jax.Array  # (B,) target way within the bucket
@@ -120,6 +147,8 @@ class PutPlan(NamedTuple):
     alloc: jax.Array  # () updated bump allocator
     dropped: jax.Array  # () updated drop counter
     ok: jax.Array  # (B,) per-request success
+    bucket_order: jax.Array  # (B,) argsort(tb): bucket-commit issue order
+    row_order: jax.Array  # (B,) argsort(wp): value-write issue order
 
 
 def plan_put(state: KVState, keys, mask=None, *,
@@ -135,8 +164,8 @@ def plan_put(state: KVState, keys, mask=None, *,
     b = keys.shape[0]
     if mask is None:
         mask = jnp.ones((b,), bool)
-    nb = state.bucket_keys.shape[0]
-    np_ = state.pool.shape[0]
+    nb = state.num_buckets
+    np_ = state.pool_size
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
     use_ref, interpret = kops.resolve_backend(backend or "ref")
@@ -179,8 +208,10 @@ def plan_put(state: KVState, keys, mask=None, *,
     # provisional pool rows (final pool_ok applied after phase 2)
     # phase 1 commit of bucket_ptr occupancy with sentinel rows, so phase 2
     # sees primaries as occupied (a batch can feed one bucket through BOTH
-    # h1 and h2 — found by hypothesis)
-    tb1 = jnp.where(fits1, h1, nb)
+    # h1 and h2 — found by hypothesis). nb + 1 (not nb): the occupancy temp
+    # must not scribble on the resident sentinel row, so non-fitting rows
+    # aim past the array and mode="drop" discards them
+    tb1 = jnp.where(fits1, h1, nb + 1)
     occ_ptr = state.bucket_ptr.at[tb1, jnp.where(fits1, w1, 0)].set(
         jnp.iinfo(jnp.int32).max, mode="drop"
     )
@@ -224,7 +255,11 @@ def plan_put(state: KVState, keys, mask=None, *,
     alloc = state.alloc + jnp.maximum(jnp.sum((fits1 | fits2).astype(I32)), 0)
     dropped = state.dropped + jnp.sum(drop.astype(I32))
     ok = mask & (exists | fits1 | fits2)
-    return PutPlan(tb, tw, bptr_val, wp, alloc, dropped, ok)
+    return PutPlan(
+        tb, tw, bptr_val, wp, alloc, dropped, ok,
+        bucket_order=jnp.argsort(tb, stable=True),
+        row_order=jnp.argsort(wp, stable=True),
+    )
 
 
 def put(state: KVState, keys, vals, mask=None, *,
@@ -248,6 +283,7 @@ def put(state: KVState, keys, vals, mask=None, *,
     bucket_keys, bucket_ptr, pool = kops.hash_put(
         state.bucket_keys, state.bucket_ptr, state.pool, keys, vals,
         plan.tb, plan.tw, plan.bptr_val, plan.wp,
+        plan.bucket_order, plan.row_order,
         use_ref=use_ref, interpret=interpret,
     )
     return (

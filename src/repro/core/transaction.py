@@ -24,10 +24,17 @@ knob; both agree bit-for-bit).
 
 Two executions with identical semantics:
 * :func:`chain_commit_local` — the replica chain as a leading array axis,
-  traversed with ``lax.scan`` (single-device tests/benchmarks).
+  committed with ONE batched dual scatter over the replica axis
+  (:func:`chain_commit_apply`; single-device tests/benchmarks).
 * :func:`chain_commit_spmd` — replicas sharded over a mesh axis; the log
   batch travels by ``lax.ppermute`` (one collective hop per replica) and the
-  ACK back-propagates on the same ring, as in Fig. 6.
+  ACK back-propagates on the same ring, as in Fig. 6; each rank runs
+  :func:`replica_commit` on its resident shard.
+
+State arrays follow the sentinel-resident layout (see
+:class:`ReplicaState`): the commit scatters never materialize a padded
+copy of the log or store, so per-commit cost is O(touched rows), not
+O(state).
 
 The store is offset-addressed like HyperLoop's NVM space; the redo-log ring
 is the persistence domain and is what the checkpointer (fault layer) saves.
@@ -56,10 +63,36 @@ class TxConfig(NamedTuple):
 
 
 class ReplicaState(NamedTuple):
-    store: jax.Array  # (NK, VW) int32 — the NVM region
-    log: jax.Array  # (LC, 1 + max_ops*(1+VW)) int32 redo-log ring
+    """Sentinel-resident layout (the ``kvstore.KVState`` convention, which
+    in turn mirrors the page pool's zero sentinel page): ``store`` and
+    ``log`` each carry one permanent all-zero pad row past the live
+    extent. Dead commit targets scatter zeroed payloads there, so the
+    commit kernels never concatenate/strip an O(state) padded copy per
+    replica. ``live_store``/``live_log`` view the live rows (chain states
+    with a leading replica axis included)."""
+
+    store: jax.Array  # (NK + 1, VW) int32 — the NVM region; row NK = sentinel
+    log: jax.Array  # (LC + 1, 1 + max_ops*(1+VW)) int32; row LC = sentinel
     log_tail: jax.Array  # () int32
     committed: jax.Array  # () int32
+
+    @property
+    def num_keys(self) -> int:
+        """Live store rows (the resident sentinel row excluded)."""
+        return self.store.shape[-2] - 1
+
+    @property
+    def log_capacity(self) -> int:
+        """Live redo-log ring slots (the resident sentinel row excluded)."""
+        return self.log.shape[-2] - 1
+
+    @property
+    def live_store(self) -> jax.Array:
+        return self.store[..., :-1, :]
+
+    @property
+    def live_log(self) -> jax.Array:
+        return self.log[..., :-1, :]
 
 
 def tx_words(cfg: TxConfig) -> int:
@@ -69,8 +102,8 @@ def tx_words(cfg: TxConfig) -> int:
 
 def make_replica(cfg: TxConfig) -> ReplicaState:
     return ReplicaState(
-        store=jnp.zeros((cfg.num_keys, cfg.val_words), I32),
-        log=jnp.zeros((cfg.log_capacity, tx_words(cfg)), I32),
+        store=jnp.zeros((cfg.num_keys + 1, cfg.val_words), I32),
+        log=jnp.zeros((cfg.log_capacity + 1, tx_words(cfg)), I32),
         log_tail=jnp.zeros((), I32),
         committed=jnp.zeros((), I32),
     )
@@ -173,8 +206,11 @@ def plan_commit(batch, cfg: TxConfig, mask=None, proceed=None) -> TxCommitPlan:
 def replica_commit(state: ReplicaState, plan: TxCommitPlan, *,
                    use_ref: bool = True, interpret=None) -> ReplicaState:
     """Execute the planned memory half on one replica: redo-log append +
-    store scatter (write-ahead ordering), fused in ``ops.tx_commit``."""
-    lc = state.log.shape[0]
+    store scatter (write-ahead ordering), fused in ``ops.tx_commit``. The
+    state flows through in its sentinel-resident layout — the dispatch
+    hands ``ops.tx_commit`` the (LC+1)/(NK+1) arrays as-is and gets the
+    same shapes back, aliased in place on the Pallas path."""
+    lc = state.log_capacity
     # a batch committing more than LC transactions laps the ring within one
     # scatter: two ranks share a slot iff they differ by a multiple of LC,
     # so keeping only the last LC ranks IS sequential append order — and
@@ -195,28 +231,54 @@ def replica_commit(state: ReplicaState, plan: TxCommitPlan, *,
 
 
 # ---------------------------------------------------------------------------
-# Local (scan) chain
+# Local (batched-over-replicas) chain
 # ---------------------------------------------------------------------------
 
+def chain_commit_apply(chain: ReplicaState, plan: TxCommitPlan, *,
+                       use_ref: bool = True, interpret=None) -> ReplicaState:
+    """Apply a precomputed plan to every replica of a local chain with ONE
+    batched dual scatter over the replica axis (``ops.tx_commit_chain``).
+
+    The old replica scan staged each replica's whole log+store through the
+    scan's xs/ys — an O(state) copy per replica per round that survived
+    the sentinel-resident layout; batching the scatter over the (R, ...)
+    chain arrays touches only the planned rows, so the chain state can
+    stay resident across engine steps. Per-replica ``log_tail`` values are
+    honoured (replicas advance in lockstep from :func:`make_chain`, but a
+    hand-built chain with skewed tails commits exactly like a
+    :func:`replica_commit` loop would)."""
+    lc = chain.log_capacity
+    survives = plan.log_rank >= plan.n_commit - lc
+    slot = jnp.where(
+        (plan.proceed & survives)[None, :],
+        (chain.log_tail[:, None] + plan.log_rank[None, :]) % lc,
+        lc,
+    )
+    log, store = kops.tx_commit_chain(
+        chain.log, chain.store, plan.batch, plan.values, slot,
+        plan.store_rows, use_ref=use_ref, interpret=interpret,
+    )
+    return ReplicaState(
+        store, log, chain.log_tail + plan.n_commit,
+        chain.committed + plan.n_commit,
+    )
+
+
 def chain_commit_local(chain: ReplicaState, batch, cfg: TxConfig, mask=None,
-                       *, kernel_backend: Optional[str] = "ref"):
+                       *, kernel_backend: Optional[str] = "auto"):
     """Commit a batch through the whole chain. Returns (chain, committed,
     deferred). ``committed[i]`` True once every replica applied tx i.
 
-    The plan is computed once; the replica scan only runs the commit,
-    dispatched per ``kernel_backend`` (``ref`` default for direct library
-    calls, like ``kvstore.get``/``put``; ``auto``/``pallas`` = the fused
-    Pallas kernel — both agree bit-for-bit)."""
+    The plan is computed once; the commit is one whole-chain dual scatter
+    (:func:`chain_commit_apply`), dispatched per ``kernel_backend``.
+    Default ``auto`` — the fused Pallas kernel (native on TPU, interpret
+    elsewhere), matching ``tx_app.app_step``'s APU default; ``ref`` = the
+    jnp oracle. Both agree bit-for-bit."""
     plan = plan_commit(batch, cfg, mask)
-    use_ref, interpret = kops.resolve_backend(kernel_backend or "ref")
-
-    def step(carry, replica):
-        new_rep = replica_commit(
-            replica, plan, use_ref=use_ref, interpret=interpret
-        )
-        return carry, new_rep
-
-    _, new_chain = jax.lax.scan(step, None, chain)
+    use_ref, interpret = kops.resolve_backend(kernel_backend or "auto")
+    new_chain = chain_commit_apply(
+        chain, plan, use_ref=use_ref, interpret=interpret
+    )
     proceed = plan.proceed
     deferred = (mask if mask is not None else jnp.ones_like(proceed)) & ~proceed
     return new_chain, proceed, deferred
@@ -235,7 +297,7 @@ def chain_hops(cfg: TxConfig, n_ops: int, per_op: bool) -> int:
 
 def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
                       axis: str = "data", mask=None,
-                      *, kernel_backend: Optional[str] = "ref"):
+                      *, kernel_backend: Optional[str] = "auto"):
     """Replicas sharded over ``axis`` (leading dim == chain_len). The head
     (rank 0) runs concurrency control; the log batch ppermutes down the
     chain; every rank commits the forwarded plan; the ACK ppermutes back
@@ -246,7 +308,7 @@ def chain_commit_spmd(chain: ReplicaState, batch, cfg: TxConfig, mesh,
     the same dispatched commit."""
     r = cfg.chain_len
     mask_arr = mask if mask is not None else jnp.ones((batch.shape[0],), bool)
-    use_ref, interpret = kops.resolve_backend(kernel_backend or "ref")
+    use_ref, interpret = kops.resolve_backend(kernel_backend or "auto")
 
     def inner(rep, bb, mk):
         # shard_map blocks carry a leading chain dim of 1 — strip it

@@ -20,10 +20,15 @@ stay resident:
       staged block (the DDIO-style "hot line stays in cache" path);
   pass 2 (``_write_rows``):     value rows streamed to their pool slots.
 
-Dropped/no-op entries target a sentinel pad row (the ``mode="drop"``
-analogue), stripped before returning. Operand memory spaces come from
-``core.placement`` — the per-region TPH decision applied at kernel
-construction time.
+Dropped/no-op entries target the state's **resident** zero sentinel row
+(the ``mode="drop"`` analogue): ``KVState`` permanently carries one pad
+row past the live extent — the same convention as the page pool's zero
+sentinel page (``serving.kv_cache``) and the TX log/store pad rows
+(``kernels.tx_commit``) — so these wrappers never concatenate or strip an
+O(state) padded copy per call; sentinel-targeted payloads are zeroed and
+the sort order comes precomputed from ``kvstore.plan_put``. Operand
+memory spaces come from ``core.placement`` — the per-region TPH decision
+applied at kernel construction time.
 """
 from __future__ import annotations
 
@@ -60,8 +65,10 @@ def _probe_kernel(h1_ref, h2_ref, keys_ref, bk1_ref, bp1_ref, bk2_ref, bp2_ref, 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def probe(bucket_keys, bucket_ptr, keys, h1, h2, *, interpret: bool = True):
-    """bucket_keys: (NB, W, KW); bucket_ptr: (NB, W); keys: (B, KW);
-    h1/h2: (B,) bucket ids. Returns (found (B,) bool, ptr (B,) int32)."""
+    """bucket_keys: (NB + 1, W, KW); bucket_ptr: (NB + 1, W) — the
+    sentinel-resident ``KVState`` layout (h1/h2 only ever index the NB
+    live rows); keys: (B, KW); h1/h2: (B,) bucket ids.
+    Returns (found (B,) bool, ptr (B,) int32)."""
     b = keys.shape[0]
     w, kw = bucket_keys.shape[1], bucket_keys.shape[2]
     sp = _spaces(
@@ -100,7 +107,8 @@ def _fetch_kernel(ptr_ref, pool_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fetch(pool, ptr, *, interpret: bool = True):
-    """pool: (NP, VW); ptr: (B,) int32 (pre-clamped). Returns (B, VW)."""
+    """pool: (NP + 1, VW), row NP = the zero sentinel; ptr: (B,) int32
+    (pre-clamped — misses resolve to the sentinel row). Returns (B, VW)."""
     b = ptr.shape[0]
     vw = pool.shape[1]
     sp = _spaces({"row": vw * 4}, {})
@@ -122,11 +130,15 @@ def fetch(pool, ptr, *, interpret: bool = True):
 
 def get(state_bucket_keys, state_bucket_ptr, state_pool, keys, h1, h2, *,
         interpret: bool = True):
-    """Full GET walk. Returns (vals (B, VW), found (B,))."""
+    """Full GET walk. Returns (vals (B, VW), found (B,)).
+
+    Misses fetch the pool's resident zero sentinel row (never a live row —
+    the page pool's dead-walk convention); hits are always in live range."""
     found, ptr = probe(
         state_bucket_keys, state_bucket_ptr, keys, h1, h2, interpret=interpret
     )
-    ptr_safe = jnp.clip(ptr, 0, state_pool.shape[0] - 1)
+    np_ = state_pool.shape[0] - 1
+    ptr_safe = jnp.where(found, jnp.clip(ptr, 0, np_), np_)
     vals = fetch(state_pool, ptr_safe, interpret=interpret)
     return jnp.where(found[:, None], vals, 0), found
 
@@ -153,9 +165,10 @@ def _commit_kernel(tb_ref, tw_ref, pv_ref, bkd_ref, bpd_ref, key_ref,
 def commit_buckets(bucket_keys, bucket_ptr, keys, tb, tw, bptr_val, *,
                    interpret: bool = True):
     """Scatter pass 1: set way ``tw[i]`` of bucket row ``tb[i]`` to
-    (keys[i], bptr_val[i]). ``bucket_keys``/``bucket_ptr`` carry a sentinel
-    pad row at index NB that absorbs dropped entries; ``tb`` must be sorted
-    (the wrapper sorts) so duplicate buckets are consecutive."""
+    (keys[i], bptr_val[i]). ``bucket_keys``/``bucket_ptr`` carry their
+    resident sentinel pad row at index NB that absorbs dropped entries
+    (payloads pre-zeroed by ``insert``); ``tb`` must be sorted (the plan
+    sorts) so duplicate buckets are consecutive."""
     b, kw = keys.shape
     w = bucket_ptr.shape[1]
     sp = _spaces(
@@ -202,7 +215,8 @@ def _write_kernel(wp_ref, pool_ref, val_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def write_rows(pool, vals, wp, *, interpret: bool = True):
     """Scatter pass 2: stream value row ``vals[i]`` to pool row ``wp[i]``.
-    ``pool`` carries a sentinel pad row at index NP for no-write entries."""
+    ``pool`` carries its resident sentinel pad row at index NP for
+    no-write entries (payloads pre-zeroed by ``insert``)."""
     b, vw = vals.shape
     sp = _spaces({"val": vw * 4}, {"pool_store": pool.nbytes})
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -226,24 +240,29 @@ def write_rows(pool, vals, wp, *, interpret: bool = True):
 
 
 def insert(state_bucket_keys, state_bucket_ptr, state_pool, keys, vals,
-           tb, tw, bptr_val, wp, *, interpret: bool = True):
+           tb, tw, bptr_val, wp, bucket_order=None, row_order=None, *,
+           interpret: bool = True):
     """Full planned PUT commit (see ``kvstore.plan_put`` for the plan).
 
-    Pads each array with one sentinel row (the ``mode="drop"`` analogue:
-    tb == NB / wp == NP land there), sorts entries by target so duplicate
-    targets share a staged block, runs the two scatter passes, strips the
-    pads. Returns (bucket_keys, bucket_ptr, pool)."""
-    nb = state_bucket_keys.shape[0]
-    np_ = state_pool.shape[0]
-    bk = jnp.concatenate([state_bucket_keys,
-                          jnp.zeros_like(state_bucket_keys[:1])], axis=0)
-    bp = jnp.concatenate([state_bucket_ptr,
-                          jnp.zeros_like(state_bucket_ptr[:1])], axis=0)
-    pool = jnp.concatenate([state_pool, jnp.zeros_like(state_pool[:1])], axis=0)
-    ob = jnp.argsort(tb, stable=True)
+    The state arrays arrive in the sentinel-resident ``KVState`` layout
+    ((NB+1)-bucket / (NP+1)-pool rows), so no padded copy is materialized:
+    dropped entries (tb == NB / wp == NP) scatter zeroed payloads onto the
+    resident sentinel row, entries issue in target-sorted order so
+    duplicate targets share a staged VMEM block (``bucket_order`` /
+    ``row_order`` come precomputed from the plan; recomputed here only for
+    direct calls), and the aliased scatter passes update the state in
+    place. Returns (bucket_keys, bucket_ptr, pool), same shapes in as out.
+    """
+    nb = state_bucket_keys.shape[0] - 1
+    np_ = state_pool.shape[0] - 1
+    keys = jnp.where((tb >= nb)[:, None], 0, keys)
+    bptr_val = jnp.where(tb >= nb, 0, bptr_val)
+    vals = jnp.where((wp >= np_)[:, None], 0, vals)
+    ob = jnp.argsort(tb, stable=True) if bucket_order is None else bucket_order
+    op = jnp.argsort(wp, stable=True) if row_order is None else row_order
     bk, bp = commit_buckets(
-        bk, bp, keys[ob], tb[ob], tw[ob], bptr_val[ob], interpret=interpret
+        state_bucket_keys, state_bucket_ptr, keys[ob], tb[ob], tw[ob],
+        bptr_val[ob], interpret=interpret,
     )
-    op = jnp.argsort(wp, stable=True)
-    pool = write_rows(pool, vals[op], wp[op], interpret=interpret)
-    return bk[:nb], bp[:nb], pool[:np_]
+    pool = write_rows(state_pool, vals[op], wp[op], interpret=interpret)
+    return bk, bp, pool

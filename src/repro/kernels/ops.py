@@ -71,10 +71,16 @@ def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2, *,
 
 
 def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
-             *, use_ref: bool = False, interpret=None):
+             bucket_order=None, row_order=None, *, use_ref: bool = False,
+             interpret=None):
     """Commit phase of a planned batched PUT (``kvstore.plan_put`` output).
 
-    Returns the updated (bucket_keys, bucket_ptr, pool) arrays."""
+    State arrays are in the sentinel-resident ``KVState`` layout
+    ((NB+1)/(NP+1) rows) and come back the same shape — neither backend
+    materializes a padded copy. ``bucket_order``/``row_order`` are the
+    plan's precomputed target sort orders (Pallas staging only; the
+    scatter oracle is order-independent). Returns the updated
+    (bucket_keys, bucket_ptr, pool) arrays."""
     if use_ref:
         return _ref.hash_put(
             bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp
@@ -82,7 +88,7 @@ def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
     it = _auto_interpret() if interpret is None else interpret
     return _hp.insert(
         bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp,
-        interpret=it,
+        bucket_order, row_order, interpret=it,
     )
 
 
@@ -91,12 +97,31 @@ def tx_commit(log, store, batch, values, slot, rows, *,
     """Fused ORCA-TX replica commit: write-ahead log append + store scatter
     of a planned transaction batch (``core.transaction.plan_commit``).
 
-    Returns the updated (log, store). Both backends drop sentinel targets
-    (slot == LC / rows == NK) and agree bit-for-bit."""
+    ``log``/``store`` are in the sentinel-resident ``ReplicaState`` layout
+    ((LC+1)/(NK+1) rows) and come back the same shape — no padded copy.
+    Returns the updated (log, store). Both backends zero sentinel-targeted
+    payloads (slot == LC / rows == NK) and agree bit-for-bit."""
     if use_ref:
         return _ref.tx_commit(log, store, batch, values, slot, rows)
     it = _auto_interpret() if interpret is None else interpret
     return _tc.commit(log, store, batch, values, slot, rows, interpret=it)
+
+
+def tx_commit_chain(log, store, batch, values, slot, rows, *,
+                    use_ref: bool = False, interpret=None):
+    """Whole-chain fused ORCA-TX commit: every replica of a local chain in
+    one batched dual scatter (``transaction.chain_commit_apply``).
+
+    log: (R, LC+1, TW); store: (R, NK+1, VW) — sentinel-resident chain
+    layout, same shapes out, aliased in place on the Pallas path; slot:
+    (R, B) per-replica log slots. Both backends agree bit-for-bit with a
+    per-replica :func:`tx_commit` loop."""
+    if use_ref:
+        return _ref.tx_commit_chain(log, store, batch, values, slot, rows)
+    it = _auto_interpret() if interpret is None else interpret
+    return _tc.commit_chain(
+        log, store, batch, values, slot, rows, interpret=it
+    )
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,

@@ -35,11 +35,20 @@ def dlrm_embedding_reduce(tables, idx):
 def hash_put(bucket_keys, bucket_ptr, pool, keys, vals, tb, tw, bptr_val, wp):
     """Commit phase of a planned batched PUT (see ``kvstore.plan_put``).
 
-    tb/tw: (B,) target bucket/way (tb == NB means no bucket write);
+    The state arrays carry their resident zero sentinel row (``KVState``
+    layout: bucket arrays (NB+1, ...), pool (NP+1, VW)). tb/tw: (B,)
+    target bucket/way (tb == NB = the sentinel, no live bucket write);
     bptr_val: (B,) pool pointer to store; wp: (B,) pool row for the value
-    write (wp == NP means no write). Out-of-range targets are dropped —
-    the jnp scatter analogue of the Pallas kernel's sentinel pad row.
+    write (wp == NP = the sentinel). Sentinel-targeted payloads are zeroed
+    before the scatter so dropped duplicates all write the same zeros —
+    deterministic on every backend, and the sentinel row stays zero.
     """
+    nb = bucket_keys.shape[0] - 1
+    np_ = pool.shape[0] - 1
+    drop_b = tb >= nb
+    keys = jnp.where(drop_b[:, None], 0, keys)
+    bptr_val = jnp.where(drop_b, 0, bptr_val)
+    vals = jnp.where((wp >= np_)[:, None], 0, vals)
     bucket_keys = bucket_keys.at[tb, tw].set(keys, mode="drop")
     bucket_ptr = bucket_ptr.at[tb, tw].set(bptr_val, mode="drop")
     pool = pool.at[wp].set(vals, mode="drop")
@@ -50,16 +59,48 @@ def tx_commit(log, store, batch, values, slot, rows):
     """Fused ORCA-TX replica commit (see ``core.transaction.plan_commit``):
     write-ahead log append + planned store scatter, in one pass.
 
-    log: (LC, TW); store: (NK, VW); batch: (B, TW) raw log records;
-    values: (B, M, VW); slot: (B,) absolute log slot (LC = drop);
-    rows: (B*M,) store row per op (NK = drop). The plan guarantees live
-    targets are unique, so both scatters are conflict-free — out-of-range
-    sentinels are dropped, the jnp analogue of the Pallas kernel's pad row.
+    log: (LC + 1, TW); store: (NK + 1, VW) — the ``ReplicaState``
+    sentinel-resident layout (last row = the zero sentinel). batch:
+    (B, TW) raw log records; values: (B, M, VW); slot: (B,) absolute log
+    slot (LC = the sentinel); rows: (B*M,) store row per op (NK = the
+    sentinel). The plan guarantees live targets are unique, so both
+    scatters are conflict-free; sentinel-targeted payloads are zeroed so
+    dead duplicates write identical zeros and the sentinel rows stay zero.
     """
+    lc = log.shape[0] - 1
+    nk = store.shape[0] - 1
+    batch = jnp.where((slot >= lc)[:, None], 0, batch)
+    vals = values.reshape(-1, values.shape[-1])
+    vals = jnp.where((rows >= nk)[:, None], 0, vals)
     log = log.at[slot].set(batch, mode="drop")
-    store = store.at[rows].set(
-        values.reshape(-1, values.shape[-1]), mode="drop"
+    store = store.at[rows].set(vals, mode="drop")
+    return log, store
+
+
+def tx_commit_chain(log, store, batch, values, slot, rows):
+    """Whole-chain commit oracle: the batched-over-replicas form of
+    :func:`tx_commit` — one dual scatter over the (R, ...) chain arrays
+    instead of a per-replica loop, so nothing ever stages a single
+    replica's O(state) log/store.
+
+    log: (R, LC + 1, TW); store: (R, NK + 1, VW); batch: (B, TW) and
+    values: (B, M, VW) shared by every replica; slot: (R, B) per-replica
+    absolute log slot (LC = the sentinel); rows: (B*M,) store row per op
+    (NK = the sentinel), identical on every replica.
+    """
+    r = log.shape[0]
+    lc = log.shape[1] - 1
+    nk = store.shape[1] - 1
+    batch_r = jnp.where(
+        (slot >= lc)[..., None], 0,
+        jnp.broadcast_to(batch[None], (r,) + batch.shape),
     )
+    vals = values.reshape(-1, values.shape[-1])
+    vals = jnp.where((rows >= nk)[:, None], 0, vals)
+    vals_r = jnp.broadcast_to(vals[None], (r,) + vals.shape)
+    ridx = jnp.arange(r)[:, None]
+    log = log.at[ridx, slot].set(batch_r, mode="drop")
+    store = store.at[:, rows].set(vals_r, mode="drop")
     return log, store
 
 
@@ -83,9 +124,13 @@ def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2):
 
 
 def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
-    """Two-bucket probe + value fetch. Returns (vals, found)."""
+    """Two-bucket probe + value fetch. Returns (vals, found).
+
+    Misses read the pool's resident zero sentinel row (last row), matching
+    the Pallas walk — never a live row."""
     found, ptr = hash_probe(bucket_keys, bucket_ptr, keys, h1, h2)
-    vals = pool[jnp.clip(ptr, 0, pool.shape[0] - 1)]
+    np_ = pool.shape[0] - 1
+    vals = pool[jnp.where(found, jnp.clip(ptr, 0, np_), np_)]
     return jnp.where(found[:, None], vals, 0), found
 
 

@@ -16,8 +16,12 @@ proceeding transactions' write sets disjoint and the intra-tx dedupe keeps
 one writer per (tx, offset) — so no read-modify-write staging (and no
 target sort) is needed: this is a pure dual scatter. Dead entries
 (deferred transactions, dead ops, intra-tx shadowed writes) target the
-sentinel pad row (``slot == LC`` / ``rows == NK``), the Pallas analogue of
-the oracle's ``mode="drop"``; pads are stripped before returning.
+**resident** zero sentinel pad row that ``ReplicaState`` permanently
+carries past the live extent (``slot == LC`` / ``rows == NK``) — the same
+convention as the page pool's zero sentinel page (``serving.kv_cache``)
+and the KVS bucket/pool pad rows (``kernels.hash_probe``) — with their
+payloads zeroed, so nothing is concatenated onto or stripped off the
+O(state) log/store per replica commit.
 
 Operand memory spaces come from ``core.placement`` — per-step staged
 blocks (log entry, value row) are small and hot, the aliased log ring and
@@ -50,19 +54,24 @@ def _commit_kernel(slot_ref, row_ref, log_dst_ref, store_dst_ref,
 def commit(log, store, batch, values, slot, rows, *, interpret: bool = True):
     """Fused planned-transaction commit.
 
-    log: (LC, TW); store: (NK, VW); batch: (B, TW) raw log records;
-    values: (B, M, VW) parsed op values; slot: (B,) int32 absolute log
-    slot (LC = drop); rows: (B*M,) int32 store row per op (NK = drop).
-    Returns the updated (log, store)."""
-    lc, tw = log.shape
-    nk, vw = store.shape
+    log: (LC + 1, TW); store: (NK + 1, VW) — the sentinel-resident
+    ``ReplicaState`` layout, last row = the zero sentinel; batch: (B, TW)
+    raw log records; values: (B, M, VW) parsed op values; slot: (B,) int32
+    absolute log slot (LC = the sentinel); rows: (B*M,) int32 store row
+    per op (NK = the sentinel). Sentinel-targeted payloads are zeroed so
+    dead duplicates write identical zeros (deterministic, sentinel stays
+    zero). Returns the updated (log, store), same shapes in as out — the
+    aliased scatter updates the state in place, no padded copy."""
+    tw = log.shape[1]
+    vw = store.shape[1]
+    lc = log.shape[0] - 1
+    nk = store.shape[0] - 1
     b, m = values.shape[0], values.shape[1]
-    # sentinel pad row per scatter target (the mode="drop" analogue)
-    log_p = jnp.concatenate([log, jnp.zeros_like(log[:1])], axis=0)
-    store_p = jnp.concatenate([store, jnp.zeros_like(store[:1])], axis=0)
+    batch = jnp.where((slot >= lc)[:, None], 0, batch)
+    values = jnp.where((rows >= nk).reshape(b, m)[..., None], 0, values)
     sp = _spaces(
         {"entry": tw * 4, "val": vw * 4},
-        {"log_store": log_p.nbytes, "store_store": store_p.nbytes},
+        {"log_store": log.nbytes, "store_store": store.nbytes},
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # slot, rows
@@ -86,11 +95,82 @@ def commit(log, store, batch, values, slot, rows, *, interpret: bool = True):
         _commit_kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct(log_p.shape, log.dtype),
-            jax.ShapeDtypeStruct(store_p.shape, store.dtype),
+            jax.ShapeDtypeStruct(log.shape, log.dtype),
+            jax.ShapeDtypeStruct(store.shape, store.dtype),
         ],
         # aliases index the full pallas_call operand list (prefetch included)
         input_output_aliases={2: 0, 3: 1},
         interpret=interpret,
-    )(slot, rows, log_p, store_p, batch, values)
-    return log_o[:lc], store_o[:nk]
+    )(slot, rows, log, store, batch, values)
+    return log_o, store_o
+
+
+def _chain_commit_kernel(slot_ref, row_ref, log_dst_ref, store_dst_ref,
+                         entry_ref, val_ref, log_out_ref, store_out_ref):
+    # same pure dual scatter as _commit_kernel, with a leading replica dim
+    log_out_ref[...] = entry_ref[...]
+    store_out_ref[...] = val_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def commit_chain(log, store, batch, values, slot, rows, *,
+                 interpret: bool = True):
+    """Whole-chain fused commit: ONE ``pallas_call`` covering every replica
+    of a local chain (grid (R, B, max_ops)) instead of a scan of
+    per-replica calls — the scan's xs/ys staging moved each replica's
+    whole log+store per round, which re-introduced the O(state) copies the
+    resident sentinel layout exists to kill.
+
+    log: (R, LC + 1, TW); store: (R, NK + 1, VW) — the sentinel-resident
+    chain layout; batch: (B, TW) and values: (B, M, VW), shared by every
+    replica; slot: (R, B) int32 absolute log slot per replica (LC = the
+    sentinel; replicas advance in lockstep but per-replica tails are
+    honoured); rows: (B*M,) int32 store row per op (NK = the sentinel).
+    Returns the updated (log, store), same shapes, aliased in place."""
+    r, lcp, tw = log.shape
+    _, nkp, vw = store.shape
+    lc, nk = lcp - 1, nkp - 1
+    b, m = values.shape[0], values.shape[1]
+    # per-replica zeroed log payloads (batch-sized, never state-sized)
+    batch_r = jnp.where(
+        (slot >= lc)[..., None], 0,
+        jnp.broadcast_to(batch[None], (r, b, tw)),
+    )
+    values = jnp.where((rows >= nk).reshape(b, m)[..., None], 0, values)
+    slot_flat = slot.reshape(r * b)
+    sp = _spaces(
+        {"entry": tw * 4, "val": vw * 4},
+        {"log_store": log.nbytes, "store_store": store.nbytes},
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # slot_flat, rows
+        grid=(r, b, m),
+        in_specs=[
+            pl.BlockSpec(memory_space=sp["log_store"]),  # aliased dst
+            pl.BlockSpec(memory_space=sp["store_store"]),  # aliased dst
+            pl.BlockSpec((1, 1, tw), lambda k, i, j, slot, rows: (k, i, 0),
+                         memory_space=sp["entry"]),
+            pl.BlockSpec((1, 1, vw), lambda k, i, j, slot, rows: (i, j, 0),
+                         memory_space=sp["val"]),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tw),
+                         lambda k, i, j, slot, rows: (k, slot[k * b + i], 0),
+                         memory_space=sp["entry"]),
+            pl.BlockSpec((1, 1, vw),
+                         lambda k, i, j, slot, rows: (k, rows[i * m + j], 0),
+                         memory_space=sp["val"]),
+        ],
+    )
+    log_o, store_o = pl.pallas_call(
+        _chain_commit_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(log.shape, log.dtype),
+            jax.ShapeDtypeStruct(store.shape, store.dtype),
+        ],
+        # aliases index the full pallas_call operand list (prefetch included)
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(slot_flat, rows, log, store, batch_r, values)
+    return log_o, store_o

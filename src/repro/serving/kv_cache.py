@@ -21,7 +21,12 @@ are thin delegating wrappers kept for direct library use.
 The pool carries one extra zero **sentinel page** at physical index
 ``num_pages``: unmapped page-table entries (-1) resolve there during the
 attention walk instead of silently refetching live page 0, and batched
-scatters aim dropped writes past it (``mode="drop"``).
+scatters aim dropped writes past it (``mode="drop"``). This resident
+zero-sentinel layout is the repo-wide convention for accelerator-walked
+state — ``core.kvstore.KVState`` (bucket/pool pad rows committed by
+``kernels.hash_probe``) and ``core.transaction.ReplicaState`` (log/store
+pad rows committed by ``kernels.tx_commit``) carry the same permanent pad
+row so no kernel dispatch ever materializes a padded O(state) copy.
 
 Used by the continuous-batching engine when sequences have wildly different
 lengths: memory is bounded by Σ actual tokens, not slots × max_len.

@@ -213,6 +213,42 @@ def test_tx_commit_kernel_matches_oracle(batch):
     np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal))
 
 
+def test_tx_commit_chain_matches_per_replica_loop():
+    """The whole-chain batched scatter (ops.tx_commit_chain) must equal a
+    per-replica ops.tx_commit loop exactly, on both backends — including a
+    hand-built chain whose replica log tails are skewed."""
+    cfg = tx.TxConfig(num_keys=32, val_words=4, max_ops=4, chain_len=3,
+                      log_capacity=8)
+    rng = np.random.default_rng(9)
+    chain = tx.make_chain(cfg)
+    # skew the tails: slot assignment must honour each replica's own ring
+    chain = chain._replace(log_tail=jnp.asarray([0, 3, 7], I32))
+    b = _random_tx_batch(cfg, 5, rng, offset_space=12)
+    plan = tx.plan_commit(b, cfg)
+    lc = cfg.log_capacity
+    survives = plan.log_rank >= plan.n_commit - lc
+    slot = jnp.where(
+        (plan.proceed & survives)[None, :],
+        (chain.log_tail[:, None] + plan.log_rank[None, :]) % lc, lc)
+    outs = {}
+    for backend, use_ref in (("ref", True), ("pallas", False)):
+        outs[backend] = ops.tx_commit_chain(
+            chain.log, chain.store, plan.batch, plan.values, slot,
+            plan.store_rows, use_ref=use_ref)
+    loop = []
+    for r in range(cfg.chain_len):
+        loop.append(ops.tx_commit(
+            chain.log[r], chain.store[r], plan.batch, plan.values, slot[r],
+            plan.store_rows, use_ref=True))
+    want_log = np.stack([np.asarray(l) for l, _ in loop])
+    want_store = np.stack([np.asarray(s) for _, s in loop])
+    for backend, (log_o, store_o) in outs.items():
+        np.testing.assert_array_equal(np.asarray(log_o), want_log,
+                                      err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(store_o), want_store,
+                                      err_msg=backend)
+
+
 def test_chain_commit_backends_bit_for_bit_across_rounds():
     """chain_commit_local with kernel_backend=ref vs pallas over several
     conflicted, masked, ring-wrapping rounds: every piece of ReplicaState
@@ -258,7 +294,7 @@ def test_tx_batch_larger_than_log_capacity_laps_deterministically():
     chain = states["ref"]
     assert int(chain.log_tail[0]) == b
     # ring slot s holds the LAST writer of that slot: rank 4 + s
-    np.testing.assert_array_equal(np.asarray(chain.log)[0],
+    np.testing.assert_array_equal(np.asarray(chain.live_log)[0],
                                   np.asarray(batch)[4:8])
 
 

@@ -1,0 +1,200 @@
+"""Sentinel-resident state layout: the no-copy invariants of the KVS PUT
+and TX replica-commit hot paths.
+
+The state arrays permanently carry their zero sentinel pad row
+(``KVState``: (NB+1)/(NP+1), ``ReplicaState``: (LC+1)/(NK+1) — the page
+pool's zero-sentinel-page convention), so the kernel wrappers must never
+concatenate a pad row onto (or strip one off) an O(state) array per
+dispatch. Pinned here at the jaxpr level (the pattern of
+``test_lm_paged.test_paged_decode_scan_never_carries_the_pool``), plus
+the donation/aliasing behaviour the layout exists to enable and the
+hypothesis hygiene property that the sentinel rows stay zero forever.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kvstore as kv
+from repro.core import transaction as tx
+
+I32 = jnp.int32
+
+# deliberately odd, collision-free sizes: no model/batch dim equals any of
+# the state dims below, so a shape test cannot pass by coincidence
+KV_CFG = kv.KVConfig(num_buckets=37, ways=2, key_words=2, val_words=4,
+                     pool_size=53)
+TX_CFG = tx.TxConfig(num_keys=29, val_words=2, max_ops=3, chain_len=2,
+                     log_capacity=19)
+
+
+def _eqns(jaxpr):
+    """Every equation, recursing into sub-jaxprs (scan/cond/pjit bodies)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for v in val if isinstance(val, (tuple, list)) else (val,):
+                if hasattr(v, "eqns"):  # open Jaxpr
+                    yield from _eqns(v)
+                elif hasattr(v, "jaxpr"):  # ClosedJaxpr
+                    yield from _eqns(v.jaxpr)
+
+
+def _assert_no_state_sized_pad_copies(jaxpr, state_dims):
+    """No concatenate/pad result may have a state-sized leading dim: a
+    padded copy of the state would show up as exactly that (the old
+    wrappers concatenated a pad row onto every state array per call)."""
+    for eqn in _eqns(jaxpr):
+        if eqn.primitive.name not in ("concatenate", "pad"):
+            continue
+        for var in eqn.outvars:
+            shape = tuple(getattr(var.aval, "shape", ()))
+            assert not (shape and shape[0] in state_dims), (
+                f"{eqn.primitive.name} materializes a state-sized copy: "
+                f"{shape}"
+            )
+
+
+def _kv_state_dims(cfg):
+    # live size, resident (+1), and would-be re-padded (+2) leading dims
+    return {cfg.num_buckets, cfg.num_buckets + 1, cfg.num_buckets + 2,
+            cfg.pool_size, cfg.pool_size + 1, cfg.pool_size + 2}
+
+
+def _tx_state_dims(cfg):
+    return {cfg.num_keys, cfg.num_keys + 1, cfg.num_keys + 2,
+            cfg.log_capacity, cfg.log_capacity + 1, cfg.log_capacity + 2}
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_put_dispatch_materializes_no_padded_state_copy(backend):
+    s = kv.make(KV_CFG)
+    keys = jnp.ones((8, KV_CFG.key_words), I32)
+    vals = jnp.ones((8, KV_CFG.val_words), I32)
+    jx = jax.make_jaxpr(
+        lambda st, k, v: kv.put(st, k, v, backend=backend)
+    )(s, keys, vals)
+    _assert_no_state_sized_pad_copies(jx.jaxpr, _kv_state_dims(KV_CFG))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_tx_commit_dispatch_materializes_no_padded_state_copy(backend):
+    chain = tx.make_chain(TX_CFG)
+    batch = jnp.zeros((6, tx.tx_words(TX_CFG)), I32).at[:, 0].set(1)
+    jx = jax.make_jaxpr(
+        lambda c, b: tx.chain_commit_local(c, b, TX_CFG,
+                                           kernel_backend=backend)
+    )(chain, batch)
+    _assert_no_state_sized_pad_copies(jx.jaxpr, _tx_state_dims(TX_CFG))
+
+
+def test_pallas_scatters_alias_state_in_and_out():
+    """The whole point of the resident layout: the scatter kernels' declared
+    input_output_aliases survive to the dispatched jaxpr (no interposed
+    copy means the aliased operand IS the state buffer)."""
+    s = kv.make(KV_CFG)
+    keys = jnp.ones((8, KV_CFG.key_words), I32)
+    vals = jnp.ones((8, KV_CFG.val_words), I32)
+    jx = jax.make_jaxpr(
+        lambda st, k, v: kv.put(st, k, v, backend="pallas")
+    )(s, keys, vals)
+    aliased = [
+        eqn for eqn in _eqns(jx.jaxpr)
+        if eqn.primitive.name == "pallas_call"
+        and tuple(eqn.params.get("input_output_aliases") or ())
+    ]
+    # commit_buckets (bucket_keys+bucket_ptr) and write_rows (pool)
+    assert len(aliased) >= 2, "expected aliased scatter pallas_calls"
+
+    chain = tx.make_chain(TX_CFG)
+    batch = jnp.zeros((6, tx.tx_words(TX_CFG)), I32).at[:, 0].set(1)
+    jx = jax.make_jaxpr(
+        lambda c, b: tx.chain_commit_local(c, b, TX_CFG,
+                                           kernel_backend="pallas")
+    )(chain, batch)
+    aliased = [
+        eqn for eqn in _eqns(jx.jaxpr)
+        if eqn.primitive.name == "pallas_call"
+        and tuple(eqn.params.get("input_output_aliases") or ())
+    ]
+    assert aliased, "expected the fused tx_commit pallas_call to alias"
+
+
+def test_donated_state_aliases_through_put_commit():
+    """With the state donated at the jit boundary, XLA can alias every
+    state buffer input→output on the pallas path — the end-to-end
+    donation the per-call pad copies used to defeat."""
+    s = kv.make(KV_CFG)
+    keys = jnp.ones((8, KV_CFG.key_words), I32)
+    vals = jnp.ones((8, KV_CFG.val_words), I32)
+    f = jax.jit(
+        lambda st, k, v: kv.put(st, k, v, backend="pallas")[0],
+        donate_argnums=0,
+    )
+    hlo = f.lower(s, keys, vals).compile().as_text()
+    assert "input_output_alias" in hlo
+    # all three O(state) arrays (bucket_keys, bucket_ptr, pool) alias
+    n_alias = hlo.count("may-alias") + hlo.count("must-alias")
+    assert n_alias >= 3, f"only {n_alias} aliased params in compiled HLO"
+
+
+# --------------------------- sentinel hygiene ------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_kvs_sentinel_rows_stay_zero(seed):
+    """Arbitrary PUT/GET traffic — duplicates, masked rows, way conflicts,
+    drops, pool exhaustion — must leave the resident sentinel rows of all
+    three KVS state arrays zero, on both backends."""
+    cfg = kv.KVConfig(num_buckets=8, ways=2, key_words=2, val_words=4,
+                      pool_size=24)  # tiny: forces spills + drops
+    rng = np.random.default_rng(seed)
+    for backend in ("ref", "pallas"):
+        s = kv.make(cfg)
+        put = jax.jit(lambda st, k, v, m: kv.put(st, k, v, m, backend=backend))
+        get = jax.jit(lambda st, k: kv.get(st, k, backend=backend))
+        for _ in range(4):
+            keys = jnp.asarray(rng.integers(1, 30, (16, 2)), I32)
+            vals = jnp.asarray(rng.integers(1, 99, (16, 4)), I32)
+            mask = jnp.asarray(rng.random(16) < 0.8)
+            s, _ = put(s, keys, vals, mask)
+            get(s, keys)  # GETs must not perturb state either
+        assert int(s.alloc) > 0  # traffic actually landed
+        for arr in (s.bucket_keys, s.bucket_ptr, s.pool):
+            np.testing.assert_array_equal(
+                np.asarray(arr[-1]), 0,
+                err_msg=f"{backend}: sentinel row dirtied",
+            )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_tx_sentinel_rows_stay_zero(seed):
+    """Arbitrary conflicted/masked commit rounds, including batches lapping
+    the redo-log ring past ``log_capacity``, must leave the resident
+    sentinel rows of log and store zero on every replica, both backends."""
+    cfg = tx.TxConfig(num_keys=16, val_words=2, max_ops=3, chain_len=2,
+                      log_capacity=4)  # batch 6 > LC 4: wraps within a call
+    rng = np.random.default_rng(seed)
+    w = tx.tx_words(cfg)
+    for backend in ("ref", "pallas"):
+        chain = tx.make_chain(cfg)
+        commit = jax.jit(lambda c, b, m: tx.chain_commit_local(
+            c, b, cfg, m, kernel_backend=backend))
+        for _ in range(3):
+            batch = np.zeros((6, w), np.int32)
+            for i in range(6):
+                n = int(rng.integers(1, cfg.max_ops + 1))
+                batch[i, 0] = n
+                for j in range(n):
+                    base = 1 + j * (1 + cfg.val_words)
+                    batch[i, base] = int(rng.integers(0, cfg.num_keys))
+                    batch[i, base + 1: base + 3] = rng.integers(1, 99, 2)
+            mask = jnp.asarray(rng.random(6) < 0.85)
+            chain, _, _ = commit(chain, jnp.asarray(batch), mask)
+        for arr in (chain.log, chain.store):
+            np.testing.assert_array_equal(
+                np.asarray(arr[:, -1]), 0,
+                err_msg=f"{backend}: sentinel row dirtied",
+            )

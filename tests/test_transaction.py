@@ -158,7 +158,7 @@ def test_property_log_ring_wraparound(seed):
     assert model_tail > cfg.log_capacity  # the wrap actually happened
     assert int(chain.log_tail[0]) == model_tail
     for r in range(cfg.chain_len):
-        np.testing.assert_array_equal(np.asarray(chain.log)[r], model)
+        np.testing.assert_array_equal(np.asarray(chain.live_log)[r], model)
 
 
 @settings(max_examples=15, deadline=None)
@@ -183,4 +183,4 @@ def test_property_committed_equals_serial_execution(seed):
     for ops in txs:  # serial semantics in batch order
         for off, val in ops:
             ref[off] = val
-    np.testing.assert_array_equal(np.asarray(chain.store)[0], ref)
+    np.testing.assert_array_equal(np.asarray(chain.live_store)[0], ref)
