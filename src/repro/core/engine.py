@@ -21,6 +21,14 @@ read-only over the pool (stale-pages stats walk + fresh-token LSE merge);
 each step commits every layer's new KV with one batched page append — the
 in-place, no-payload-bouncing discipline of the paper's APU applied to the
 engine's own hot loop.
+
+Generation termination is per slot (continuous batching proper): a slot
+finishes on ``eos_token`` or its per-request cap (``gen_len`` is the cap
+ceiling; requests carry their own cap word), releasing pages and admitting
+queued work inside the same jitted step. With ``host_pages > 0`` the pool
+is oversubscribed against *expected* live pages and ``make_swap_service``
+moves whole requests between the device pool and a host cold tier at the
+step boundary (``PagedKVState.residency``, ``kv_cache.swap_out/swap_in``).
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cpoll as cp
 from repro.core import ringbuf as rb
@@ -190,10 +199,17 @@ class LMEngineConfig(NamedTuple):
     num_queues: int = 4
     capacity: int = 16
     prompt_len: int = 16  # fixed prompt words per request
-    gen_len: int = 16  # tokens generated per request
+    # gen_len is the per-request *cap* (and the response-payload width):
+    # a request carries its own cap <= gen_len in the request payload's
+    # last word, and EOS (below) can terminate it earlier still.
+    gen_len: int = 16
     slots: int = 8  # continuous-batching slots
     admit_per_step: int = 2  # prefill admissions per step
     cache_len: int = 64  # dense path: per-slot ring-cache length
+    # EOS-style termination: a slot whose last emitted token equals
+    # eos_token completes immediately (variable-length generation). -1
+    # disables the check and requests run to their cap.
+    eos_token: int = -1
     # --- paged decode path (serving/kv_cache shared page pool) ------------
     # paged=True replaces the dense per-slot layer caches with a PagedKVState
     # page pool: slots allocate pages on admission, append per-token KV
@@ -202,6 +218,18 @@ class LMEngineConfig(NamedTuple):
     paged: bool = False
     page_size: int = 8  # tokens per KV page
     num_pages: int = 0  # pool size; 0 = worst case (slots x pages/request)
+    # --- host cold tier (ORCA component (4): device<->host page swap) -----
+    # host_pages > 0 attaches a kv_cache.HostColdTier of that many pages
+    # and switches admission credit from worst-case (gen_len pages per
+    # request, never stalls) to expected-live pages under EOS against the
+    # TOTAL hot+cold budget — the pool may be oversubscribed; a slot whose
+    # mid-decode page allocation finds the pool dry stalls (slot_stalled)
+    # and the step-boundary swap service evicts a victim's pages to the
+    # host tier, restoring them when credit returns.
+    host_pages: int = 0
+    # expected generated tokens under EOS for the credit math (0 = gen_len,
+    # i.e. no oversubscription from admission's point of view).
+    expected_gen_len: int = 0
     # APU kernel dispatch for the page walk: "auto" = Pallas (native on
     # TPU, interpret mode elsewhere), "pallas" = same spelled explicitly,
     # "ref" = the jnp oracle.
@@ -219,6 +247,8 @@ class LMEngineState(NamedTuple):
     slot_done: jax.Array  # (N,) tokens generated so far
     slot_out: jax.Array  # (N, gen_len) generated tokens
     slot_last: jax.Array  # (N,) last token (next decode input)
+    slot_cap: jax.Array  # (N,) this request's generation cap (<= gen_len)
+    slot_stalled: jax.Array  # (N,) bool: pool was dry for its page alloc
     steps: jax.Array
     completed: jax.Array
 
@@ -226,8 +256,11 @@ class LMEngineState(NamedTuple):
 def lm_make(cfg: LMEngineConfig, decode_state) -> LMEngineState:
     n = cfg.slots
     return LMEngineState(
-        req=rb.make(cfg.num_queues, cfg.capacity, cfg.prompt_len),
-        resp=rb.make(cfg.num_queues, cfg.capacity, cfg.gen_len),
+        # request entries carry the prompt plus one trailing cap word;
+        # response entries lead with a generated-token count header
+        # (variable-length completions share a fixed-width ring entry)
+        req=rb.make(cfg.num_queues, cfg.capacity, cfg.prompt_len + 1),
+        resp=rb.make(cfg.num_queues, cfg.capacity, cfg.gen_len + 1),
         cpoll=cp.make(cfg.num_queues),
         sched=sched.make(cfg.num_queues),
         decode=decode_state,
@@ -236,6 +269,8 @@ def lm_make(cfg: LMEngineConfig, decode_state) -> LMEngineState:
         slot_done=jnp.zeros((n,), I32),
         slot_out=jnp.zeros((n, cfg.gen_len), I32),
         slot_last=jnp.zeros((n,), I32),
+        slot_cap=jnp.full((n,), cfg.gen_len, I32),
+        slot_stalled=jnp.zeros((n,), bool),
         steps=jnp.zeros((), I32),
         completed=jnp.zeros((), I32),
     )
@@ -243,8 +278,22 @@ def lm_make(cfg: LMEngineConfig, decode_state) -> LMEngineState:
 
 def lm_max_pages_per_request(cfg: LMEngineConfig) -> int:
     """Worst-case pages a request ever holds: the prompt plus every decoded
-    token's kv except the final one (never stored — it is never attended)."""
+    token's kv except the final one (never stored — it is never attended).
+    ``gen_len`` is a *cap*, so this is the bound a request can reach, not
+    what a typical EOS-terminated request occupies — see
+    :func:`lm_expected_pages_per_request` for the credit expectation."""
     tokens = cfg.prompt_len + max(cfg.gen_len - 1, 1)
+    return -(-tokens // cfg.page_size)
+
+
+def lm_expected_pages_per_request(cfg: LMEngineConfig) -> int:
+    """Expected-live pages per request under EOS/cap termination — the
+    credit unit when the pool is oversubscribed against a host cold tier
+    (``host_pages > 0``). Uses ``expected_gen_len`` (clamped to the
+    ``gen_len`` cap; 0 falls back to the cap, i.e. the worst case)."""
+    gen = cfg.expected_gen_len or cfg.gen_len
+    gen = min(max(gen, 1), cfg.gen_len)
+    tokens = cfg.prompt_len + max(gen - 1, 1)
     return -(-tokens // cfg.page_size)
 
 
@@ -257,9 +306,20 @@ def lm_paged_kv_config(cfg: LMEngineConfig, model_cfg, ctx):
     num_pages = cfg.num_pages or cfg.slots * mppr
     if num_pages < mppr:
         raise ValueError(
-            f"num_pages={num_pages} cannot hold even one request "
-            f"({mppr} pages at page_size={cfg.page_size}); admission credit "
-            f"would be 0 forever"
+            f"num_pages={num_pages} cannot hold even one request at its "
+            f"gen_len={cfg.gen_len} cap ({mppr} pages at page_size="
+            f"{cfg.page_size}); admission credit would be 0 forever. "
+            f"Grow the pool, shrink prompt_len/gen_len, or attach a host "
+            f"cold tier (host_pages) only on top of a pool that fits one "
+            f"worst-case request"
+        )
+    if cfg.host_pages and cfg.host_pages < (cfg.slots - 1) * mppr:
+        raise ValueError(
+            f"host_pages={cfg.host_pages} cannot park {cfg.slots - 1} "
+            f"worst-case victims ({(cfg.slots - 1) * mppr} pages): with "
+            f"every slot stalled on a dry pool the swap service must be "
+            f"able to evict all but one runner, or the engine deadlocks "
+            f"(gen_len is a cap — requests may run all the way to it)"
         )
     return make_paged_kv_config(
         model_cfg, ctx, num_pages=num_pages, page_size=cfg.page_size,
@@ -276,14 +336,35 @@ def lm_make_paged(cfg: LMEngineConfig, model_cfg, ctx) -> LMEngineState:
     return lm_make(cfg, kv)
 
 
-def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None) -> LMEngineState:
+def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None,
+              gen_caps=None) -> LMEngineState:
+    """Enqueue requests. ``prompts`` is (n, prompt_len); the optional
+    ``gen_caps`` (n,) rides in the request entry's trailing cap word
+    (0 = the ``gen_len`` default; the engine clips to [1, gen_len])."""
     n = queue_ids.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
+    words = state.req.entries.shape[-1]
+    if prompts.shape[-1] == words - 1:  # append the per-request cap word
+        caps = (jnp.zeros((n,), I32) if gen_caps is None
+                else jnp.asarray(gen_caps, I32))
+        prompts = jnp.concatenate([prompts.astype(I32), caps[:, None]], axis=1)
     ok = mask & (rb.free_slots(state.req)[queue_ids] > 0)
     req = rb.enqueue(state.req, queue_ids, prompts, ok)
     cpo = cp.doorbell(state.cpoll, queue_ids, ok.astype(I32))
     return state._replace(req=req, cpoll=cpo)
+
+
+def _lm_terminal(cfg: LMEngineConfig, done, cap, last):
+    """Per-slot terminal predicate: the request hit its cap, or EOS-style
+    termination fired (the slot has emitted at least one token and the most
+    recent one is ``eos_token``). Evaluated pre-decode for eligibility and
+    post-decode for completion, so eos-at-prefill and cap=1 both finish
+    without a wasted decode."""
+    term = done >= cap
+    if cfg.eos_token >= 0:
+        term = term | ((done > 0) & (last == cfg.eos_token))
+    return term
 
 
 def lm_engine_step(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
@@ -307,26 +388,77 @@ def lm_engine_step(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
 
 def _lm_step_dense(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
                    params, prefill_fn, decode_fn):
+    """Continuous-batching order: decode -> complete -> admit. Completion
+    is EOS/cap-driven per slot, and a finished slot's replacement is
+    admitted in the SAME jitted step (mid-batch slot recycling)."""
     from repro.models.model import DecodeState
 
     nslots = cfg.slots
-    # --- admission: up to admit_per_step requests into free slots ---------
+
+    # --- decode one token for every eligible slot -------------------------
+    # eligibility excludes slots already terminal (eos at prefill, cap=1):
+    # they skip decode and drain through completion below untouched
+    active = state.slot_active
+    eligible = active & ~_lm_terminal(
+        cfg, state.slot_done, state.slot_cap, state.slot_last
+    )
+    dec = state.decode
+    dec2, logits = decode_fn(params, state.slot_last, dec)
+    nxt = jnp.argmax(logits, axis=-1).astype(I32)
+    write_pos = jnp.clip(state.slot_done, 0, cfg.gen_len - 1)
+    slot_out = jnp.where(
+        eligible[:, None],
+        state.slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
+        state.slot_out,
+    )
+    slot_done = state.slot_done + eligible.astype(I32)
+    slot_last = jnp.where(eligible, nxt, state.slot_last)
+    # freeze state for slots that did not decode
+    dec_post = DecodeState(
+        jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                eligible.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old
+            ),
+            dec2.layers, dec.layers,
+        ),
+        jnp.where(eligible, dec2.pos, dec.pos),
+    )
+
+    # --- completions: variable-length responses out -----------------------
+    finished = active & _lm_terminal(cfg, slot_done, state.slot_cap, slot_last)
+    # response entry = [count | tokens...]: padding beyond `count` is zero
+    # because slot_out rows are zeroed at admission
+    payload = jnp.concatenate([slot_done[:, None], slot_out], axis=1)
+    resp = _enqueue_multi(
+        state.resp, jnp.clip(state.slot_queue, 0, cfg.num_queues - 1),
+        payload, finished,
+    )
+    slot_active = active & ~finished
+    slot_queue = jnp.where(finished, -1, state.slot_queue)
+    slot_done = jnp.where(finished, 0, slot_done)
+    slot_cap = jnp.where(finished, cfg.gen_len, state.slot_cap)
+    completed = state.completed + jnp.sum(finished.astype(I32))
+
+    # --- admission into the just-freed slots ------------------------------
     avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
-    free = ~state.slot_active
+    free = ~slot_active
     n_free = jnp.sum(free.astype(I32))
     budget = jnp.minimum(n_free, cfg.admit_per_step)
-    take, sch = sched.schedule(
-        state.sched, avail, cfg.admit_per_step
-    )
+    take, sch = sched.schedule(state.sched, avail, cfg.admit_per_step)
     # clamp the schedule to the number of free slots (keep rr order)
     cum = jnp.cumsum(take)
     take = jnp.where(cum <= budget, take, jnp.maximum(take - (cum - budget), 0))
     cpo = cp.cpoll_partial(state.cpoll, jnp.arange(cfg.num_queues, dtype=I32), take)
     qids, counts = sched.selected_queues(take)
-    prompts, srcq, valid = rb.gather_batch(
+    payloads, srcq, valid = rb.gather_batch(
         state.req, qids, counts, cfg.admit_per_step
     )
     req = rb.pop(state.req, qids, counts)
+    prompts = payloads[:, : cfg.prompt_len]
+    cap_word = payloads[:, cfg.prompt_len]
+    caps = jnp.clip(
+        jnp.where(cap_word > 0, cap_word, cfg.gen_len), 1, cfg.gen_len
+    )
 
     # target slots: the first `admit_per_step` free slots (by index)
     slot_ids = jnp.argsort(~free, stable=True)[: cfg.admit_per_step].astype(I32)
@@ -338,72 +470,42 @@ def _lm_step_dense(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
     adm_next = jnp.argmax(adm_logits, axis=-1).astype(I32)
 
     # scatter admitted sequences into the global decode state
-    dec = state.decode
     new_layers = jax.tree_util.tree_map(
-        lambda g, a: g.at[:, slot_tgt].set(a, mode="drop"), dec.layers, adm_state.layers
+        lambda g, a: g.at[:, slot_tgt].set(a, mode="drop"),
+        dec_post.layers, adm_state.layers,
     )
-    new_pos = dec.pos.at[slot_tgt].set(adm_state.pos, mode="drop")
-    slot_active = state.slot_active.at[slot_tgt].set(True, mode="drop")
-    slot_queue = state.slot_queue.at[slot_tgt].set(
+    new_pos = dec_post.pos.at[slot_tgt].set(adm_state.pos, mode="drop")
+    slot_active = slot_active.at[slot_tgt].set(True, mode="drop")
+    slot_queue = slot_queue.at[slot_tgt].set(
         jnp.where(admit_ok, srcq, -1), mode="drop"
     )
-    slot_done = state.slot_done.at[slot_tgt].set(0, mode="drop")
-    slot_last = state.slot_last.at[slot_tgt].set(adm_next, mode="drop")
-    slot_out = state.slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
-    slot_done = slot_done.at[slot_tgt].add(
-        jnp.where(admit_ok, 1, 0), mode="drop"
-    )
+    slot_done = slot_done.at[slot_tgt].set(1, mode="drop")
+    slot_last = slot_last.at[slot_tgt].set(adm_next, mode="drop")
+    slot_cap = slot_cap.at[slot_tgt].set(caps, mode="drop")
+    slot_out = slot_out.at[slot_tgt].set(0, mode="drop")
+    slot_out = slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
 
-    # --- decode one token for every active slot ---------------------------
-    dec2 = DecodeState(new_layers, new_pos)
-    dec3, logits = decode_fn(params, slot_last, dec2)
-    nxt = jnp.argmax(logits, axis=-1).astype(I32)
-    active = slot_active
-    write_pos = jnp.clip(slot_done, 0, cfg.gen_len - 1)
-    slot_out = jnp.where(
-        active[:, None],
-        slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
-        slot_out,
-    )
-    slot_done = slot_done + active.astype(I32)
-    slot_last = jnp.where(active, nxt, slot_last)
-    # freeze state for inactive slots
-    dec_final = DecodeState(
-        jax.tree_util.tree_map(
-            lambda new, old: jnp.where(
-                active.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old
-            ),
-            dec3.layers, dec2.layers,
-        ),
-        jnp.where(active, dec3.pos, dec2.pos),
-    )
-
-    # --- completions -------------------------------------------------------
-    # route by the post-admission slot_queue: a request admitted and
-    # finished in the same step (gen_len <= 2) has no entry in the stale one
-    finished = active & (slot_done >= cfg.gen_len)
-    resp = _enqueue_multi(
-        state.resp, jnp.clip(slot_queue, 0, cfg.num_queues - 1),
-        slot_out, finished,
-    )
-    slot_active = slot_active & ~finished
     return LMEngineState(
-        req=req, resp=resp, cpoll=cpo, sched=sch, decode=dec_final,
-        slot_active=slot_active,
-        slot_queue=jnp.where(finished, -1, slot_queue),
-        slot_done=jnp.where(finished, 0, slot_done),
-        slot_out=slot_out, slot_last=slot_last,
-        steps=state.steps + 1,
-        completed=state.completed + jnp.sum(finished.astype(I32)),
+        req=req, resp=resp, cpoll=cpo, sched=sch,
+        decode=DecodeState(new_layers, new_pos),
+        slot_active=slot_active, slot_queue=slot_queue,
+        slot_done=slot_done, slot_out=slot_out, slot_last=slot_last,
+        slot_cap=slot_cap, slot_stalled=state.slot_stalled,
+        steps=state.steps + 1, completed=completed,
     )
 
 
 def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
                    params, prefill_fn=None):
-    """The paged-decode engine step: admission lands prompt KV directly in
-    pages (straight off the prefill scan, no dense staging cache), decode
-    attends read-only through the paged stats walk and commits one batched
-    KV append per step, completion releases pages back to the pool."""
+    """The paged-decode engine step, continuous-batching order
+    (decode -> complete -> admit): decode attends read-only through the
+    paged stats walk and commits one batched KV append per step for every
+    *eligible* slot (active, device-resident, not yet terminal), EOS/cap
+    completion releases pages back to the pool, and admission refills the
+    just-freed slots inside the same jitted step. Slots whose mid-decode
+    page allocation found the pool dry are flagged in ``slot_stalled`` —
+    the host-boundary swap service (:func:`make_swap_service`) reads that
+    flag to evict a victim's pages to the cold tier."""
     from repro.models.model import paged_decode_step, prefill_kv
     from repro.serving import kv_cache as pk
 
@@ -412,26 +514,83 @@ def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
     kv = state.decode
     mppr = pcfg.max_pages_per_seq
 
-    # --- admission, back-pressured by page credit -------------------------
-    # Every admitted request may grow to `mppr` pages before it completes;
-    # admitting only what the pool can commit to means a mid-sequence page
-    # allocation can never fail — the same role ring-buffer credit plays
-    # for response slots (paper §III-A flow control).
+    # --- decode one token for every eligible slot through the page walk ---
+    active = state.slot_active
+    hot = kv.residency == pk.HOT
+    eligible = active & hot & ~_lm_terminal(
+        cfg, state.slot_done, state.slot_cap, state.slot_last
+    )
+    kv, logits, ok = paged_decode_step(
+        params, state.slot_last, kv, pcfg, model_cfg, ctx,
+        active=eligible, kernel_backend=cfg.kernel_backend,
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(I32)
+    advance = eligible & ok  # ok False = pool dry, slot stalls
+    stalled = eligible & ~ok
+    write_pos = jnp.clip(state.slot_done, 0, cfg.gen_len - 1)
+    slot_out = jnp.where(
+        advance[:, None],
+        state.slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
+        state.slot_out,
+    )
+    slot_done = state.slot_done + advance.astype(I32)
+    slot_last = jnp.where(advance, nxt, state.slot_last)
+
+    # --- completions: responses out, pages back to the pool ---------------
+    # cold slots never finish here: they are paused mid-flight and their
+    # data lives host-side — the swap service restores them first
+    finished = active & hot & _lm_terminal(
+        cfg, slot_done, state.slot_cap, slot_last
+    )
+    payload = jnp.concatenate([slot_done[:, None], slot_out], axis=1)
+    resp = _enqueue_multi(
+        state.resp, jnp.clip(state.slot_queue, 0, cfg.num_queues - 1),
+        payload, finished,
+    )
+    kv = pk.release_batch(kv, pcfg, finished)
+    slot_active = active & ~finished
+    slot_queue = jnp.where(finished, -1, state.slot_queue)
+    slot_done = jnp.where(finished, 0, slot_done)
+    slot_cap = jnp.where(finished, cfg.gen_len, state.slot_cap)
+    stalled = stalled & ~finished
+    completed = state.completed + jnp.sum(finished.astype(I32))
+
+    # --- admission into the just-freed slots, page-credit back-pressured --
     avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
-    free = ~state.slot_active
+    free = ~slot_active
     n_free = jnp.sum(free.astype(I32))
     n_active = nslots - n_free
-    credit = jnp.maximum(pcfg.num_pages - n_active * mppr, 0) // mppr
+    if cfg.host_pages:
+        # Oversubscribed mode: credit is expected-live pages under EOS
+        # against the TOTAL hot+cold budget (worst-case overruns stall and
+        # spill to the cold tier), but never admit more prompts than the
+        # device pool can prefill right now — a popped request must land.
+        epp = lm_expected_pages_per_request(cfg)
+        total = pcfg.num_pages + cfg.host_pages
+        credit = jnp.maximum(total - n_active * epp, 0) // epp
+        prompt_pages = max(-(-cfg.prompt_len // cfg.page_size), 1)
+        credit = jnp.minimum(credit, kv.free_top // prompt_pages)
+    else:
+        # Every admitted request may grow to `mppr` pages before it
+        # completes; admitting only what the pool can commit to means a
+        # mid-sequence page allocation can never fail — the same role
+        # ring-buffer credit plays for response slots (paper §III-A).
+        credit = jnp.maximum(pcfg.num_pages - n_active * mppr, 0) // mppr
     budget = jnp.minimum(jnp.minimum(n_free, credit), cfg.admit_per_step)
     take, sch = sched.schedule(state.sched, avail, cfg.admit_per_step)
     cum = jnp.cumsum(take)
     take = jnp.where(cum <= budget, take, jnp.maximum(take - (cum - budget), 0))
     cpo = cp.cpoll_partial(state.cpoll, jnp.arange(cfg.num_queues, dtype=I32), take)
     qids, counts = sched.selected_queues(take)
-    prompts, srcq, valid = rb.gather_batch(
+    payloads, srcq, valid = rb.gather_batch(
         state.req, qids, counts, cfg.admit_per_step
     )
     req = rb.pop(state.req, qids, counts)
+    prompts = payloads[:, : cfg.prompt_len]
+    cap_word = payloads[:, cfg.prompt_len]
+    caps = jnp.clip(
+        jnp.where(cap_word > 0, cap_word, cfg.gen_len), 1, cfg.gen_len
+    )
 
     slot_ids = jnp.argsort(~free, stable=True)[: cfg.admit_per_step].astype(I32)
     admit_ok = valid & (jnp.arange(cfg.admit_per_step) < n_free)
@@ -452,47 +611,106 @@ def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
     )
     slot_tgt = jnp.where(admit_ok, slot_ids, nslots)
 
-    slot_active = state.slot_active.at[slot_tgt].set(True, mode="drop")
-    slot_queue = state.slot_queue.at[slot_tgt].set(
+    slot_active = slot_active.at[slot_tgt].set(True, mode="drop")
+    slot_queue = slot_queue.at[slot_tgt].set(
         jnp.where(admit_ok, srcq, -1), mode="drop"
     )
-    slot_done = state.slot_done.at[slot_tgt].set(0, mode="drop")
-    slot_last = state.slot_last.at[slot_tgt].set(adm_next, mode="drop")
-    slot_out = state.slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
-    slot_done = slot_done.at[slot_tgt].add(
-        jnp.where(admit_ok, 1, 0), mode="drop"
-    )
+    slot_done = slot_done.at[slot_tgt].set(1, mode="drop")
+    slot_last = slot_last.at[slot_tgt].set(adm_next, mode="drop")
+    slot_cap = slot_cap.at[slot_tgt].set(caps, mode="drop")
+    slot_out = slot_out.at[slot_tgt].set(0, mode="drop")
+    slot_out = slot_out.at[slot_tgt, 0].set(adm_next, mode="drop")
+    stalled = stalled.at[slot_tgt].set(False, mode="drop")
 
-    # --- decode one token for every active slot through the page walk -----
-    kv, logits, ok = paged_decode_step(
-        params, slot_last, kv, pcfg, model_cfg, ctx,
-        active=slot_active, kernel_backend=cfg.kernel_backend,
-    )
-    nxt = jnp.argmax(logits, axis=-1).astype(I32)
-    advance = slot_active & ok  # ok False = pool dry, slot stalls one step
-    write_pos = jnp.clip(slot_done, 0, cfg.gen_len - 1)
-    slot_out = jnp.where(
-        advance[:, None],
-        slot_out.at[jnp.arange(nslots), write_pos].set(nxt),
-        slot_out,
-    )
-    slot_done = slot_done + advance.astype(I32)
-    slot_last = jnp.where(advance, nxt, slot_last)
-
-    # --- completions: responses out, pages back to the pool ---------------
-    finished = slot_active & (slot_done >= cfg.gen_len)
-    resp = _enqueue_multi(
-        state.resp, jnp.clip(slot_queue, 0, cfg.num_queues - 1),
-        slot_out, finished,
-    )
-    kv = pk.release_batch(kv, pcfg, finished)
-    slot_active = slot_active & ~finished
     return LMEngineState(
         req=req, resp=resp, cpoll=cpo, sched=sch, decode=kv,
-        slot_active=slot_active,
-        slot_queue=jnp.where(finished, -1, slot_queue),
-        slot_done=jnp.where(finished, 0, slot_done),
-        slot_out=slot_out, slot_last=slot_last,
-        steps=state.steps + 1,
-        completed=state.completed + jnp.sum(finished.astype(I32)),
+        slot_active=slot_active, slot_queue=slot_queue,
+        slot_done=slot_done, slot_out=slot_out, slot_last=slot_last,
+        slot_cap=slot_cap, slot_stalled=stalled,
+        steps=state.steps + 1, completed=completed,
     )
+
+
+# ---------------------------------------------------------------------------
+# Host-boundary swap service: device pool <-> host cold tier
+# ---------------------------------------------------------------------------
+
+def make_swap_service(cfg: LMEngineConfig, model_cfg, ctx):
+    """Build the step-boundary evict/restore policy for an oversubscribed
+    paged engine (``cfg.host_pages > 0``).
+
+    Returns ``(service, cold, pcfg)``: ``service(state) -> state`` runs
+    between jitted engine steps, inspecting ``slot_stalled`` /
+    ``residency`` (a handful of (N,) scalars fetched with
+    ``jax.device_get``) and moving whole page sets with the jitted
+    :func:`kv_cache.swap_out` / :func:`kv_cache.swap_in` plus explicit
+    ``device_get`` / ``device_put`` transfers into the returned
+    :class:`kv_cache.HostColdTier`.
+
+    Policy (progress-guaranteed together with the config-time
+    ``host_pages >= (slots-1) * mppr`` check):
+
+    - restore cold slots FIFO by eviction order, but only while the pool
+      has a full worst-case request (``mppr`` pages) spare — a restored
+      slot must be able to run, not bounce straight back out;
+    - evict at most one victim per call, only when stalled runners
+      outnumber free pages: the *youngest* hot non-terminal slot (fewest
+      generated tokens = fewest pages lost to the transfer), and never
+      the only hot runner — someone must keep decoding to free pages.
+    """
+    from repro.serving import kv_cache as pk
+
+    if cfg.host_pages <= 0:
+        raise ValueError("make_swap_service needs cfg.host_pages > 0")
+    pcfg = lm_paged_kv_config(cfg, model_cfg, ctx)
+    cold = pk.HostColdTier(pcfg, cfg.host_pages,
+                           dtype=jnp.dtype(model_cfg.dtype))
+    swap_out_fn = jax.jit(lambda kv, seq: pk.swap_out(kv, pcfg, seq))
+    swap_in_fn = jax.jit(lambda kv, seq, k, v: pk.swap_in(kv, pcfg, seq, k, v))
+    mppr = pcfg.max_pages_per_seq
+    ps = pcfg.page_size
+
+    def service(state: LMEngineState) -> LMEngineState:
+        kvs = state.decode
+        active = np.asarray(jax.device_get(state.slot_active))
+        stalled = np.asarray(jax.device_get(state.slot_stalled))
+        done = np.asarray(jax.device_get(state.slot_done))
+        cap = np.asarray(jax.device_get(state.slot_cap))
+        last = np.asarray(jax.device_get(state.slot_last))
+        lengths = np.asarray(jax.device_get(kvs.lengths))
+        hot = np.asarray(jax.device_get(kvs.residency)) == pk.HOT
+        free_top = int(jax.device_get(kvs.free_top))
+        term = done >= cap
+        if cfg.eos_token >= 0:
+            term = term | ((done > 0) & (last == cfg.eos_token))
+
+        # --- restore, FIFO by eviction order ------------------------------
+        for slot in list(cold.order):
+            npg = -(-int(lengths[slot]) // ps)
+            if free_top < max(npg, mppr):
+                break
+            k, v = cold.load(slot)
+            kvs, ok = swap_in_fn(
+                kvs, jnp.asarray(slot, I32),
+                jax.device_put(k), jax.device_put(v),
+            )
+            if not bool(jax.device_get(ok)):
+                break
+            cold.drop(slot, restored=True)
+            free_top -= npg
+
+        # --- evict one victim when runners are starving -------------------
+        n_stalled = int(np.sum(stalled & active & hot))
+        if n_stalled and free_top < n_stalled:
+            cand = active & hot & ~term
+            if int(np.sum(cand)) > 1:  # never park the only runner
+                order = np.argsort(done, kind="stable")
+                victim = next((int(s) for s in order if cand[s]), None)
+                npg = 0 if victim is None else -(-int(lengths[victim]) // ps)
+                if victim is not None and cold.can_store(npg):
+                    kvs, k, v, ok = swap_out_fn(kvs, jnp.asarray(victim, I32))
+                    if bool(jax.device_get(ok)):
+                        cold.store(victim, k, v, npg)
+        return state._replace(decode=kvs)
+
+    return service, cold, pcfg

@@ -29,13 +29,28 @@ from repro.parallel.sharding import local_context
 
 
 def build_engine(cfg, ctx, ecfg: eng.LMEngineConfig, params):
+    """(jitted step, initial state) for either decode substrate.
+
+    The engine state is DONATED at the jit boundary (``donate_argnums=0``):
+    steady-state serving is a pure carry loop ``state = step(state)``, so
+    every O(state) buffer — page pool, rings, slot arrays — aliases
+    input→output instead of being copied per tick. Donation consumes the
+    input: callers must never reuse a state they passed in
+    (tests/test_lm_paged pins the aliasing at the HLO level)."""
+    def uniquify(state):
+        # donation needs every leaf to own its buffer: jnp.zeros' constant
+        # cache can hand identical fresh fields (e.g. two (N,) zero
+        # vectors) the SAME buffer, and XLA rejects donating it twice
+        return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), state)
+
     if ecfg.paged:
         # page-pool decode: admission prefill lands prompt KV directly in
         # pages (default models.prefill_kv), no per-slot dense caches
         step = jax.jit(
-            lambda s: eng.lm_engine_step(s, ecfg, cfg, ctx, params)
+            lambda s: eng.lm_engine_step(s, ecfg, cfg, ctx, params),
+            donate_argnums=0,
         )
-        return step, eng.lm_make_paged(ecfg, cfg, ctx)
+        return step, uniquify(eng.lm_make_paged(ecfg, cfg, ctx))
 
     def prefill_fn(p, prompts):
         st = make_decode_state(cfg, ctx, ecfg.admit_per_step, ecfg.cache_len)
@@ -47,10 +62,11 @@ def build_engine(cfg, ctx, ecfg: eng.LMEngineConfig, params):
     step = jax.jit(
         lambda s: eng.lm_engine_step(
             s, ecfg, cfg, ctx, params, prefill_fn, decode_fn
-        )
+        ),
+        donate_argnums=0,
     )
     state = eng.lm_make(ecfg, make_decode_state(cfg, ctx, ecfg.slots, ecfg.cache_len))
-    return step, state
+    return step, uniquify(state)
 
 
 def main(argv=None):
@@ -64,6 +80,15 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="decode through the shared KV page pool")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="device pool pages (0 = worst-case auto-size)")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host cold-tier pages (>0 oversubscribes the "
+                         "device pool with evict/restore)")
+    ap.add_argument("--eos-token", type=int, default=-1,
+                    help="EOS token id for early termination (-1 = off)")
+    ap.add_argument("--vary-caps", action="store_true",
+                    help="draw per-request generation caps in [1, gen_len]")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="kernel dispatch for the paged-attention walk")
@@ -76,10 +101,17 @@ def main(argv=None):
         num_queues=args.queues, capacity=16,
         prompt_len=args.prompt_len, gen_len=args.gen_len,
         slots=8, admit_per_step=2, cache_len=args.prompt_len + args.gen_len + 4,
+        eos_token=args.eos_token,
         paged=args.paged, page_size=args.page_size,
+        num_pages=args.num_pages, host_pages=args.host_pages if args.paged else 0,
+        expected_gen_len=max(args.gen_len // 2, 1) if args.host_pages else 0,
         kernel_backend=args.backend,
     )
     step, state = build_engine(cfg, ctx, ecfg, params)
+    swap = None
+    cold = None
+    if ecfg.paged and ecfg.host_pages:
+        swap, cold, _ = eng.make_swap_service(ecfg, cfg, ctx)
 
     rng = np.random.default_rng(args.seed)
     clients = [rb.HostClient(i, ecfg.capacity, ecfg.prompt_len)
@@ -88,23 +120,29 @@ def main(argv=None):
     t0 = time.time()
     ticks = 0
     outputs = []
-    while recv < args.requests and ticks < args.requests * (args.gen_len + 8):
+    tokens_out = 0
+    while recv < args.requests and ticks < args.requests * (args.gen_len + 16):
         # clients inject
-        qids, pls = [], []
+        qids, pls, caps = [], [], []
         for c in clients:
             if sent < args.requests and c.can_send() and rng.random() < 0.7:
                 prompt = rng.integers(1, cfg.vocab_size, args.prompt_len)
                 qids.append(c.queue_id)
                 pls.append(prompt.astype(np.int32))
+                caps.append(int(rng.integers(1, args.gen_len + 1))
+                            if args.vary_caps else 0)
                 c.note_sent()
                 sent += 1
         if qids:
             state = eng.lm_inject(
-                state, jnp.asarray(qids, jnp.int32), jnp.asarray(np.stack(pls))
+                state, jnp.asarray(qids, jnp.int32), jnp.asarray(np.stack(pls)),
+                gen_caps=jnp.asarray(caps, jnp.int32),
             )
         state = step(state)
+        if swap is not None:
+            state = swap(state)
         ticks += 1
-        # clients poll responses
+        # clients poll responses (entry = [count | tokens..., zero pad])
         avail = np.asarray(rb.available(state.resp))
         for qi in range(args.queues):
             n = int(avail[qi])
@@ -112,7 +150,9 @@ def main(argv=None):
                 ent = np.asarray(rb.peek(
                     state.resp, jnp.asarray([qi], jnp.int32), jnp.asarray([j], jnp.int32)
                 ))[0]
-                outputs.append((qi, ent.tolist()))
+                n_gen = int(ent[0])
+                outputs.append((qi, ent[1:1 + n_gen].tolist()))
+                tokens_out += n_gen
                 clients[qi].note_received()
                 recv += 1
         if avail.sum():
@@ -121,8 +161,12 @@ def main(argv=None):
                 jnp.asarray(avail, jnp.int32),
             ))
     dt = time.time() - t0
-    print(f"served {recv}/{sent} requests in {ticks} engine ticks "
-          f"({dt:.1f}s wall, {recv / max(dt, 1e-9):.1f} req/s on CPU)")
+    print(f"served {recv}/{sent} requests ({tokens_out} tokens) in {ticks} "
+          f"engine ticks ({dt:.1f}s wall, {recv / max(dt, 1e-9):.1f} req/s "
+          f"on CPU)")
+    if cold is not None:
+        print(f"  cold tier: {cold.evictions} evictions, "
+              f"{cold.restores} restores, {cold.pages_used} pages stranded")
     for qi, toks in outputs[:4]:
         print(f"  queue {qi}: generated {toks}")
     assert recv == args.requests, "all requests must complete"

@@ -1,3 +1,11 @@
+"""Model layer: two decode substrates behind one surface.
+
+``decode_step`` + ``DecodeState`` is the dense per-slot ring-cache path;
+``paged_decode_step`` + ``serving.kv_cache.PagedKVState`` is the shared
+page-pool path the continuous-batching engine uses — it masks COLD
+(host-evicted) slots out of its active set and tolerates freshly
+swapped-in page-table rows, so the engine can oversubscribe the device
+pool against a ``kv_cache.HostColdTier``."""
 from repro.models.model import (
     DecodeState,
     abstract_params,

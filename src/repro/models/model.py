@@ -202,15 +202,22 @@ def paged_decode_step(
 
     tokens: (B,); kv: ``serving.kv_cache.PagedKVState`` whose batch is the
     slot count; active: (B,) bool (inactive slots neither append nor
-    advance — their logits are garbage the caller must mask). The layer
-    scan attends READ-ONLY over the stale pool (kernel/oracle stats walk
-    per ``kernel_backend``, auto | pallas | ref) with each layer LSE-merging
-    the current token's fresh k/v; the scan ys carry only the per-layer
-    (B, KVH, HD) new kv, which is committed afterwards with ONE
-    ``kv_cache.append_token_batch`` scatter across all layers — the pool
-    never round-trips through the scan. Returns (kv', logits (B, V),
-    ok (B,)) — ok False where the pool was dry (the slot stalled: nothing
-    appended, logits invalid, retry after release).
+    advance — their logits are garbage the caller must mask). COLD slots
+    (``kv.residency``) are masked out of ``active`` here: their page data
+    is parked host-side and their table rows are unmapped, so they must
+    not decode until :func:`kv_cache.swap_in` restores them. The walk
+    itself tolerates both cold rows (every -1 entry resolves to the zero
+    sentinel page) and freshly swapped-in rows (the table is re-read each
+    step — restored sequences land on different physical pages and just
+    work). The layer scan attends READ-ONLY over the stale pool
+    (kernel/oracle stats walk per ``kernel_backend``, auto | pallas | ref)
+    with each layer LSE-merging the current token's fresh k/v; the scan ys
+    carry only the per-layer (B, KVH, HD) new kv, which is committed
+    afterwards with ONE ``kv_cache.append_token_batch`` scatter across all
+    layers — the pool never round-trips through the scan. Returns (kv',
+    logits (B, V), ok (B,)) — ok False where the pool was dry (the slot
+    stalled: nothing appended, logits invalid, retry after release or a
+    cold-tier eviction frees pages).
     """
     from repro.kernels import ops as kops
     from repro.serving import kv_cache as pk
@@ -221,6 +228,7 @@ def paged_decode_step(
     b = tokens.shape[0]
     if active is None:
         active = jnp.ones((b,), bool)
+    active = active & (kv.residency == pk.HOT)
     kv, ok = pk.ensure_capacity_batch(kv, pcfg, active)
     eff = active & ok
     cur = kv.lengths  # (B,) stale length = position of the new token

@@ -96,7 +96,14 @@ class PagedAux(NamedTuple):
     committed — the current token's kv rides the scan ys and is appended by
     the caller after the scan, one batched scatter for all layers).
     ``use_ref``/``interpret`` are the resolved ``kernel_backend`` dispatch
-    (static under jit)."""
+    (static under jit).
+
+    The walk makes no assumption about *which* physical pages a row maps:
+    rows rebuilt by ``kv_cache.swap_in`` (cold-tier restore lands on fresh
+    page ids) read correctly because the table is consulted per step, and
+    fully unmapped rows (COLD sequences, free slots) resolve every -1
+    entry to the pool's zero sentinel page — a paused sequence that strays
+    in reads zeros, never another sequence's pages."""
 
     page_table: Any  # (B, MaxP) int32, -1 = unmapped
     lengths: Any  # (B,) committed tokens (stale: excludes the current one)

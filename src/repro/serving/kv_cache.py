@@ -28,8 +28,25 @@ state — ``core.kvstore.KVState`` (bucket/pool pad rows committed by
 pad rows committed by ``kernels.tx_commit``) carry the same permanent pad
 row so no kernel dispatch ever materializes a padded O(state) copy.
 
+**Residency convention** (the sentinel's companion, ORCA component (4) —
+adaptive device↔host transfer for the DRAM+NVM server-memory hierarchy):
+each sequence's pages are either **HOT** (``residency == 0``: mapped in the
+device pool, the fast tier) or **COLD** (``residency == 1``: the slot keeps
+its ``lengths`` entry but its page-table row is fully unmapped, its page
+data parked in a :class:`HostColdTier` store). A COLD row is *safe inside
+every device walk by construction*: every -1 table entry resolves to the
+zero sentinel page, so a cold slot that strays into the attention walk
+reads zeros instead of another sequence's pages. Transfers are explicit
+``jax.device_get`` / ``jax.device_put`` at the engine-step boundary
+(:func:`swap_out` gathers + frees, :func:`swap_in` reallocates +
+scatters); the jitted hot loop itself never touches host memory.
+Releasing a COLD slot device-side returns no pages (there are none
+mapped) — the caller must also ``HostColdTier.drop`` its stash.
+
 Used by the continuous-batching engine when sequences have wildly different
-lengths: memory is bounded by Σ actual tokens, not slots × max_len.
+lengths: memory is bounded by Σ actual tokens, not slots × max_len — and
+with the cold tier, admission is bounded by hot + cold capacity, not the
+device pool alone.
 """
 from __future__ import annotations
 
@@ -37,10 +54,16 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
 I32 = jnp.int32
+
+#: residency states (see module docstring): HOT = pages mapped in the
+#: device pool; COLD = pages parked in the host tier, table row unmapped.
+HOT = 0
+COLD = 1
 
 
 class PagedKVConfig(NamedTuple):
@@ -59,6 +82,7 @@ class PagedKVState(NamedTuple):
     lengths: jax.Array  # (B,) tokens stored per sequence
     free_stack: jax.Array  # (NP,) page ids; [0:free_top) are free
     free_top: jax.Array  # ()
+    residency: jax.Array  # (B,) int32 HOT/COLD (see module docstring)
 
 
 def make(cfg: PagedKVConfig, batch: int, dtype=jnp.bfloat16) -> PagedKVState:
@@ -76,6 +100,7 @@ def make(cfg: PagedKVConfig, batch: int, dtype=jnp.bfloat16) -> PagedKVState:
         lengths=jnp.zeros((batch,), I32),
         free_stack=jnp.arange(cfg.num_pages, dtype=I32),
         free_top=jnp.asarray(cfg.num_pages, I32),
+        residency=jnp.full((batch,), HOT, I32),
     )
 
 
@@ -99,9 +124,12 @@ def ensure_capacity_batch(state: PagedKVState, cfg: PagedKVConfig, need):
     token would cross a page boundary. Allocations pop distinct entries off
     the free-stack top in batch order. Returns (state, ok (B,)) — ok False
     where the pool or the sequence's page table is exhausted (back-pressure
-    to the engine's admission, like ring-buffer credit)."""
+    to the engine's admission, like ring-buffer credit). COLD sequences
+    never allocate — their pages live in the host tier; swap them in
+    first."""
     b = state.lengths.shape[0]
     ln = state.lengths
+    need = need & (state.residency == HOT)
     page_idx = ln // cfg.page_size
     wants = need & (ln % cfg.page_size == 0)
     alloc_req = wants & (page_idx < cfg.max_pages_per_seq)
@@ -125,8 +153,11 @@ def append_token_batch(state: PagedKVState, cfg: PagedKVConfig, k_new, v_new,
 
     k_new/v_new: (L, B, KVH, HD) — the new token's kv for every layer and
     slot; mask: (B,) bool. Pages must already be mapped (see
-    :func:`ensure_capacity_batch`); unmapped targets are dropped."""
+    :func:`ensure_capacity_batch`); unmapped targets are dropped, and COLD
+    sequences never append (their table rows are unmapped anyway — the
+    residency gate keeps ``lengths`` honest too)."""
     ln = state.lengths
+    mask = mask & (state.residency == HOT)
     b = ln.shape[0]
     page = state.page_table[
         jnp.arange(b), jnp.clip(ln // cfg.page_size, 0, cfg.max_pages_per_seq - 1)
@@ -146,11 +177,14 @@ def append_token_batch(state: PagedKVState, cfg: PagedKVConfig, k_new, v_new,
 def release_batch(state: PagedKVState, cfg: PagedKVConfig, mask) -> PagedKVState:
     """Return every masked sequence's pages to the pool in one batched push
     (slab free). Sequences with length 0 are no-ops, so releasing an
-    already-released slot never double-frees."""
-    b = state.lengths.shape[0]
+    already-released slot never double-frees. Releasing a COLD slot frees
+    no device pages (none are mapped: ``live`` keys off real table entries)
+    but does reset its length and residency — the caller must drop its
+    host-tier stash (``HostColdTier.drop``) or the host pages leak."""
     n_pages = (state.lengths + cfg.page_size - 1) // cfg.page_size  # (B,)
     cols = jnp.arange(cfg.max_pages_per_seq, dtype=I32)
     live = mask[:, None] & (cols[None, :] < n_pages[:, None])  # (B, MaxP)
+    live = live & (state.page_table >= 0)  # COLD rows: nothing mapped
     flat_live = live.reshape(-1)
     flat_pages = state.page_table.reshape(-1)
     rank = jnp.cumsum(flat_live.astype(I32)) - 1
@@ -159,8 +193,10 @@ def release_batch(state: PagedKVState, cfg: PagedKVConfig, mask) -> PagedKVState
     free_top = state.free_top + jnp.sum(flat_live.astype(I32))
     table = jnp.where(mask[:, None], -1, state.page_table)
     lengths = jnp.where(mask, 0, state.lengths)
+    residency = jnp.where(mask, HOT, state.residency)
     return state._replace(
-        page_table=table, lengths=lengths, free_stack=stack, free_top=free_top
+        page_table=table, lengths=lengths, free_stack=stack, free_top=free_top,
+        residency=residency,
     )
 
 
@@ -204,12 +240,12 @@ def prefill_into_pages(state: PagedKVState, cfg: PagedKVConfig, slot_ids,
         k.astype(state.k_pages.dtype), mode="drop")
     vp = state.v_pages.at[:, row, off].set(
         v.astype(state.v_pages.dtype), mode="drop")
-    lengths = state.lengths.at[
-        jnp.where(mask, slot_ids, state.lengths.shape[0])
-    ].set(p, mode="drop")
+    tgt = jnp.where(mask, slot_ids, state.lengths.shape[0])
+    lengths = state.lengths.at[tgt].set(p, mode="drop")
+    residency = state.residency.at[tgt].set(HOT, mode="drop")
     return state._replace(
         k_pages=kp, v_pages=vp, page_table=table, lengths=lengths,
-        free_top=free_top,
+        free_top=free_top, residency=residency,
     ), mask
 
 
@@ -239,6 +275,164 @@ def append_token(state: PagedKVState, cfg: PagedKVConfig, seq: int, k_new, v_new
 def release(state: PagedKVState, cfg: PagedKVConfig, seq: int) -> PagedKVState:
     """Return a finished sequence's pages to the pool (slab free)."""
     return release_batch(state, cfg, _one_hot(state, seq))
+
+
+# ---------------------------------------------------------------------------
+# Hot/cold tiering: evict a sequence's pages to the host, restore on resume
+# ---------------------------------------------------------------------------
+
+def swap_out(state: PagedKVState, cfg: PagedKVConfig, seq):
+    """Evict ``seq``'s pages out of the device pool (preemption).
+
+    Gathers the sequence's page data into a dense ``(L, MaxP, PS, KVH, HD)``
+    buffer (unmapped tail columns read the zero sentinel page), pushes its
+    device pages back onto the free stack, unmaps its table row, and marks
+    it COLD — ``lengths[seq]`` is *kept* (the sequence is paused, not
+    dead). The caller moves the returned buffers across the PCIe boundary
+    with ``jax.device_get`` and parks them in a :class:`HostColdTier`.
+
+    Returns ``(state, k, v, ok)``; ok False (state unchanged, buffers
+    garbage) when ``seq`` is not a HOT sequence with tokens to evict."""
+    rows = state.page_table[seq]  # (MaxP,)
+    src = jnp.where(rows >= 0, rows, cfg.num_pages)  # sentinel for unmapped
+    k = state.k_pages[:, src]
+    v = state.v_pages[:, src]
+    ok = (state.residency[seq] == HOT) & (state.lengths[seq] > 0)
+    npg = (state.lengths[seq] + cfg.page_size - 1) // cfg.page_size
+    cols = jnp.arange(cfg.max_pages_per_seq, dtype=I32)
+    live = ok & (cols < npg) & (rows >= 0)
+    rank = jnp.cumsum(live.astype(I32)) - 1
+    pos = jnp.where(live, state.free_top + rank, state.free_stack.shape[0])
+    stack = state.free_stack.at[pos].set(rows, mode="drop")
+    free_top = state.free_top + jnp.sum(live.astype(I32))
+    table = state.page_table.at[seq].set(jnp.where(ok, -1, rows))
+    residency = state.residency.at[seq].set(
+        jnp.where(ok, COLD, state.residency[seq])
+    )
+    return state._replace(
+        page_table=table, free_stack=stack, free_top=free_top,
+        residency=residency,
+    ), k, v, ok
+
+
+def swap_in(state: PagedKVState, cfg: PagedKVConfig, seq, k, v):
+    """Restore a COLD sequence's pages into the device pool (resume).
+
+    k/v: ``(L, MaxP, PS, KVH, HD)`` — the buffers :func:`swap_out` emitted,
+    brought back with ``jax.device_put``. Allocates ``ceil(len / PS)``
+    fresh pages off the free-stack top (the physical page ids generally
+    differ from the ones evicted — the table row is rebuilt, which is why
+    the decode walk must tolerate arbitrary live rows), scatters the page
+    data, and marks the sequence HOT again. Returns ``(state, ok)`` — ok
+    False (state unchanged) when ``seq`` is not COLD or the pool cannot
+    cover its pages."""
+    npg = (state.lengths[seq] + cfg.page_size - 1) // cfg.page_size
+    ok = (state.residency[seq] == COLD) & (state.lengths[seq] > 0) \
+        & (npg <= state.free_top)
+    cols = jnp.arange(cfg.max_pages_per_seq, dtype=I32)
+    take = ok & (cols < npg)
+    src = jnp.clip(state.free_top - 1 - cols, 0, state.free_stack.shape[0] - 1)
+    pages = state.free_stack[src]
+    row = jnp.where(take, pages, state.page_table[seq])
+    table = state.page_table.at[seq].set(row)
+    tgt = jnp.where(take, pages, state.k_pages.shape[1])  # OOB: drop
+    kp = state.k_pages.at[:, tgt].set(k.astype(state.k_pages.dtype),
+                                      mode="drop")
+    vp = state.v_pages.at[:, tgt].set(v.astype(state.v_pages.dtype),
+                                      mode="drop")
+    free_top = state.free_top - jnp.where(ok, npg, 0)
+    residency = state.residency.at[seq].set(
+        jnp.where(ok, HOT, state.residency[seq])
+    )
+    return state._replace(
+        k_pages=kp, v_pages=vp, page_table=table, free_top=free_top,
+        residency=residency,
+    ), ok
+
+
+class HostColdTier:
+    """Host-memory page store for evicted sequences — the DRAM/NVM slow
+    tier of the paper's server-memory hierarchy, held as numpy so the
+    jitted device hot loop can never touch it by accident.
+
+    Pages are slab-allocated exactly like the device pool (a free list over
+    ``host_pages`` physical pages); each evicted slot owns a run of host
+    pages plus the eviction-order bookkeeping the restore policy (FIFO)
+    reads. All movement across the tier boundary is explicit:
+    ``store`` does ``jax.device_get`` on :func:`swap_out`'s buffers,
+    ``load`` hands back numpy buffers for ``jax.device_put`` into
+    :func:`swap_in`."""
+
+    def __init__(self, cfg: PagedKVConfig, host_pages: int, dtype=np.float32):
+        self.cfg = cfg
+        self.host_pages = int(host_pages)
+        shape = (cfg.layers, self.host_pages, cfg.page_size, cfg.kv_heads,
+                 cfg.head_dim)
+        self.k = np.zeros(shape, jnp.dtype(dtype))
+        self.v = np.zeros(shape, jnp.dtype(dtype))
+        self.free = list(range(self.host_pages))
+        self.slot_pages: dict[int, list[int]] = {}  # slot -> host page ids
+        self.order: list[int] = []  # eviction order (FIFO restore)
+        self.evictions = 0
+        self.restores = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def pages_used(self) -> int:
+        return self.host_pages - len(self.free)
+
+    def can_store(self, n_pages: int) -> bool:
+        return n_pages <= len(self.free)
+
+    def has(self, slot: int) -> bool:
+        return slot in self.slot_pages
+
+    def store(self, slot: int, k, v, n_pages: int) -> bool:
+        """Park ``n_pages`` of swap_out's (L, MaxP, PS, ...) buffers for
+        ``slot``. device_get happens here — the tier boundary crossing."""
+        slot, n_pages = int(slot), int(n_pages)
+        if slot in self.slot_pages or not self.can_store(n_pages):
+            return False
+        kd, vd = jax.device_get(k), jax.device_get(v)
+        ids = [self.free.pop() for _ in range(n_pages)]
+        for i, hp in enumerate(ids):
+            self.k[:, hp] = kd[:, i]
+            self.v[:, hp] = vd[:, i]
+        self.slot_pages[slot] = ids
+        self.order.append(slot)
+        self.evictions += 1
+        return True
+
+    def load(self, slot: int):
+        """Read back ``slot``'s stash as (k, v) buffers padded to MaxP
+        pages (tail zeros), leaving the stash in place — call
+        :meth:`drop` after the swap_in commits."""
+        ids = self.slot_pages[slot]
+        mp = self.cfg.max_pages_per_seq
+        shape = (self.cfg.layers, mp, self.cfg.page_size, self.cfg.kv_heads,
+                 self.cfg.head_dim)
+        k = np.zeros(shape, self.k.dtype)
+        v = np.zeros(shape, self.v.dtype)
+        for i, hp in enumerate(ids):
+            k[:, i] = self.k[:, hp]
+            v[:, i] = self.v[:, hp]
+        return k, v
+
+    def drop(self, slot: int, *, restored: bool = False) -> None:
+        """Free ``slot``'s host pages (after a successful restore, or when
+        a cold slot is released/aborted)."""
+        slot = int(slot)
+        ids = self.slot_pages.pop(slot, None)
+        if ids is None:
+            return
+        self.free.extend(ids)
+        if slot in self.order:
+            self.order.remove(slot)
+        if restored:
+            self.restores += 1
 
 
 # ---------------------------------------------------------------------------

@@ -142,7 +142,8 @@ def test_lm_engine_matches_direct_generation():
                 ent = np.asarray(rb.peek(
                     state.resp, jnp.asarray([qi], I32), jnp.asarray([j], I32)))[0]
                 src_prompt = sent_prompts[qi].pop(0)  # responses are FIFO/queue
-                got.append((tuple(src_prompt.tolist()), ent.tolist()))
+                n_gen = int(ent[0])  # count header, then the tokens
+                got.append((tuple(src_prompt.tolist()), ent[1:1 + n_gen].tolist()))
                 clients[qi].note_received()
         if avail.sum():
             state = state._replace(resp=rb.pop(

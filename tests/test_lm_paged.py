@@ -11,7 +11,9 @@ from repro.configs import get_config, reduced
 from repro.core import engine as eng
 from repro.core import ringbuf as rb
 from repro.launch.serve import build_engine
-from repro.models import init_params
+from repro.models import (
+    decode_step, init_params, make_decode_state, prefill,
+)
 from repro.parallel.sharding import local_context
 from repro.serving import kv_cache as pk
 
@@ -34,25 +36,49 @@ def _ecfg(**kw):
     return eng.LMEngineConfig(**base)
 
 
-def _serve(step, state, ecfg, prompts, max_ticks=120):
+def _serve(step, state, ecfg, prompts, max_ticks=120, swap=None,
+           gen_caps=None, serial=False):
     """Drive the engine over a fixed prompt schedule; returns
-    {prompt: generated tokens} plus the final state."""
+    {prompt: generated tokens} plus the final state. Response entries are
+    [count | tokens..., zero pad]; ``swap`` is the optional host-boundary
+    cold-tier service run after every jitted step; ``gen_caps[i]`` is
+    request i's per-request generation cap (None/0 = the gen_len default).
+
+    Responses are matched to prompts FIFO per queue — exact while each
+    queue's requests complete in injection order. With EOS/variable caps
+    that ordering can break, so those tests pass ``serial=True``: at most
+    one request in flight per queue (queues still run concurrently, slots
+    still recycle mid-batch), making per-queue FIFO matching exact."""
     sent, got = 0, {}
     clients = [rb.HostClient(i, ecfg.capacity, P)
                for i in range(ecfg.num_queues)]
     sent_prompts = {q: [] for q in range(ecfg.num_queues)}
+
+    def inject(c):
+        nonlocal sent, state
+        cap = 0 if gen_caps is None else int(gen_caps[sent])
+        state = eng.lm_inject(
+            state, jnp.asarray([c.queue_id], I32),
+            jnp.asarray(prompts[sent][None]),
+            gen_caps=jnp.asarray([cap], I32),
+        )
+        sent_prompts[c.queue_id].append(prompts[sent])
+        c.note_sent()
+        sent += 1
+
     for _ in range(max_ticks):
-        if sent < len(prompts):
+        if serial:
+            for c in clients:
+                if (sent < len(prompts) and c.can_send()
+                        and not sent_prompts[c.queue_id]):
+                    inject(c)
+        elif sent < len(prompts):
             c = clients[sent % ecfg.num_queues]
             if c.can_send():
-                state = eng.lm_inject(
-                    state, jnp.asarray([c.queue_id], I32),
-                    jnp.asarray(prompts[sent][None]),
-                )
-                sent_prompts[c.queue_id].append(prompts[sent])
-                c.note_sent()
-                sent += 1
+                inject(c)
         state = step(state)
+        if swap is not None:
+            state = swap(state)
         avail = np.asarray(rb.available(state.resp))
         for qi in range(ecfg.num_queues):
             for j in range(int(avail[qi])):
@@ -60,7 +86,10 @@ def _serve(step, state, ecfg, prompts, max_ticks=120):
                     state.resp, jnp.asarray([qi], I32),
                     jnp.asarray([j], I32)))[0]
                 src = sent_prompts[qi].pop(0)  # responses are FIFO per queue
-                got[tuple(src.tolist())] = ent.tolist()
+                n_gen = int(ent[0])
+                assert 1 <= n_gen <= ecfg.gen_len
+                assert not ent[1 + n_gen:].any(), "pad beyond count not zero"
+                got[tuple(src.tolist())] = ent[1:1 + n_gen].tolist()
                 clients[qi].note_received()
         if avail.sum():
             state = state._replace(resp=rb.pop(
@@ -176,3 +205,118 @@ def test_paged_engine_small_pool_backpressure():
     assert got == expected
     pcfg = eng.lm_paged_kv_config(tiny, cfg, ctx)
     assert int(pk.pages_in_use(final.decode, pcfg)) == 0
+
+
+# ---------------------------------------------------------------------------
+# EOS termination, per-request caps, cold-tier eviction, donation
+# ---------------------------------------------------------------------------
+
+def _direct_streams(cfg, ctx, params, prompts, g_len):
+    """The dense oracle: per-prompt greedy streams of the full g_len."""
+    out = {}
+    for p in prompts:
+        st = make_decode_state(cfg, ctx, 1, P + g_len + 2)
+        st, lg = prefill(params, jnp.asarray(p[None]), st, cfg, ctx, chunk=8)
+        t = jnp.argmax(lg, -1).astype(I32)
+        toks = [int(t[0])]
+        for _ in range(g_len - 1):
+            st, lg = decode_step(params, t, st, cfg, ctx)
+            t = jnp.argmax(lg, -1).astype(I32)
+            toks.append(int(t[0]))
+        out[tuple(p.tolist())] = toks
+    return out
+
+
+def _truncate_at_eos(stream, eos):
+    return stream[: stream.index(eos) + 1] if eos in stream else stream
+
+
+def test_eos_streams_dense_paged_and_evicted_bit_for_bit():
+    """EOS-terminated variable-length serving must be invisible to
+    clients: the dense engine, the paged engine, and the paged engine with
+    an oversubscribed pool (forced evictions through the host cold tier)
+    must all return exactly the dense oracle's stream truncated at the
+    first EOS — bit for bit, for every request."""
+    cfg, ctx, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(1, cfg.vocab_size, (6, P)).astype(np.int32)
+    full = _direct_streams(cfg, ctx, params, prompts, G)
+    # an EOS that actually fires mid-stream for at least one request:
+    # the most frequent token across the oracle streams
+    toks = np.concatenate([np.asarray(s) for s in full.values()])
+    vals, counts = np.unique(toks, return_counts=True)
+    eos = int(vals[np.argmax(counts)])
+    expected = {k: _truncate_at_eos(s, eos) for k, s in full.items()}
+    assert any(len(s) < G for s in expected.values()), "EOS never fires"
+
+    nq = 4
+    mppr = eng.lm_max_pages_per_request(_ecfg(paged=True))
+    results = {}
+    for name, ecfg, oversub in (
+        ("dense", _ecfg(paged=False, num_queues=nq, eos_token=eos), False),
+        ("paged", _ecfg(paged=True, kernel_backend="ref", num_queues=nq,
+                        eos_token=eos), False),
+        ("paged_evict", _ecfg(paged=True, kernel_backend="ref",
+                              num_queues=nq, eos_token=eos,
+                              num_pages=mppr, host_pages=3 * mppr,
+                              expected_gen_len=max(G // 2, 1)), True),
+    ):
+        step, state = build_engine(cfg, ctx, ecfg, params)
+        swap = cold = None
+        if oversub:
+            swap, cold, _ = eng.make_swap_service(ecfg, cfg, ctx)
+        got, final = _serve(step, state, ecfg, prompts, max_ticks=400,
+                            swap=swap, serial=True)
+        assert len(got) == len(prompts), f"{name}: only {len(got)} done"
+        results[name] = got
+        if oversub:
+            # the pool really was oversubscribed and the cold tier used
+            assert cold.evictions >= 1, "tiny pool must force an eviction"
+            assert cold.restores == cold.evictions
+            assert cold.pages_used == 0  # nothing stranded host-side
+        if ecfg.paged:
+            pcfg = eng.lm_paged_kv_config(ecfg, cfg, ctx)
+            assert int(pk.pages_in_use(final.decode, pcfg)) == 0
+            assert bool(jnp.all(final.decode.residency == pk.HOT))
+
+    assert results["dense"] == expected
+    assert results["paged"] == expected
+    assert results["paged_evict"] == expected
+
+
+def test_per_request_gen_caps():
+    """gen_len is a cap, not the trip count: a request carrying its own
+    cap must stop there, and the response stream is the oracle prefix."""
+    cfg, ctx, params = _setup()
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(1, cfg.vocab_size, (4, P)).astype(np.int32)
+    caps = [1, 3, G, 0]  # 0 = gen_len default
+    full = _direct_streams(cfg, ctx, params, prompts, G)
+    expected = {
+        tuple(p.tolist()): full[tuple(p.tolist())][: (c or G)]
+        for p, c in zip(prompts, caps)
+    }
+    ecfg = _ecfg(paged=True, kernel_backend="ref", num_queues=4)
+    step, state = build_engine(cfg, ctx, ecfg, params)
+    got, _ = _serve(step, state, ecfg, prompts, gen_caps=caps, serial=True)
+    assert got == expected
+
+
+def test_engine_state_donated_at_jit_boundary():
+    """build_engine's step donates its carry: every O(state) buffer —
+    page pool, rings, slot arrays — must alias input→output in the
+    compiled HLO, and the consumed input must actually be deleted (the
+    serve loop is `state = step(state)`; reuse is a bug)."""
+    cfg, ctx, params = _setup()
+    for ecfg in (_ecfg(paged=True, kernel_backend="ref"),
+                 _ecfg(paged=False)):
+        step, state = build_engine(cfg, ctx, ecfg, params)
+        hlo = step.lower(state).compile().as_text()
+        assert "input_output_alias" in hlo
+        n_alias = hlo.count("may-alias") + hlo.count("must-alias")
+        assert n_alias >= 8, f"only {n_alias} aliased params in HLO"
+        new = step(state)
+        leaf = state.decode.k_pages if ecfg.paged else state.slot_out
+        assert leaf.is_deleted(), "donated input survived the step"
+        new_leaf = new.decode.k_pages if ecfg.paged else new.slot_out
+        assert not new_leaf.is_deleted()

@@ -157,31 +157,44 @@ def test_prefill_into_pages_all_or_nothing_admission():
 
 def _pool_invariants(state, cfg, batch):
     """No leak, no double-free, no aliasing: free pages + mapped pages
-    partition the pool exactly."""
+    partition the pool exactly. Residency-aware: a COLD slot keeps its
+    length (it is paused, not dead) but owns ZERO device pages — its data
+    lives in the host tier; HOT slots map exactly ceil(len / ps)."""
     free = set(np.asarray(state.free_stack[: int(state.free_top)]).tolist())
     table = np.asarray(state.page_table)
     mapped = table[table >= 0].tolist()
     assert len(mapped) == len(set(mapped)), "page owned twice"
     assert not (free & set(mapped)), "page both free and mapped"
     assert len(free) + len(mapped) == cfg.num_pages, "pages leaked"
-    # mapped pages per sequence must cover exactly ceil(len / ps)
     lengths = np.asarray(state.lengths)
+    res = np.asarray(state.residency)
+    assert set(res.tolist()) <= {pk.HOT, pk.COLD}
     for s in range(batch):
-        n = -(-int(lengths[s]) // cfg.page_size)
-        assert (table[s] >= 0).sum() == n
+        if res[s] == pk.COLD:
+            assert int(lengths[s]) > 0, "cold slot with nothing to restore"
+            assert (table[s] >= 0).sum() == 0, "cold slot still maps pages"
+        else:
+            n = -(-int(lengths[s]) // cfg.page_size)
+            assert (table[s] >= 0).sum() == n
+    # the resident sentinel page (physical index num_pages) stays zero
+    np.testing.assert_array_equal(np.asarray(state.k_pages[:, -1]), 0)
+    np.testing.assert_array_equal(np.asarray(state.v_pages[:, -1]), 0)
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2)),
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 2)),
                 min_size=1, max_size=40))
 def test_page_pool_churn_never_leaks(ops):
-    """Random admit/append/release churn across slots: the free stack and
-    the page tables must partition the pool after every operation."""
+    """Random admit/append/release/evict/restore churn across slots: the
+    free stack and the page tables must partition the pool, residency must
+    stay consistent with the host stash, and the sentinel page must stay
+    zero after every operation."""
     cfg = pk.PagedKVConfig(num_pages=6, page_size=2, max_pages_per_seq=3,
                            kv_heads=1, head_dim=4, layers=1)
     batch = 4
     state = pk.make(cfg, batch=batch, dtype=F32)
     k = jnp.ones((cfg.layers, batch, cfg.kv_heads, cfg.head_dim), F32)
+    stash = {}  # slot -> (k, v) host-side, the cold-tier analogue
     for op, arg in ops:
         if op == 0:  # grow one slot
             need = jnp.zeros((batch,), bool).at[arg].set(True)
@@ -190,13 +203,105 @@ def test_page_pool_churn_never_leaks(ops):
         elif op == 1:  # release one slot (possibly already empty: no-op)
             state = pk.release_batch(
                 state, cfg, jnp.zeros((batch,), bool).at[arg].set(True))
+            stash.pop(arg, None)  # the host-tier drop obligation
         elif op == 2:  # grow several slots at once
             need = jnp.asarray([True, arg > 0, arg > 1, False])
             state, ok = pk.ensure_capacity_batch(state, cfg, need)
             state = pk.append_token_batch(state, cfg, k, k, need & ok)
-        else:  # release everything
+        elif op == 3:  # evict one slot to the host (no-op unless hot+live)
+            state, ko, vo, ok = pk.swap_out(state, cfg, arg)
+            if bool(ok):
+                assert arg not in stash, "double eviction"
+                stash[arg] = (ko, vo)
+        elif op == 4:  # restore one slot (no-op unless cold + pool room)
+            if arg in stash:
+                ko, vo = stash[arg]
+                state, ok = pk.swap_in(state, cfg, arg, ko, vo)
+                if bool(ok):
+                    del stash[arg]
+            else:  # swap_in of a non-cold slot must refuse, not corrupt
+                z = jnp.zeros((cfg.layers, cfg.max_pages_per_seq,
+                               cfg.page_size, cfg.kv_heads, cfg.head_dim), F32)
+                state, ok = pk.swap_in(state, cfg, arg, z, z)
+                assert not bool(ok)
+        else:  # release everything (drops every stash too)
             state = pk.release_batch(state, cfg, jnp.ones((batch,), bool))
+            stash.clear()
         _pool_invariants(state, cfg, batch)
+        # residency <-> stash bijection: cold slots are exactly the stashed
+        cold = {s for s in range(batch)
+                if int(state.residency[s]) == pk.COLD}
+        assert cold == set(stash), (cold, set(stash))
+
+
+def test_swap_roundtrip_preserves_attend_bit_for_bit():
+    """Evicting a sequence and restoring it (onto different physical
+    pages) must be invisible to attention: same outputs as never having
+    swapped, for the swapped sequence and its neighbours, while the
+    neighbour keeps growing in between."""
+    rng = np.random.default_rng(9)
+    state = pk.make(CFG, batch=2, dtype=F32)
+    n_tok = {0: 10, 1: 5}
+    ks = {s: rng.normal(size=(n_tok[s], CFG.layers, CFG.kv_heads, CFG.head_dim))
+          for s in (0, 1)}
+    vs = {s: rng.normal(size=(n_tok[s], CFG.layers, CFG.kv_heads, CFG.head_dim))
+          for s in (0, 1)}
+    for t in range(10):
+        for s in (0, 1):
+            if t < n_tok[s]:
+                state = _grow(state, s, jnp.asarray(ks[s][t], F32),
+                              jnp.asarray(vs[s][t], F32))
+    q = jnp.asarray(rng.normal(size=(2, CFG.kv_heads, 3, CFG.head_dim)), F32)
+    before = [np.asarray(pk.attend(state, CFG, l, q, backend="ref"))
+              for l in range(CFG.layers)]
+    pages_before = int(pk.pages_in_use(state, CFG))
+
+    # evict seq 0 through a real HostColdTier (device_get boundary)
+    cold = pk.HostColdTier(CFG, host_pages=4, dtype=np.float32)
+    state, ko, vo, ok = pk.swap_out(state, CFG, 0)
+    assert bool(ok)
+    npg = -(-n_tok[0] // CFG.page_size)
+    assert cold.store(0, ko, vo, npg)
+    assert int(state.residency[0]) == pk.COLD
+    assert int(state.lengths[0]) == n_tok[0]  # paused, not dead
+    assert pages_before - int(pk.pages_in_use(state, CFG)) == npg
+    _pool_invariants(state, CFG, 2)
+
+    # the neighbour keeps running while seq 0 is cold (its new pages may
+    # even reuse seq 0's old physical pages)
+    extra_k = rng.normal(size=(3, CFG.layers, CFG.kv_heads, CFG.head_dim))
+    extra_v = rng.normal(size=(3, CFG.layers, CFG.kv_heads, CFG.head_dim))
+    for t in range(3):
+        state = _grow(state, 1, jnp.asarray(extra_k[t], F32),
+                      jnp.asarray(extra_v[t], F32))
+
+    # restore: fresh pages, same contents
+    kh, vh = cold.load(0)
+    state, ok = pk.swap_in(state, CFG, 0,
+                           jax.device_put(kh), jax.device_put(vh))
+    assert bool(ok)
+    cold.drop(0, restored=True)
+    assert cold.restores == 1 and cold.pages_used == 0
+    assert int(state.residency[0]) == pk.HOT
+    _pool_invariants(state, CFG, 2)
+
+    # seq 0 attends bit-for-bit as before the round trip; seq 1 matches a
+    # never-swapped reference including its extra tokens
+    ref = pk.make(CFG, batch=2, dtype=F32)
+    for t in range(10):
+        for s in (0, 1):
+            if t < n_tok[s]:
+                ref = _grow(ref, s, jnp.asarray(ks[s][t], F32),
+                            jnp.asarray(vs[s][t], F32))
+    for t in range(3):
+        ref = _grow(ref, 1, jnp.asarray(extra_k[t], F32),
+                    jnp.asarray(extra_v[t], F32))
+    for layer in range(CFG.layers):
+        after = np.asarray(pk.attend(state, CFG, layer, q, backend="ref"))
+        want = np.asarray(pk.attend(ref, CFG, layer, q, backend="ref"))
+        np.testing.assert_array_equal(after[0], want[0])
+        np.testing.assert_array_equal(after[1], want[1])
+        np.testing.assert_array_equal(after[0], before[layer][0])
 
 
 def test_pool_exhaustion_backpressure():
