@@ -220,7 +220,84 @@ def run():
     t = measure(lambda c, b: commit(c, b)[0], chain, hot)
     rows.append(row("tx_concurrency_control_batch16", t,
                     "includes first-claimant conflict resolution"))
+
+    rows.extend(_degraded_chain_rows())
+    rows.extend(_overload_rows())
     return rows
+
+
+def _p99(vals):
+    return float(np.percentile(vals, 99)) if vals else float("nan")
+
+
+def _degraded_chain_rows():
+    """Degraded-chain arm: the full faulted request path (fault.soak) with
+    a mid-chain replica killed at steps//3 and revived at 2*steps//3.
+    Reports the p99 request sojourn (engine steps, not us — the unit the
+    deadline machinery works in) before / during / after the dead window,
+    plus the shed / NACK / retry counters. The liveness-transparency
+    invariant says the three phases should be statistically alike: chain
+    shortening must not cost the client anything."""
+    from benchmarks.common import SMOKE
+    from repro.fault import soak
+
+    steps = 30 if SMOKE else 150
+    kill_at, revive_at = steps // 3, (2 * steps) // 3
+    rep = soak._drive(11, steps, ((kill_at, 1),), ((revive_at, 1),))
+    phases = {"before": [], "during": [], "after": []}
+    for (t, s) in rep["sojourns"]:
+        if t < kill_at:
+            phases["before"].append(s)
+        elif t < revive_at:
+            phases["during"].append(s)
+        else:
+            phases["after"].append(s)
+    nacks = sum(v for k, v in rep["status_counts"].items() if k < 0)
+    out = []
+    for phase in ("before", "during", "after"):
+        out.append(row(
+            f"tx_degraded_chain_p99_{phase}", _p99(phases[phase]),
+            f"unit=engine_steps;n={len(phases[phase])};"
+            f"kill_at={kill_at};revive_at={revive_at};steps={steps}",
+        ))
+    out.append(row(
+        "tx_degraded_chain_counters", 0.0,
+        f"shed={rep['engine']['shed']};timed_out={rep['engine']['timed_out']}"
+        f";nacks={nacks};resubmits={rep['resubmits']}"
+        f";requests={rep['requests']};responses={rep['responses']}"
+        f";dropped={rep['counters']['dropped']}"
+        f";corrupted={rep['counters']['corrupted']}",
+    ))
+    return out
+
+
+def _overload_rows():
+    """Load-shedding sweep: offered load above the step budget, shedding
+    on vs off. With the deadline shed phase the p99 sojourn of served
+    requests stays bounded near the deadline; without it the backlog (and
+    the tail) grows with the run length."""
+    from benchmarks.common import SMOKE
+    from repro.fault import soak
+
+    steps = 40 if SMOKE else 160
+    on = soak.run_overload(seed=0, steps=steps, shed=True)
+    off = soak.run_overload(seed=0, steps=steps, shed=False)
+    return [
+        row(
+            "tx_overload_shed_on", on["p99_sojourn"],
+            f"unit=engine_steps;p50={on['p50_sojourn']:.1f}"
+            f";served={on['served']};shed={on['shed']}"
+            f";timed_out={on['timed_out']};rejected={on['rejected']}"
+            f";backlog={on['final_backlog']};deadline={on['deadline']}",
+        ),
+        row(
+            "tx_overload_shed_off", off["p99_sojourn"],
+            f"unit=engine_steps;p50={off['p50_sojourn']:.1f}"
+            f";served={off['served']};shed={off['shed']}"
+            f";timed_out={off['timed_out']};rejected={off['rejected']}"
+            f";backlog={off['final_backlog']};deadline={off['deadline']}",
+        ),
+    ]
 
 
 if __name__ == "__main__":

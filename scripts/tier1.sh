@@ -17,6 +17,12 @@ if [[ "${1:-}" == "--smoke" ]]; then
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 if [[ "$SMOKE" == 1 ]]; then
+  echo "--- fault soak (seeded schedule, conservation + control-twin equality) ---"
+  # fixed seed: every fault class fires at least once; run_soak asserts
+  # every landed entry answered exactly once and bit-for-bit state vs a
+  # never-failed control run (exits non-zero on any violation)
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fault_soak.py --seed 7 --steps 200 > /dev/null
+  echo "fault soak OK"
   echo "--- smoke benchmarks (a few iterations per arm) ---"
   # BENCH_PERSIST=1 (CI) appends the smoke rows to BENCH_<app>.json so the
   # workflow can upload them as the per-PR perf-trajectory artifact

@@ -146,22 +146,34 @@ def app_step(params, payloads, valid, cfg: DLRMConfig, *, tables_ext=None,
     the dense MLPs) run device-side per request batch, through the Pallas
     kernel path when ``kernel_backend`` selects it. ``tables_ext`` carries
     the MERCI-extended tables when the host rewrote the index lists."""
+    from repro.core import status as stc
+
     tables = tables_ext if tables_ext is not None else params["tables"]
     f = cfg.dense_features
     op = payloads[:, 0]
     dense = jax.lax.bitcast_convert_type(payloads[:, 1 : 1 + f], F32)
-    idx = payloads[:, 1 + f : 1 + f + cfg.num_tables * cfg.lookups]
-    idx = jnp.clip(idx, 0, tables.shape[1] - 1).reshape(
+    raw_idx = payloads[:, 1 + f : 1 + f + cfg.num_tables * cfg.lookups]
+    # payload validation (core/status.py): an unknown opcode or any
+    # out-of-range embedding index NACKs as MALFORMED — previously the
+    # clip below silently aliased bad indices onto real rows and returned
+    # a garbage logit with a success status
+    bad = valid & (
+        ~((op == OP_NOP) | (op == OP_INFER))
+        | ((op == OP_INFER)
+           & jnp.any((raw_idx < 0) | (raw_idx >= tables.shape[1]), axis=1))
+    )
+    idx = jnp.clip(raw_idx, 0, tables.shape[1] - 1).reshape(
         payloads.shape[0], cfg.num_tables, cfg.lookups
     )
-    live = valid & (op == OP_INFER)
+    live = valid & ~bad & (op == OP_INFER)
     logits = forward(params, dense, idx, cfg, tables_ext=tables_ext,
                      backend=kernel_backend)
     logit_bits = jax.lax.bitcast_convert_type(
         jnp.where(live, logits, 0.0).astype(F32), jnp.int32
     )
+    status = jnp.where(bad, stc.MALFORMED, live.astype(jnp.int32))
     resp = jnp.zeros_like(payloads)
-    resp = resp.at[:, 0].set(live.astype(jnp.int32)).at[:, 1].set(logit_bits)
+    resp = resp.at[:, 0].set(status).at[:, 1].set(logit_bits)
     return params, resp
 
 

@@ -43,6 +43,7 @@ import numpy as np
 from repro.core import cpoll as cp
 from repro.core import ringbuf as rb
 from repro.core import scheduler as sched
+from repro.core import status as st
 
 I32 = jnp.int32
 
@@ -56,6 +57,19 @@ class EngineConfig(NamedTuple):
     # APU kernel dispatch: "auto" = Pallas (native on TPU, interpret mode
     # elsewhere), "pallas" = same spelled explicitly, "ref" = jnp oracles.
     kernel_backend: str = "auto"
+    # --- deadline-based load shedding (core/status.py vocabulary) ----------
+    # deadline_word >= 0 designates that request-payload word as an absolute
+    # engine-step deadline (<= 0 in the payload = no deadline). Each step,
+    # before budget is spent, the scheduler sheds the doomed prefix of every
+    # queue (scheduler.shed_plan): expired entries answer TIMEOUT, entries
+    # predicted to expire before they can be served answer SHED — popped and
+    # NACKed, never silently dropped. -1 (default) disables the phase
+    # entirely (zero behaviour/cost change for deadline-free apps).
+    deadline_word: int = -1
+    # queue-head entries examined by the shed scan per queue (static shape;
+    # 0 = the step budget, a sane default: deeper entries cannot be served
+    # this step anyway and are re-examined as they surface).
+    shed_scan: int = 0
 
 
 def _call_app(app_fn: Callable, app, payloads, valid, cfg: EngineConfig):
@@ -95,6 +109,8 @@ class EngineState(NamedTuple):
     app: Any
     steps: jax.Array  # () int32
     served: jax.Array  # () int32 total requests processed
+    timed_out: jax.Array  # () int32 requests popped already past deadline
+    shed: jax.Array  # () int32 requests shed predictively (doomed in queue)
 
 
 def make(cfg: EngineConfig, app_state) -> EngineState:
@@ -106,23 +122,78 @@ def make(cfg: EngineConfig, app_state) -> EngineState:
         app=app_state,
         steps=jnp.zeros((), I32),
         served=jnp.zeros((), I32),
+        timed_out=jnp.zeros((), I32),
+        shed=jnp.zeros((), I32),
     )
 
 
-def inject(state: EngineState, queue_ids, payloads, mask=None) -> EngineState:
+def inject(state: EngineState, queue_ids, payloads, mask=None,
+           *, with_accepted: bool = False):
     """Producer path (host/RNIC analogue): write requests + ring doorbells.
-    queue_ids must be unique per call (one slot per queue per call)."""
+    queue_ids must be unique per call (one slot per queue per call — the
+    SPSC contract ``ringbuf.enqueue`` enforces); doorbells ring only for
+    entries the ring actually accepted, so cpoll never over-reports.
+    ``with_accepted=True`` returns ``(state, accepted (N,) bool)`` so
+    drivers can retry rejected entries instead of losing them."""
     n = queue_ids.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
-    ok = mask & (rb.free_slots(state.req)[queue_ids] > 0)
-    req = rb.enqueue(state.req, queue_ids, payloads, ok)
-    cpo = cp.doorbell(state.cpoll, queue_ids, ok.astype(I32))
-    return state._replace(req=req, cpoll=cpo)
+    req, accepted = rb.enqueue(state.req, queue_ids, payloads, mask)
+    cpo = cp.doorbell(state.cpoll, queue_ids, accepted.astype(I32))
+    state = state._replace(req=req, cpoll=cpo)
+    return (state, accepted) if with_accepted else state
+
+
+def _shed_phase(state: EngineState, cfg: EngineConfig):
+    """Pop + NACK the doomed prefix of every request queue before the
+    scheduler spends budget (cfg.deadline_word semantics; the plan itself
+    is :func:`scheduler.shed_plan`). Shed responses are enqueued ahead of
+    this step's APU responses — shed entries sat at the queue heads, so
+    per-queue response FIFO order still mirrors request order. Per-queue
+    shed counts are clamped by response-ring credit: a shed MUST surface
+    as a TIMEOUT/SHED response (accounted exactly once), so an entry whose
+    NACK cannot land stays queued until credit returns."""
+    q = cfg.num_queues
+    k = cfg.shed_scan or cfg.budget
+    now = state.steps
+    avail = jnp.clip(
+        state.cpoll.pointer_buffer - state.cpoll.ring_tracker, 0, cfg.capacity
+    )
+    offs = jnp.arange(k, dtype=I32)
+    qids = jnp.arange(q, dtype=I32)
+    valid = offs[None, :] < avail[:, None]  # (Q, K)
+    entries = rb.peek(
+        state.req, jnp.repeat(qids, k), jnp.tile(offs, q)
+    ).reshape(q, k, -1)
+    deadlines = entries[..., cfg.deadline_word]
+    quota = max(cfg.budget // cfg.num_queues, 1)
+    counts, prefix, status = sched.shed_plan(deadlines, valid, now, quota)
+    counts = jnp.minimum(counts, rb.free_slots(state.resp))
+    prefix = prefix & (offs[None, :] < counts[:, None])
+    req = rb.pop(state.req, qids, counts)
+    cpo = cp.cpoll_partial(state.cpoll, qids, counts)
+    payload = jnp.zeros((q * k, state.resp.entry_words), I32)
+    payload = payload.at[:, 0].set(status.reshape(-1))
+    resp = _enqueue_multi(
+        state.resp, jnp.repeat(qids, k), payload, prefix.reshape(-1)
+    )
+    n_timeout = jnp.sum((prefix & (status == st.TIMEOUT)).astype(I32))
+    n_shed = jnp.sum((prefix & (status == st.SHED)).astype(I32))
+    state = state._replace(
+        req=req, resp=resp, cpoll=cpo,
+        timed_out=state.timed_out + n_timeout, shed=state.shed + n_shed,
+    )
+    return state, n_timeout, n_shed
 
 
 def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
     """One APU iteration. Returns (state, stats dict)."""
+    # 0. deadline shed phase (only when the config designates a deadline
+    # word): give up on doomed queue prefixes before spending budget
+    if cfg.deadline_word >= 0:
+        state, n_timeout, n_shed = _shed_phase(state, cfg)
+    else:
+        n_timeout = n_shed = jnp.zeros((), I32)
     # 1. cpoll: O(4*Q)-byte notification scan
     avail = state.cpoll.pointer_buffer - state.cpoll.ring_tracker
     # 2. round-robin schedule within the step budget
@@ -140,8 +211,12 @@ def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
     new = EngineState(
         req=req, resp=resp, cpoll=cpo, sched=sch, app=app,
         steps=state.steps + 1, served=state.served + n_served,
+        timed_out=state.timed_out, shed=state.shed,
     )
-    return new, {"served": n_served, "backlog": jnp.sum(avail - take)}
+    return new, {
+        "served": n_served, "backlog": jnp.sum(avail - take),
+        "timed_out": n_timeout, "shed": n_shed,
+    }
 
 
 def _enqueue_multi(ring: rb.RingState, queue_ids, payloads, mask):
@@ -349,9 +424,8 @@ def lm_inject(state: LMEngineState, queue_ids, prompts, mask=None,
         caps = (jnp.zeros((n,), I32) if gen_caps is None
                 else jnp.asarray(gen_caps, I32))
         prompts = jnp.concatenate([prompts.astype(I32), caps[:, None]], axis=1)
-    ok = mask & (rb.free_slots(state.req)[queue_ids] > 0)
-    req = rb.enqueue(state.req, queue_ids, prompts, ok)
-    cpo = cp.doorbell(state.cpoll, queue_ids, ok.astype(I32))
+    req, accepted = rb.enqueue(state.req, queue_ids, prompts, mask)
+    cpo = cp.doorbell(state.cpoll, queue_ids, accepted.astype(I32))
     return state._replace(req=req, cpoll=cpo)
 
 

@@ -312,18 +312,26 @@ def app_step(state: KVState, payloads, valid, cfg: KVConfig, *,
     ``kernel_backend`` is the engine's dispatch knob — the APU walk runs
     through the Pallas kernels by default (native on TPU, interpret mode
     elsewhere); ``ref`` keeps the jnp oracle path."""
+    from repro.core import status as stc
+
     op = payloads[:, 0]
     keys = payloads[:, 1 : 1 + cfg.key_words]
     vals = payloads[:, 1 + cfg.key_words : 1 + cfg.key_words + cfg.val_words]
+    # payload validation (core/status.py): an unknown opcode NACKs as
+    # MALFORMED instead of silently resolving to a zero-status no-op —
+    # the row is masked out of both walks, so it cannot scatter garbage
+    bad = valid & ~((op == OP_NOP) | (op == OP_GET) | (op == OP_PUT))
     get_vals, found = get(
         state, keys, mask=valid & (op == OP_GET), backend=kernel_backend
     )
     state, put_ok = put(
-        state, keys, vals, mask=valid & (op == OP_PUT), backend=kernel_backend
+        state, keys, vals, mask=valid & ~bad & (op == OP_PUT),
+        backend=kernel_backend,
     )
     status = jnp.where(
         op == OP_GET, found.astype(I32), jnp.where(op == OP_PUT, put_ok.astype(I32), 0)
     )
+    status = jnp.where(bad, stc.MALFORMED, status)
     resp = jnp.concatenate(
         [status[:, None], jnp.where((op == OP_GET)[:, None], get_vals, 0)], axis=1
     )

@@ -66,24 +66,49 @@ def free_slots(state: RingState) -> jax.Array:
     return state.capacity - (state.tail - state.head)
 
 
-def enqueue(state: RingState, queue_ids, payloads, mask=None) -> RingState:
+def enqueue(state: RingState, queue_ids, payloads, mask=None):
     """Producer push. queue_ids: (N,), payloads: (N, W), mask: (N,) bool.
 
-    Entries exceeding a queue's credit are rejected (mask it yourself with
-    :func:`free_slots` for back-pressure; this guards correctness anyway).
-    Queue ids must be unique within one call (SPSC: one producer writes one
-    queue per step) — enforced by the host-side driver.
+    Returns ``(state, accepted)`` — ``accepted[i]`` is True iff entry i
+    landed in its ring. An entry is rejected (accepted=False, ring
+    untouched) when its queue has no credit left (:func:`free_slots`
+    back-pressure) or when it repeats a queue id already used by an
+    earlier masked-in entry of the SAME call — the SPSC contract (one
+    producer writes one slot per queue per call), previously hand-waved
+    to the host driver, is now enforced here: under tracing duplicates
+    are functionally rejected and reported through ``accepted``; concrete
+    (eager host-path) calls additionally fail fast with ``ValueError``,
+    since a host producer batching two writes to one queue is a driver
+    bug, not load. Producers with a legitimate multi-entry-per-queue
+    pattern issue one call per wave (see ``fault.inject``) or go through
+    the engine's response-side ``_enqueue_multi``.
     """
     n = queue_ids.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
+    nq = state.num_queues
+    # stable rank among masked-in entries sharing a queue id; rank > 0 is
+    # a duplicate producer in one call -> SPSC violation
+    ids = jnp.where(mask, queue_ids, nq)
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    first = jnp.searchsorted(sorted_ids, jnp.arange(nq + 1), side="left")
+    rank_sorted = jnp.arange(n) - first[jnp.clip(sorted_ids, 0, nq)]
+    rank = jnp.zeros((n,), I32).at[order].set(rank_sorted.astype(I32))
+    dup = mask & (rank > 0)
+    if not isinstance(dup, jax.core.Tracer) and bool(jnp.any(dup)):
+        raise ValueError(
+            "ringbuf.enqueue: duplicate queue ids in one call violate the "
+            "SPSC contract (one slot per queue per call); issue separate "
+            "calls per wave or use the engine response path"
+        )
     credit = free_slots(state)[queue_ids] > 0
-    ok = mask & credit
+    ok = mask & credit & ~dup
     slot = state.tail[queue_ids] % state.capacity
-    q = jnp.where(ok, queue_ids, state.num_queues)  # OOB -> dropped
+    q = jnp.where(ok, queue_ids, nq)  # OOB -> dropped
     entries = state.entries.at[q, slot].set(payloads, mode="drop")
     tail = state.tail.at[q].add(ok.astype(I32), mode="drop")
-    return RingState(entries, tail, state.head)
+    return RingState(entries, tail, state.head), ok
 
 
 def peek(state: RingState, queue_ids, offsets):

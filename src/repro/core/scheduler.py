@@ -14,6 +14,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import status as st
+
 I32 = jnp.int32
 
 
@@ -71,6 +73,40 @@ def schedule(state: SchedState, avail, budget: int, weights=None):
 
     new = SchedState((state.rr_ptr + 1) % q, state.served + take)
     return take, new
+
+
+def shed_plan(deadlines, valid, now, quota: int):
+    """Deadline-based load shedding: which queue-head entries to give up on
+    BEFORE spending batch budget (graceful degradation under overload —
+    the alternative is unbounded queueing delay behind requests whose
+    clients stopped waiting long ago).
+
+    deadlines: (Q, K) absolute engine-step deadlines of the first K entries
+    per queue (<= 0 = no deadline, never shed). valid: (Q, K) entry-exists
+    mask. now: () current engine step. quota: static per-queue service
+    rate estimate (requests/step) used to predict the earliest step an
+    entry at queue position ``pos`` can be served: ``now + pos // quota``.
+    An entry is *doomed* when its deadline is not after that step — it
+    would time out in the queue even under fair service, so serving it
+    wastes budget someone with a live deadline could use.
+
+    Only the doomed *prefix* of each queue is shed (FIFO pop semantics:
+    the ring can only release from the head), so a doomed entry parked
+    behind a viable one survives until it reaches the head. Returns
+    ``(counts (Q,), shed (Q, K) prefix mask, status (Q, K))`` where status
+    distinguishes already-expired entries (TIMEOUT) from predictive sheds
+    (SHED). An entry at the head (pos 0) is never shed before its deadline
+    actually passes — it is about to be served this very step.
+    """
+    k = deadlines.shape[1]
+    pos = jnp.arange(k, dtype=I32)
+    has_deadline = valid & (deadlines > 0)
+    expired = has_deadline & (now >= deadlines)
+    doomed = has_deadline & (now + pos[None, :] // max(quota, 1) >= deadlines)
+    prefix = jnp.cumprod(doomed.astype(I32), axis=1).astype(bool)
+    counts = jnp.sum(prefix.astype(I32), axis=1)
+    status = jnp.where(expired, st.TIMEOUT, st.SHED).astype(I32)
+    return counts, prefix, status
 
 
 def selected_queues(take):

@@ -75,6 +75,14 @@ class ReplicaState(NamedTuple):
     log: jax.Array  # (LC + 1, 1 + max_ops*(1+VW)) int32; row LC = sentinel
     log_tail: jax.Array  # () int32
     committed: jax.Array  # () int32
+    # Chain-shortening liveness mask (chain replication's defining fault
+    # mode): () bool per replica, (R,) on a chain. A dead replica is
+    # skipped by the commit walks with jit-stable shapes — its log/store
+    # scatters retarget the sentinel row and its counters freeze, so the
+    # array axis keeps its slot while the *protocol* chain shortens around
+    # it. Kill/revive + log-replay resync live host-side in ``fault.chain``
+    # (ChainMonitor / resync_replica).
+    live: jax.Array
 
     @property
     def num_keys(self) -> int:
@@ -106,11 +114,13 @@ def make_replica(cfg: TxConfig) -> ReplicaState:
         log=jnp.zeros((cfg.log_capacity + 1, tx_words(cfg)), I32),
         log_tail=jnp.zeros((), I32),
         committed=jnp.zeros((), I32),
+        live=jnp.ones((), bool),
     )
 
 
 def make_chain(cfg: TxConfig):
-    """Chain as a leading axis (local emulation)."""
+    """Chain as a leading axis (local emulation); every replica starts
+    live (``live`` broadcasts to an all-True (R,) mask)."""
     one = make_replica(cfg)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (cfg.chain_len,) + x.shape), one
@@ -217,16 +227,21 @@ def replica_commit(state: ReplicaState, plan: TxCommitPlan, *,
     # keeps the duplicate-free scatter deterministic on every backend
     # (a jnp scatter with duplicate indices has unspecified update order)
     survives = plan.log_rank >= plan.n_commit - lc
+    # a dead replica (chain shortening) commits nothing: every slot aims at
+    # the sentinel, the store rows are masked, and the counters freeze
     slot = jnp.where(
-        plan.proceed & survives, (state.log_tail + plan.log_rank) % lc, lc
+        plan.proceed & survives & state.live,
+        (state.log_tail + plan.log_rank) % lc, lc,
     )
+    store_rows = jnp.where(state.live, plan.store_rows, state.num_keys)
     log, store = kops.tx_commit(
         state.log, state.store, plan.batch, plan.values, slot,
-        plan.store_rows, use_ref=use_ref, interpret=interpret,
+        store_rows, use_ref=use_ref, interpret=interpret,
     )
+    bump = jnp.where(state.live, plan.n_commit, 0)
     return ReplicaState(
-        store, log, state.log_tail + plan.n_commit,
-        state.committed + plan.n_commit,
+        store, log, state.log_tail + bump, state.committed + bump,
+        state.live,
     )
 
 
@@ -246,21 +261,29 @@ def chain_commit_apply(chain: ReplicaState, plan: TxCommitPlan, *,
     stay resident across engine steps. Per-replica ``log_tail`` values are
     honoured (replicas advance in lockstep from :func:`make_chain`, but a
     hand-built chain with skewed tails commits exactly like a
-    :func:`replica_commit` loop would)."""
+    :func:`replica_commit` loop would). Dead replicas (``chain.live``
+    False — mask-based chain shortening) are skipped with jit-stable
+    shapes: their log slots retarget the sentinel row and their
+    ``log_tail``/``committed`` freeze, so a revived replica's resync gap
+    is exactly the survivors' tail minus its own (``fault.chain``)."""
     lc = chain.log_capacity
     survives = plan.log_rank >= plan.n_commit - lc
     slot = jnp.where(
-        (plan.proceed & survives)[None, :],
+        (plan.proceed & survives)[None, :] & chain.live[:, None],
         (chain.log_tail[:, None] + plan.log_rank[None, :]) % lc,
         lc,
     )
+    store_rows = jnp.where(
+        chain.live[:, None], plan.store_rows[None, :], chain.num_keys
+    )
     log, store = kops.tx_commit_chain(
         chain.log, chain.store, plan.batch, plan.values, slot,
-        plan.store_rows, use_ref=use_ref, interpret=interpret,
+        store_rows, use_ref=use_ref, interpret=interpret,
     )
+    bump = jnp.where(chain.live, plan.n_commit, 0)
     return ReplicaState(
-        store, log, chain.log_tail + plan.n_commit,
-        chain.committed + plan.n_commit,
+        store, log, chain.log_tail + bump, chain.committed + bump,
+        chain.live,
     )
 
 

@@ -1,1 +1,36 @@
-from repro.fault.watchdog import Heartbeat, StragglerDetector, is_transient, with_retries
+"""Fault tolerance for the ORCA request path.
+
+The failure model (README "Failure model & degraded modes") splits into
+four layers, one module each:
+
+* ``watchdog`` — generic driver utilities: :class:`StragglerDetector`
+  (step wall-time EMA), :func:`with_retries` (exponential backoff on
+  transient errors), :class:`Heartbeat` (file-mtime liveness).
+* ``inject`` — :class:`FaultInjector`, the deterministic seeded fault
+  layer at the host step boundary: drop / duplicate / corrupt / delay
+  ring entries, suppress doorbells, and surface scheduled replica
+  kill/revive events. :class:`NackError` + :func:`request_with_retries`
+  are the client-side recovery half (negative status words from
+  ``core/status.py`` are transient: resubmit the pristine payload).
+* ``chain`` — chain-replica failover: :class:`ChainMonitor` (liveness
+  authority over ``core.transaction``'s ``live`` mask) and
+  :func:`resync_replica` (log-replay resync, bit-for-bit).
+* ``soak`` — the acceptance harness: :func:`~repro.fault.soak.run_soak`
+  (conservation + control-twin equality under a seeded fault schedule;
+  ``scripts/fault_soak.py`` is the tier-1 smoke entry) and
+  :func:`~repro.fault.soak.run_overload` (deadline shedding bounds p99).
+"""
+from repro.fault.chain import ChainMonitor, resync_replica
+from repro.fault.inject import (
+    FAULT_CLASSES, FaultConfig, FaultInjector, NackError,
+    request_with_retries,
+)
+from repro.fault.watchdog import (
+    Heartbeat, StragglerDetector, is_transient, with_retries,
+)
+
+__all__ = [
+    "FAULT_CLASSES", "FaultConfig", "FaultInjector", "NackError",
+    "request_with_retries", "ChainMonitor", "resync_replica",
+    "Heartbeat", "StragglerDetector", "is_transient", "with_retries",
+]

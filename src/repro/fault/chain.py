@@ -1,0 +1,173 @@
+"""Chain-replica failover: host-side kill / revive / log-replay resync.
+
+The device half of chain shortening lives in ``core.transaction``: each
+:class:`~repro.core.transaction.ReplicaState` carries a ``live`` flag, and
+the commit walks (``replica_commit`` / ``chain_commit_apply``) skip dead
+replicas with jit-stable shapes — a dead replica's log/store scatters
+retarget its sentinel rows and its ``log_tail``/``committed`` counters
+freeze. This module is the host half:
+
+* :func:`resync_replica` — replay the nearest live neighbour's redo log
+  into a revived replica, one record at a time, exactly the write-ahead
+  order the survivors executed. Because proceeding transactions within a
+  batch have disjoint write sets (first-claimant concurrency control +
+  intra-tx dedupe), per-record replay reproduces the survivors' store and
+  log ring **bit-for-bit**. When the gap exceeds the log ring's capacity
+  (the ring lapped the dead replica's frozen tail) the replay window is
+  gone and the replica is restored by a full state copy instead.
+* :class:`ChainMonitor` — liveness bookkeeping built on
+  ``watchdog.Heartbeat``: replicas beat a per-replica heartbeat file,
+  :meth:`ChainMonitor.sweep` kills stale replicas and revives (resyncs)
+  fresh ones; :meth:`ChainMonitor.apply_events` applies a
+  ``FaultInjector`` kill/revive schedule. Killing the last live replica
+  is refused — chain replication degrades, it does not lose the data.
+
+See README "Failure model & degraded modes" for the decision table.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transaction as tx
+from repro.fault.watchdog import Heartbeat
+
+I32 = jnp.int32
+
+
+def replica_view(chain: tx.ReplicaState, r: int) -> tx.ReplicaState:
+    """Slice replica ``r`` out of a chain (leading replica axis)."""
+    return jax.tree_util.tree_map(lambda x: x[r], chain)
+
+
+def write_replica(chain: tx.ReplicaState, r: int,
+                  rep: tx.ReplicaState) -> tx.ReplicaState:
+    """Write a single-replica state back into chain slot ``r``."""
+    return jax.tree_util.tree_map(
+        lambda c, x: c.at[r].set(x), chain, rep
+    )
+
+
+def resync_replica(chain: tx.ReplicaState, cfg: tx.TxConfig, r: int,
+                   source: Optional[int] = None) -> tx.ReplicaState:
+    """Re-sync replica ``r`` from a live neighbour's redo log and mark it
+    live. Default source = nearest live predecessor (chain order), else
+    nearest live successor.
+
+    The revived replica's ``log_tail`` froze at death, so the gap is
+    exactly ``source.log_tail - r.log_tail`` records; each is replayed
+    through the normal plan/commit path (``proceed`` forced True — the
+    log only ever holds transactions that proceeded) so the store scatter,
+    log ring slot, and counter bumps are the very ones the survivors
+    executed. Gap > log_capacity means the ring lapped the frozen tail:
+    full state copy."""
+    live = np.asarray(jax.device_get(chain.live))
+    nrep = live.shape[0]
+    if source is None:
+        cands = [i for i in range(r - 1, -1, -1) if live[i]]
+        cands += [i for i in range(r + 1, nrep) if live[i]]
+        if not cands:
+            raise ValueError("resync_replica: no live source replica")
+        source = cands[0]
+    src = replica_view(chain, source)
+    dst = replica_view(chain, r)._replace(live=jnp.ones((), bool))
+    gap = int(src.log_tail) - int(dst.log_tail)
+    if gap < 0:
+        raise ValueError(
+            f"resync_replica: replica {r} is ahead of source {source} "
+            f"({int(dst.log_tail)} > {int(src.log_tail)}) — dead replicas "
+            f"freeze, they never advance"
+        )
+    lc = cfg.log_capacity
+    if gap > lc:
+        # the replay window fell off the ring: restore by full copy
+        dst = src._replace(live=jnp.ones((), bool))
+    else:
+        for t in range(int(dst.log_tail), int(src.log_tail)):
+            record = src.log[t % lc]
+            plan = tx.plan_commit(
+                record[None, :], cfg, proceed=jnp.ones((1,), bool)
+            )
+            dst = tx.replica_commit(dst, plan, use_ref=True)
+    return write_replica(chain, r, dst)
+
+
+class ChainMonitor:
+    """Host-side liveness authority for one local chain.
+
+    Composes ``watchdog.Heartbeat`` (file-mtime liveness) with the
+    mask-based chain shortening in ``core.transaction``: replicas call
+    :meth:`beat`; :meth:`sweep` compares heartbeat ages against
+    ``timeout`` (an explicit ``now`` makes it deterministic under test)
+    and flips the chain's ``live`` mask — killing stale replicas,
+    reviving-and-resyncing fresh ones. ``events`` records every
+    transition as ``("kill" | "revive", replica)``.
+
+    ``directory=None`` runs schedule-only (no heartbeat files): only
+    :meth:`apply_events` / :meth:`kill` / :meth:`revive` drive
+    transitions — the mode the deterministic soak uses.
+    """
+
+    def __init__(self, cfg: tx.TxConfig, directory: Optional[str] = None,
+                 timeout: float = 5.0):
+        self.cfg = cfg
+        self.directory = directory
+        self.timeout = timeout
+        self.events: list = []
+        self.hbs = {}
+        if directory is not None:
+            self.hbs = {
+                r: Heartbeat(directory, r) for r in range(cfg.chain_len)
+            }
+
+    def beat(self, r: int):
+        self.hbs[r].beat()
+
+    def kill(self, chain: tx.ReplicaState, r: int) -> tx.ReplicaState:
+        live = np.asarray(jax.device_get(chain.live))
+        if live[r] and int(live.sum()) <= 1:
+            raise ValueError(
+                "ChainMonitor.kill: refusing to kill the last live replica"
+            )
+        self.events.append(("kill", int(r)))
+        return chain._replace(live=chain.live.at[r].set(False))
+
+    def revive(self, chain: tx.ReplicaState, r: int) -> tx.ReplicaState:
+        chain = resync_replica(chain, self.cfg, r)
+        self.events.append(("revive", int(r)))
+        return chain
+
+    def apply_events(self, chain: tx.ReplicaState, events) -> tx.ReplicaState:
+        """Apply a ``FaultInjector.tick`` event list."""
+        for kind, r in events:
+            if kind == "kill":
+                chain = self.kill(chain, r)
+            elif kind == "revive":
+                chain = self.revive(chain, r)
+            else:
+                raise ValueError(f"unknown chain event {kind!r}")
+        return chain
+
+    def sweep(self, chain: tx.ReplicaState,
+              now: Optional[float] = None) -> tx.ReplicaState:
+        """Heartbeat sweep: kill replicas whose heartbeat went stale,
+        revive ones whose heartbeat came back. A replica that never beat
+        has no file and is left alone (it was never admitted)."""
+        if self.directory is None:
+            raise ValueError("ChainMonitor.sweep needs a heartbeat directory")
+        stale = set(Heartbeat.dead_hosts(self.directory, self.timeout,
+                                         now=now))
+        live = np.asarray(jax.device_get(chain.live))
+        for r in range(self.cfg.chain_len):
+            has_file = os.path.exists(self.hbs[r].path)
+            if live[r] and r in stale and int(live.sum()) > 1:
+                chain = self.kill(chain, r)
+                live = np.asarray(jax.device_get(chain.live))
+            elif not live[r] and has_file and r not in stale:
+                chain = self.revive(chain, r)
+                live = np.asarray(jax.device_get(chain.live))
+        return chain

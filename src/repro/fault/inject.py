@@ -1,0 +1,259 @@
+"""Deterministic seeded fault injection at the engine's host step boundary.
+
+The ORCA datapath (rings -> cpoll -> scheduler -> APU) is exercised by a
+driver loop that injects requests and drains responses between jitted
+steps. :class:`FaultInjector` wraps exactly that boundary: every request
+handed to :meth:`FaultInjector.inject` rolls one fault class from a seeded
+``numpy`` RNG stream, so a given ``(seed, workload)`` pair replays the
+same fault schedule bit-for-bit — the soak harness (``fault.soak``) and
+the degraded-chain benchmark arm lean on this determinism to diff a
+faulted run against a never-faulted control run.
+
+Fault classes (mutually exclusive per entry, probabilities from
+:class:`FaultConfig`):
+
+* **drop** — the entry vanishes on the wire. The client believes the send
+  succeeded; only its own timeout + resubmission recovers the request.
+* **duplicate** — the entry is delivered twice back-to-back (same queue,
+  two ring slots). Stresses idempotency: the TX app's first-claimant
+  concurrency control defers the second copy when both land in one batch,
+  and a re-commit of identical values is state-idempotent.
+* **corrupt** — payload words are overwritten with garbage before
+  delivery. Stresses the apps' in-step validation: a corrupted opcode /
+  op-count / offset must come back ``status.MALFORMED``, never scatter.
+* **delay** — delivery is postponed ``delay_min..delay_max`` engine steps
+  (released by :meth:`FaultInjector.tick`), reordering arrivals across
+  queues while preserving per-queue FIFO of *landed* entries.
+* **suppress** — the entry lands in the ring but its doorbell is withheld
+  for ``suppress_steps`` steps: the cpoll pointer buffer lags the ring
+  tail, stressing notification coalescing (a late doorbell must surface
+  every entry it covers exactly once).
+
+Replica kill/revive is schedule-driven (not random): ``kill_schedule`` /
+``revive_schedule`` are ``(step, replica)`` pairs surfaced as events from
+:meth:`FaultInjector.tick`; the driver applies them through
+``fault.chain.ChainMonitor`` (see [[fault-chain]] / README "Failure model
+& degraded modes").
+
+Client-side recovery helpers: :class:`NackError` marks a negative
+response status word (``core/status.py``) as a *transient* failure —
+its message embeds ``DEADLINE_EXCEEDED`` so ``watchdog.is_transient``
+classifies it — and :func:`request_with_retries` is
+``watchdog.with_retries`` tuned for the request path (resubmit with
+exponential backoff).
+"""
+from __future__ import annotations
+
+import collections
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cpoll as cp
+from repro.core import ringbuf as rb
+from repro.fault.watchdog import with_retries
+
+I32 = jnp.int32
+
+# the injector delivers one entry at a time on the host path; jitting the
+# ring/doorbell primitives keeps the per-entry cost at one dispatch
+# (shapes are constant per run, so each traces once)
+_enqueue1 = jax.jit(rb.enqueue)
+_doorbell = jax.jit(cp.doorbell)
+
+#: counter keys asserted >= 1 by the soak's "every fault class fired" check
+FAULT_CLASSES = ("dropped", "duplicated", "corrupted", "delayed", "suppressed")
+
+
+class FaultConfig(NamedTuple):
+    seed: int = 0
+    p_drop: float = 0.0
+    p_dup: float = 0.0
+    p_corrupt: float = 0.0
+    p_delay: float = 0.0
+    p_suppress: float = 0.0
+    delay_min: int = 1  # steps a delayed entry is held (inclusive range)
+    delay_max: int = 4
+    suppress_steps: int = 2  # steps a suppressed doorbell is withheld
+    corrupt_words: int = 2  # payload words overwritten per corruption
+    # schedule-driven chain faults: (step, replica) pairs, surfaced as
+    # ("kill"/"revive", replica) events from tick()
+    kill_schedule: Tuple[Tuple[int, int], ...] = ()
+    revive_schedule: Tuple[Tuple[int, int], ...] = ()
+
+
+class NackError(RuntimeError):
+    """A request was NACKed (negative status word) or could not be
+    enqueued (ring credit exhausted). The message embeds
+    ``DEADLINE_EXCEEDED`` so ``watchdog.is_transient`` treats it as
+    retryable — resubmitting the pristine payload is the correct
+    recovery for wire corruption, shedding, and credit stalls alike."""
+
+    def __init__(self, status_word: int, detail: str = ""):
+        self.status = int(status_word)
+        super().__init__(
+            f"request NACKed (status={int(status_word)}; "
+            f"DEADLINE_EXCEEDED-class transient). {detail}"
+        )
+
+
+def request_with_retries(fn, *args, retries: int = 4, backoff: float = 0.005,
+                         on_retry=None, **kwargs):
+    """``watchdog.with_retries`` tuned for the request path: resubmit a
+    NACKed / credit-rejected request with exponential backoff."""
+    return with_retries(
+        fn, *args, retries=retries, backoff=backoff, on_retry=on_retry,
+        **kwargs
+    )
+
+
+class FaultInjector:
+    """Seeded fault layer between a host driver and an engine state.
+
+    Works against any engine state carrying ``req`` (ringbuf.RingState)
+    and ``cpoll`` (cpoll.CpollState) fields — both ``EngineState`` and
+    ``LMEngineState`` qualify. The injector is pure host-side: it only
+    composes the same ``ringbuf.enqueue`` / ``cpoll.doorbell`` calls the
+    real producer path uses, so the jitted step never sees it.
+
+    ``landed`` records every entry that actually reached a ring, in ring
+    order per queue — the ground truth the conservation checks match
+    responses against. ``counters`` tallies offered / landed / rejected
+    plus one counter per fault class.
+    """
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0  # engine steps completed; advance via tick()
+        self.counters = collections.Counter(
+            offered=0, landed=0, rejected=0, doorbells_released=0,
+            **{k: 0 for k in FAULT_CLASSES},
+        )
+        # (step_landed, queue, payload np.ndarray, tag) in landing order
+        self.landed: list = []
+        self._delayed: list = []  # (release_step, queue, payload, tag)
+        self._doorbells: list = []  # (release_step, queue)
+
+    # -- delivery ----------------------------------------------------------
+
+    def _classify(self) -> str:
+        u = float(self.rng.random())
+        acc = 0.0
+        for name, p in (
+            ("drop", self.cfg.p_drop), ("dup", self.cfg.p_dup),
+            ("corrupt", self.cfg.p_corrupt), ("delay", self.cfg.p_delay),
+            ("suppress", self.cfg.p_suppress),
+        ):
+            acc += p
+            if u < acc:
+                return name
+        return "ok"
+
+    def _land(self, state, queue_id: int, payload, tag,
+              ring_doorbell: bool = True):
+        """Deliver one entry to the ring; doorbell only when asked.
+        Returns (state, accepted)."""
+        qi = jnp.asarray([int(queue_id)], I32)
+        pay = jnp.asarray(np.asarray(payload).reshape(1, -1), I32)
+        req, ok = _enqueue1(state.req, qi, pay)
+        if not bool(ok[0]):
+            self.counters["rejected"] += 1
+            return state, False
+        if ring_doorbell:
+            cpo = _doorbell(state.cpoll, qi, jnp.asarray([1], I32))
+            state = state._replace(req=req, cpoll=cpo)
+        else:
+            state = state._replace(req=req)
+        self.landed.append(
+            (self.now, int(queue_id), np.asarray(payload).copy(), tag)
+        )
+        self.counters["landed"] += 1
+        return state, True
+
+    def inject(self, state, queue_id: int, payload, tag=None):
+        """Offer one request to the wire. Returns ``(state, accepted)`` —
+        ``accepted`` is the *client's* view (a dropped or delayed entry
+        still reads as a successful send; only a ring-credit rejection
+        reads False, and the caller should back off and resubmit)."""
+        self.counters["offered"] += 1
+        kind = self._classify()
+        if kind == "drop":
+            self.counters["dropped"] += 1
+            return state, True  # the wire ate it; client timeout recovers
+        if kind == "delay":
+            d = int(self.rng.integers(self.cfg.delay_min,
+                                      self.cfg.delay_max + 1))
+            self._delayed.append(
+                (self.now + d, int(queue_id), np.asarray(payload).copy(), tag)
+            )
+            self.counters["delayed"] += 1
+            return state, True
+        if kind == "corrupt":
+            payload = np.asarray(payload).copy()
+            nw = min(self.cfg.corrupt_words, payload.shape[-1])
+            idx = self.rng.choice(payload.shape[-1], size=nw, replace=False)
+            payload[idx] = self.rng.integers(-(2 ** 20), 2 ** 20, size=nw)
+            state, acc = self._land(state, queue_id, payload, tag)
+            if acc:
+                self.counters["corrupted"] += 1
+            return state, acc
+        if kind == "suppress":
+            state, acc = self._land(
+                state, queue_id, payload, tag, ring_doorbell=False
+            )
+            if acc:
+                self._doorbells.append(
+                    (self.now + self.cfg.suppress_steps, int(queue_id))
+                )
+                self.counters["suppressed"] += 1
+            return state, acc
+        if kind == "dup":
+            state, acc = self._land(state, queue_id, payload, tag)
+            if acc:
+                state, acc2 = self._land(state, queue_id, payload, tag)
+                if acc2:
+                    self.counters["duplicated"] += 1
+            return state, acc
+        return self._land(state, queue_id, payload, tag)
+
+    # -- step boundary -----------------------------------------------------
+
+    def tick(self, state):
+        """Advance the injector clock one engine step: release due delayed
+        entries (re-held a step if the ring has no credit yet) and due
+        suppressed doorbells (coalesced per queue), and surface scheduled
+        chain events. Returns ``(state, events)`` with events a list of
+        ``("kill" | "revive", replica)``."""
+        self.now += 1
+        held = []
+        for (t, q, payload, tag) in self._delayed:
+            if t <= self.now:
+                state, acc = self._land(state, q, payload, tag)
+                if not acc:
+                    held.append((t + 1, q, payload, tag))
+            else:
+                held.append((t, q, payload, tag))
+        self._delayed = held
+        due = [d for d in self._doorbells if d[0] <= self.now]
+        self._doorbells = [d for d in self._doorbells if d[0] > self.now]
+        if due:
+            cnt = collections.Counter(q for _, q in due)
+            qs = sorted(cnt)
+            state = state._replace(cpoll=_doorbell(
+                state.cpoll, jnp.asarray(qs, I32),
+                jnp.asarray([cnt[q] for q in qs], I32),
+            ))
+            self.counters["doorbells_released"] += len(due)
+        events = [("kill", r) for (t, r) in self.cfg.kill_schedule
+                  if t == self.now]
+        events += [("revive", r) for (t, r) in self.cfg.revive_schedule
+                   if t == self.now]
+        return state, events
+
+    @property
+    def in_flight(self) -> int:
+        """Entries the injector still holds (delayed, not yet landed)."""
+        return len(self._delayed)

@@ -1,0 +1,388 @@
+"""Deterministic fault soak: the TX engine under a seeded fault schedule,
+checked for conservation and bit-for-bit state agreement with a
+never-failed control run.
+
+:func:`run_soak` drives the full request path — ring inject through
+``fault.inject.FaultInjector`` (drop / duplicate / corrupt / delay /
+doorbell-suppress), deadline-based shedding in the engine step, a
+scheduled mid-chain replica kill + revive with log-replay resync
+(``fault.chain``), and a ``request_with_retries``-based client loop that
+resubmits NACKed requests — then asserts:
+
+* **conservation** — every entry that landed in a request ring resolves
+  to exactly one response (matched FIFO per queue: the engine serves
+  queue-major ascending, and the shed phase pops queue-head prefixes, so
+  per-queue response order equals ring order), and every logical request
+  ends committed despite drops/corruption/shedding (timeout + NACK
+  resubmission closes the loop);
+* **liveness transparency** — replica death never changes the response
+  stream (commit/defer decisions come from the plan, not from ``live``),
+  so the faulted run's status counts equal the control run's;
+* **bit-for-bit state** — at the end every replica (survivors AND the
+  revived one) equals the control run's replica state exactly: store,
+  log ring, ``log_tail``, ``committed``;
+* **independent store oracle** — queues own disjoint key ranges, so a
+  pure-numpy replay of the committed entries (per-queue FIFO landed
+  order) must reproduce the device store.
+
+:func:`run_overload` is the load-shedding sweep: offered load above the
+step budget with a fixed relative deadline, run with shedding on vs off.
+With ``deadline_word`` set the scheduler sheds doomed queue prefixes and
+the p99 sojourn of *served* requests stays bounded near the deadline;
+without it the backlog (and sojourn) grows with the run length.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core import status as st
+from repro.core import transaction as tx
+from repro.core import tx_app
+from repro.fault import chain as fchain
+from repro.fault import inject as finj
+from repro.fault.inject import NackError, request_with_retries
+
+I32 = jnp.int32
+
+# (tx_cfg, engine_cfg) -> (step_fn, drain_fn). Both configs are hashable
+# NamedTuples; caching keeps every _drive/run_overload invocation with the
+# same shape set on one compiled step (run_soak's control twin and every
+# property-test example would otherwise re-trace identical programs).
+_COMPILED = {}
+
+
+def _compiled(tx_cfg: tx.TxConfig, ecfg: engine.EngineConfig):
+    key = (tx_cfg, ecfg)
+    if key not in _COMPILED:
+        app_fn = engine.bind_app(tx_app.app_step, tx_cfg, ecfg)
+        _COMPILED[key] = (
+            jax.jit(lambda s: engine.engine_step(s, app_fn, ecfg)),
+            jax.jit(lambda s: engine.drain_responses(s, ecfg.capacity)),
+        )
+    return _COMPILED[key]
+
+
+def _tx_payload(rng, queue, keys_per_queue, cfg: tx.TxConfig, deadline):
+    """One transaction request in the §IV-B log-entry layout plus the
+    engine's trailing deadline word. Offsets stay inside the queue's own
+    key range so cross-queue commit order cannot matter (the numpy oracle
+    replays per-queue FIFO order only)."""
+    n = int(rng.integers(1, cfg.max_ops + 1))
+    words = [n]
+    base = queue * keys_per_queue
+    for j in range(cfg.max_ops):
+        if j < n:
+            words.append(base + int(rng.integers(0, keys_per_queue)))
+            words.extend(int(v) for v in
+                         rng.integers(1, 2 ** 15, size=cfg.val_words))
+        else:
+            words.extend([0] * (1 + cfg.val_words))
+    words.append(int(deadline))
+    return np.asarray(words, np.int64)
+
+
+def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
+           keys_per_queue=32, max_ops=3, val_words=2, chain_len=3,
+           log_capacity=256, capacity=16, budget=4, deadline_lo=3,
+           deadline_hi=16, max_outstanding=5, drain_factor=6):
+    """One full soak run. Returns a report dict; raises on any
+    conservation violation (response with no matching landed entry,
+    or a drain that cannot complete)."""
+    tx_cfg = tx.TxConfig(
+        num_keys=num_queues * keys_per_queue, val_words=val_words,
+        max_ops=max_ops, chain_len=chain_len, log_capacity=log_capacity,
+    )
+    w = tx_app.request_words(tx_cfg)
+    ecfg = engine.EngineConfig(
+        num_queues=num_queues, capacity=capacity, req_words=w + 1,
+        resp_words=w + 1, budget=budget, kernel_backend="ref",
+        deadline_word=w,
+    )
+    state = engine.make(ecfg, tx.make_chain(tx_cfg))
+    step_fn, drain_fn = _compiled(tx_cfg, ecfg)
+    fi = finj.FaultInjector(finj.FaultConfig(
+        seed=seed, p_drop=0.04, p_dup=0.05, p_corrupt=0.05, p_delay=0.07,
+        p_suppress=0.05, delay_min=1, delay_max=4, suppress_steps=2,
+        kill_schedule=tuple(kill), revive_schedule=tuple(revive),
+    ))
+    monitor = fchain.ChainMonitor(tx_cfg)
+    wl = np.random.default_rng(seed + 1)  # workload stream, fault-independent
+
+    reqs = {}  # uid -> {queue, payload (pristine, no deadline), done, ...}
+    fifos = {q: collections.deque() for q in range(num_queues)}
+    landed_cursor = 0
+    pending = collections.deque()  # uids awaiting (re)submission
+    next_uid = 0
+    now = 0
+    responses = 0
+    status_counts = collections.Counter()
+    resubmits = 0
+    sojourns = []  # (step_completed, steps_since_first_submit)
+    oracle = np.zeros((tx_cfg.num_keys, val_words), np.int64)
+    # a send is presumed lost (dropped, or its response shed while we
+    # waited) after the worst honest round trip: full queue + max delay +
+    # suppressed doorbell + scheduling slack
+    resend_after = capacity + 4 + 2 + 10
+
+    def submit(uid):
+        nonlocal state
+        r = reqs[uid]
+        payload = r["payload"].copy()
+        payload = np.concatenate([payload, [now + r["deadline_rel"]]])
+        state2, acc = fi.inject(state, r["queue"], payload, tag=uid)
+        state = state2
+        if not acc:
+            raise NackError(0, f"ring credit exhausted on queue {r['queue']}")
+        r["sent_at"] = now
+
+    def sync_landed():
+        nonlocal landed_cursor
+        for (_, q, payload, tag) in fi.landed[landed_cursor:]:
+            fifos[q].append((tag, payload))
+        landed_cursor = len(fi.landed)
+
+    def drain():
+        nonlocal state, responses
+        payloads, counts, state = drain_fn(state)
+        payloads = np.asarray(jax.device_get(payloads))
+        counts = np.asarray(jax.device_get(counts))
+        for q in range(num_queues):
+            for i in range(int(counts[q])):
+                word0 = int(payloads[q, i, 0])
+                if not fifos[q]:
+                    raise AssertionError(
+                        f"response on queue {q} with no landed entry "
+                        f"(status {word0})"
+                    )
+                uid, sent = fifos[q].popleft()
+                responses += 1
+                status_counts[word0] += 1
+                r = reqs[uid]
+                if word0 == tx_app.RESP_COMMITTED:
+                    # replay the committed entry (possibly a corrupted or
+                    # duplicated copy — commit means it validated)
+                    n = int(sent[0])
+                    for j in range(n):
+                        off = int(sent[1 + j * (1 + val_words)])
+                        vals = sent[2 + j * (1 + val_words):
+                                    2 + j * (1 + val_words) + val_words]
+                        oracle[off] = vals
+                    if not r["done"]:
+                        sojourns.append((now, now - r["born"]))
+                    r["done"] = True
+                elif not r["done"]:
+                    # DEFERRED / MALFORMED / SHED / TIMEOUT: resubmit the
+                    # pristine payload with a fresh deadline
+                    pending.append(uid)
+
+    def pump_sends():
+        nonlocal resubmits
+        for _ in range(len(pending)):
+            uid = pending.popleft()
+            if reqs[uid]["done"]:
+                continue
+            try:
+                request_with_retries(submit, uid, retries=1, backoff=0.0)
+                resubmits += reqs[uid]["ever_sent"]
+                reqs[uid]["ever_sent"] = 1
+            except NackError:
+                pending.append(uid)  # no credit: try again next step
+
+    total_steps = 0
+    limit = steps * drain_factor
+
+    def one_step(generating: bool):
+        nonlocal state, next_uid, now, total_steps
+        if generating:
+            for q in range(num_queues):
+                out = sum(1 for r in reqs.values()
+                          if r["queue"] == q and not r["done"])
+                if out < max_outstanding:
+                    uid = next_uid
+                    next_uid += 1
+                    reqs[uid] = {
+                        "queue": q,
+                        "payload": _tx_payload(wl, q, keys_per_queue, tx_cfg,
+                                               0)[:-1],
+                        "deadline_rel": int(wl.integers(deadline_lo,
+                                                        deadline_hi)),
+                        "done": False, "sent_at": now, "ever_sent": 0,
+                        "born": now,
+                    }
+                    pending.append(uid)
+        pump_sends()
+        for uid, r in reqs.items():
+            if (not r["done"] and uid not in pending
+                    and now - r["sent_at"] > resend_after):
+                pending.append(uid)
+        state, events = fi.tick(state)
+        if events:
+            state = state._replace(
+                app=monitor.apply_events(state.app, events)
+            )
+        state, _ = step_fn(state)
+        now += 1
+        total_steps += 1
+        sync_landed()
+        drain()
+
+    for _ in range(steps):
+        one_step(generating=True)
+    while (pending or fi.in_flight
+           or any(fifos[q] for q in fifos)
+           or not all(r["done"] for r in reqs.values())):
+        if total_steps >= limit:
+            raise AssertionError(
+                f"soak failed to drain in {limit} steps: "
+                f"pending={len(pending)} in_flight={fi.in_flight} "
+                f"fifo={sum(len(f) for f in fifos.values())} "
+                f"undone={sum(not r['done'] for r in reqs.values())}"
+            )
+        one_step(generating=False)
+
+    chain = jax.device_get(state.app)
+    return {
+        "chain": chain,
+        "engine": {
+            "steps": int(state.steps), "served": int(state.served),
+            "timed_out": int(state.timed_out), "shed": int(state.shed),
+        },
+        "counters": dict(fi.counters),
+        "status_counts": dict(status_counts),
+        "responses": responses,
+        "resubmits": resubmits,
+        "sojourns": sojourns,
+        "requests": len(reqs),
+        "oracle_store": oracle,
+        "monitor_events": list(monitor.events),
+        "config": {"tx": tx_cfg, "engine": ecfg},
+    }
+
+
+def run_soak(seed: int = 7, steps: int = 200, *, kill=None, revive=None,
+             **kw):
+    """Run the faulted soak plus its never-failed control twin and assert
+    the full acceptance set (see module docstring). Returns the faulted
+    run's report with the control's chain attached."""
+    if kill is None:
+        kill = ((max(steps // 3, 2), 1),)
+    if revive is None:
+        revive = ((max((2 * steps) // 3, 4), 1),)
+    main = _drive(seed, steps, kill, revive, **kw)
+    ctrl = _drive(seed, steps, (), (), **kw)
+
+    # -- conservation ------------------------------------------------------
+    assert main["responses"] == main["counters"]["landed"], (
+        main["responses"], main["counters"])
+    assert main["requests"] > 0
+    # -- every fault class actually fired ----------------------------------
+    for c in finj.FAULT_CLASSES:
+        assert main["counters"][c] >= 1, (c, main["counters"])
+    assert ("kill", kill[0][1]) in main["monitor_events"]
+    assert ("revive", revive[0][1]) in main["monitor_events"]
+    # -- NACK path exercised: some negative statuses, all recovered --------
+    nacks = sum(v for k, v in main["status_counts"].items() if k < 0)
+    assert nacks >= 1, main["status_counts"]
+    assert main["resubmits"] >= 1
+    # -- liveness transparency: response stream identical ------------------
+    assert main["status_counts"] == ctrl["status_counts"], (
+        main["status_counts"], ctrl["status_counts"])
+    # -- bit-for-bit state vs the never-failed control ---------------------
+    mc, cc = main["chain"], ctrl["chain"]
+    live = np.asarray(mc.live)
+    assert live.all(), live  # the killed replica was revived
+    for r in range(live.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(mc.store[r]), np.asarray(cc.store[0]))
+        np.testing.assert_array_equal(
+            np.asarray(mc.log[r]), np.asarray(cc.log[0]))
+        assert int(mc.log_tail[r]) == int(cc.log_tail[0])
+        assert int(mc.committed[r]) == int(cc.committed[0])
+    # -- independent numpy oracle ------------------------------------------
+    np.testing.assert_array_equal(
+        main["oracle_store"].astype(np.int64),
+        np.asarray(mc.store[0])[:-1].astype(np.int64),
+    )
+    main["control_chain"] = cc
+    return main
+
+
+def run_overload(seed: int = 0, steps: int = 240, shed: bool = True, *,
+                 num_queues: int = 4, capacity: int = 256, budget: int = 8,
+                 offered_per_queue: int = 3, deadline: int = 24,
+                 shed_scan: int = 32):
+    """Overload sweep arm: offered load ``offered_per_queue`` per queue
+    per step against a budget of ``budget // num_queues`` per queue, with
+    every request carrying an absolute deadline ``now + deadline``.
+
+    Per-request deadlines are drawn uniformly from ``[deadline/2,
+    3*deadline/2)`` — the variance is what makes *predictive* shedding
+    visible (a tight-deadline arrival behind a deep queue is doomed long
+    before it expires). ``shed=True`` enables the engine's deadline shed
+    phase; ``shed=False`` runs the same workload with the phase disabled
+    (requests queue until served or the ring rejects them). Returns p99/p50 sojourn of served
+    requests over the last half of the run, final backlog, and the
+    served/shed/timed-out/rejected tallies."""
+    tx_cfg = tx.TxConfig(num_keys=num_queues * 32, val_words=1, max_ops=1,
+                         chain_len=1, log_capacity=512)
+    w = tx_app.request_words(tx_cfg)
+    ecfg = engine.EngineConfig(
+        num_queues=num_queues, capacity=capacity, req_words=w + 1,
+        resp_words=w + 1, budget=budget, kernel_backend="ref",
+        deadline_word=(w if shed else -1), shed_scan=shed_scan,
+    )
+    state = engine.make(ecfg, tx.make_chain(tx_cfg))
+    step_fn, drain_fn = _compiled(tx_cfg, ecfg)
+    wl = np.random.default_rng(seed)
+    fifos = {q: collections.deque() for q in range(num_queues)}
+    sojourns = []  # (step_served, sojourn)
+    served = shed_n = timed_out = rejected = 0
+    qids = jnp.arange(num_queues, dtype=I32)
+
+    for now in range(steps):
+        for _ in range(offered_per_queue):
+            pays = np.stack([
+                _tx_payload(wl, q, 32, tx_cfg, now + int(wl.integers(
+                    max(deadline // 2, 1), deadline + deadline // 2)))
+                for q in range(num_queues)
+            ])
+            state, acc = engine.inject(
+                state, qids, jnp.asarray(pays, I32), with_accepted=True
+            )
+            acc = np.asarray(jax.device_get(acc))
+            for q in range(num_queues):
+                if acc[q]:
+                    fifos[q].append(now)
+                else:
+                    rejected += 1
+        state, _ = step_fn(state)
+        payloads, counts, state = drain_fn(state)
+        payloads = np.asarray(jax.device_get(payloads))
+        counts = np.asarray(jax.device_get(counts))
+        for q in range(num_queues):
+            for i in range(int(counts[q])):
+                word0 = int(payloads[q, i, 0])
+                born = fifos[q].popleft()
+                if word0 == tx_app.RESP_COMMITTED:
+                    served += 1
+                    sojourns.append((now, now - born))
+                elif word0 == st.SHED:
+                    shed_n += 1
+                elif word0 == st.TIMEOUT:
+                    timed_out += 1
+    tail = [s for (t, s) in sojourns if t >= steps // 2]
+    backlog = int(np.sum(np.asarray(jax.device_get(
+        state.cpoll.pointer_buffer - state.cpoll.ring_tracker))))
+    return {
+        "p99_sojourn": float(np.percentile(tail, 99)) if tail else float("inf"),
+        "p50_sojourn": float(np.percentile(tail, 50)) if tail else float("inf"),
+        "served": served, "shed": shed_n, "timed_out": timed_out,
+        "rejected": rejected, "final_backlog": backlog,
+        "steps": steps, "deadline": deadline,
+    }

@@ -114,8 +114,10 @@ def tx_commit_chain(log, store, batch, values, slot, rows, *,
 
     log: (R, LC+1, TW); store: (R, NK+1, VW) — sentinel-resident chain
     layout, same shapes out, aliased in place on the Pallas path; slot:
-    (R, B) per-replica log slots. Both backends agree bit-for-bit with a
-    per-replica :func:`tx_commit` loop."""
+    (R, B) per-replica log slots; rows: (B*M,) shared store rows, or
+    (R, B*M) per-replica rows (chain shortening retargets a dead
+    replica's ops at its sentinel). Both backends agree bit-for-bit with
+    a per-replica :func:`tx_commit` loop."""
     if use_ref:
         return _ref.tx_commit_chain(log, store, batch, values, slot, rows)
     it = _auto_interpret() if interpret is None else interpret

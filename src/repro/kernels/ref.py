@@ -86,7 +86,8 @@ def tx_commit_chain(log, store, batch, values, slot, rows):
     log: (R, LC + 1, TW); store: (R, NK + 1, VW); batch: (B, TW) and
     values: (B, M, VW) shared by every replica; slot: (R, B) per-replica
     absolute log slot (LC = the sentinel); rows: (B*M,) store row per op
-    (NK = the sentinel), identical on every replica.
+    (NK = the sentinel) shared by every replica, or (R, B*M) per-replica
+    rows (chain shortening points a dead replica's ops at its sentinel).
     """
     r = log.shape[0]
     lc = log.shape[1] - 1
@@ -96,11 +97,15 @@ def tx_commit_chain(log, store, batch, values, slot, rows):
         jnp.broadcast_to(batch[None], (r,) + batch.shape),
     )
     vals = values.reshape(-1, values.shape[-1])
-    vals = jnp.where((rows >= nk)[:, None], 0, vals)
-    vals_r = jnp.broadcast_to(vals[None], (r,) + vals.shape)
+    if rows.ndim == 1:
+        rows = jnp.broadcast_to(rows[None], (r, rows.shape[0]))
+    vals_r = jnp.where(
+        (rows >= nk)[..., None], 0,
+        jnp.broadcast_to(vals[None], (r,) + vals.shape),
+    )
     ridx = jnp.arange(r)[:, None]
     log = log.at[ridx, slot].set(batch_r, mode="drop")
-    store = store.at[:, rows].set(vals_r, mode="drop")
+    store = store.at[ridx, rows].set(vals_r, mode="drop")
     return log, store
 
 

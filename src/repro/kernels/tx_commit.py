@@ -108,8 +108,10 @@ def commit(log, store, batch, values, slot, rows, *, interpret: bool = True):
 def _chain_commit_kernel(slot_ref, row_ref, log_dst_ref, store_dst_ref,
                          entry_ref, val_ref, log_out_ref, store_out_ref):
     # same pure dual scatter as _commit_kernel, with a leading replica dim
+    # on both payloads (values are per-replica so a dead replica's zeroed
+    # sentinel writes never leak into a live one's block)
     log_out_ref[...] = entry_ref[...]
-    store_out_ref[...] = val_ref[...]
+    store_out_ref[...] = val_ref[0]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -125,41 +127,52 @@ def commit_chain(log, store, batch, values, slot, rows, *,
     chain layout; batch: (B, TW) and values: (B, M, VW), shared by every
     replica; slot: (R, B) int32 absolute log slot per replica (LC = the
     sentinel; replicas advance in lockstep but per-replica tails are
-    honoured); rows: (B*M,) int32 store row per op (NK = the sentinel).
+    honoured); rows: (B*M,) int32 store row per op (NK = the sentinel)
+    shared by every replica, or (R, B*M) per-replica rows — chain
+    shortening (``transaction.chain_commit_apply``) points every op of a
+    dead replica at its own sentinel row while live replicas still land.
     Returns the updated (log, store), same shapes, aliased in place."""
     r, lcp, tw = log.shape
     _, nkp, vw = store.shape
     lc, nk = lcp - 1, nkp - 1
     b, m = values.shape[0], values.shape[1]
-    # per-replica zeroed log payloads (batch-sized, never state-sized)
+    if rows.ndim == 1:
+        rows = jnp.broadcast_to(rows[None], (r, b * m))
+    # per-replica zeroed payloads (batch-sized, never state-sized)
     batch_r = jnp.where(
         (slot >= lc)[..., None], 0,
         jnp.broadcast_to(batch[None], (r, b, tw)),
     )
-    values = jnp.where((rows >= nk).reshape(b, m)[..., None], 0, values)
+    values_r = jnp.where(
+        rows.reshape(r, b, m)[..., None] >= nk, 0,
+        jnp.broadcast_to(values[None], (r, b, m, vw)),
+    )
     slot_flat = slot.reshape(r * b)
+    rows_flat = rows.reshape(r * b * m)
     sp = _spaces(
         {"entry": tw * 4, "val": vw * 4},
         {"log_store": log.nbytes, "store_store": store.nbytes},
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # slot_flat, rows
+        num_scalar_prefetch=2,  # slot_flat, rows_flat
         grid=(r, b, m),
         in_specs=[
             pl.BlockSpec(memory_space=sp["log_store"]),  # aliased dst
             pl.BlockSpec(memory_space=sp["store_store"]),  # aliased dst
             pl.BlockSpec((1, 1, tw), lambda k, i, j, slot, rows: (k, i, 0),
                          memory_space=sp["entry"]),
-            pl.BlockSpec((1, 1, vw), lambda k, i, j, slot, rows: (i, j, 0),
+            pl.BlockSpec((1, 1, 1, vw),
+                         lambda k, i, j, slot, rows: (k, i, j, 0),
                          memory_space=sp["val"]),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, tw),
                          lambda k, i, j, slot, rows: (k, slot[k * b + i], 0),
                          memory_space=sp["entry"]),
-            pl.BlockSpec((1, 1, vw),
-                         lambda k, i, j, slot, rows: (k, rows[i * m + j], 0),
-                         memory_space=sp["val"]),
+            pl.BlockSpec(
+                (1, 1, vw),
+                lambda k, i, j, slot, rows: (k, rows[k * b * m + i * m + j], 0),
+                memory_space=sp["val"]),
         ],
     )
     log_o, store_o = pl.pallas_call(
@@ -172,5 +185,5 @@ def commit_chain(log, store, batch, values, slot, rows, *,
         # aliases index the full pallas_call operand list (prefetch included)
         input_output_aliases={2: 0, 3: 1},
         interpret=interpret,
-    )(slot_flat, rows, log, store, batch_r, values)
+    )(slot_flat, rows_flat, log, store, batch_r, values_r)
     return log_o, store_o

@@ -21,6 +21,10 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import engine as eng
 from repro.core import ringbuf as rb
+from repro.fault import (
+    FaultConfig, FaultInjector, NackError, StragglerDetector,
+    request_with_retries,
+)
 from repro.launch.mesh import make_context
 from repro.models import (
     decode_step, init_params, make_decode_state, prefill,
@@ -92,6 +96,11 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="kernel dispatch for the paged-attention walk")
+    ap.add_argument("--inject-faults", type=int, default=None, metavar="SEED",
+                    help="drive the request path through a seeded "
+                         "fault.FaultInjector (drop/dup/corrupt/delay/"
+                         "doorbell-suppress); completion then counts "
+                         "entries that actually landed")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch)).replace(dtype="float32")
@@ -116,21 +125,59 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     clients = [rb.HostClient(i, ecfg.capacity, ecfg.prompt_len)
                for i in range(args.queues)]
+    fi = None
+    straggler = StragglerDetector()
+    stragglers = 0
+    if args.inject_faults is not None:
+        fi = FaultInjector(FaultConfig(
+            seed=args.inject_faults, p_drop=0.05, p_dup=0.05,
+            p_corrupt=0.05, p_delay=0.08, p_suppress=0.05,
+        ))
+
+    def send_faulted(qi, entry):
+        # ring-credit rejection raises so request_with_retries resubmits
+        nonlocal state
+        state, acc = fi.inject(state, qi, entry)
+        if not acc:
+            raise NackError(0, f"ring credit exhausted on queue {qi}")
+
     sent = recv = 0
     t0 = time.time()
     ticks = 0
     outputs = []
     tokens_out = 0
-    while recv < args.requests and ticks < args.requests * (args.gen_len + 16):
+
+    def serving_done():
+        if fi is None:
+            return recv >= args.requests
+        # drops/dups decouple recv from sent: completion = every entry
+        # that actually landed in a ring answered, nothing still in flight
+        return (sent >= args.requests and fi.in_flight == 0
+                and recv >= fi.counters["landed"])
+
+    while not serving_done() and ticks < args.requests * (args.gen_len + 16):
         # clients inject
         qids, pls, caps = [], [], []
         for c in clients:
             if sent < args.requests and c.can_send() and rng.random() < 0.7:
                 prompt = rng.integers(1, cfg.vocab_size, args.prompt_len)
+                cap = (int(rng.integers(1, args.gen_len + 1))
+                       if args.vary_caps else 0)
+                if fi is not None:
+                    entry = np.concatenate(
+                        [prompt, [cap]]).astype(np.int32)
+                    try:
+                        request_with_retries(
+                            send_faulted, c.queue_id, entry,
+                            retries=2, backoff=0.001,
+                        )
+                    except NackError:
+                        continue  # no credit this tick; try again later
+                    sent += 1
+                    continue
                 qids.append(c.queue_id)
                 pls.append(prompt.astype(np.int32))
-                caps.append(int(rng.integers(1, args.gen_len + 1))
-                            if args.vary_caps else 0)
+                caps.append(cap)
                 c.note_sent()
                 sent += 1
         if qids:
@@ -138,9 +185,14 @@ def main(argv=None):
                 state, jnp.asarray(qids, jnp.int32), jnp.asarray(np.stack(pls)),
                 gen_caps=jnp.asarray(caps, jnp.int32),
             )
+        if fi is not None:
+            state, _ = fi.tick(state)
+        t_step = time.time()
         state = step(state)
         if swap is not None:
             state = swap(state)
+        jax.block_until_ready(state.resp.tail)
+        stragglers += int(straggler.observe(time.time() - t_step)["straggler"])
         ticks += 1
         # clients poll responses (entry = [count | tokens..., zero pad])
         avail = np.asarray(rb.available(state.resp))
@@ -167,9 +219,22 @@ def main(argv=None):
     if cold is not None:
         print(f"  cold tier: {cold.evictions} evictions, "
               f"{cold.restores} restores, {cold.pages_used} pages stranded")
+    if stragglers:
+        print(f"  straggler ticks: {stragglers} "
+              f"(EMA threshold x{straggler.threshold})")
     for qi, toks in outputs[:4]:
         print(f"  queue {qi}: generated {toks}")
-    assert recv == args.requests, "all requests must complete"
+    if fi is not None:
+        c = fi.counters
+        print(f"  faults: offered={c['offered']} landed={c['landed']} "
+              f"dropped={c['dropped']} duplicated={c['duplicated']} "
+              f"corrupted={c['corrupted']} delayed={c['delayed']} "
+              f"suppressed={c['suppressed']} rejected={c['rejected']}")
+        assert recv == c["landed"], (
+            "every landed entry must be answered exactly once"
+        )
+    else:
+        assert recv == args.requests, "all requests must complete"
     return recv
 
 

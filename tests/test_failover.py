@@ -1,0 +1,220 @@
+"""Chain-replica failover: dead replicas freeze with jit-stable shapes
+(both kernel backends agree), log-replay resync restores a revived
+replica bit-for-bit, and ChainMonitor drives kill/revive from schedules
+or heartbeat files."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transaction as tx
+from repro.fault import chain as fchain
+
+I32 = jnp.int32
+
+CFG = tx.TxConfig(num_keys=16, val_words=2, max_ops=2, chain_len=3,
+                  log_capacity=8)
+
+
+def _batch(specs):
+    """specs: list of [(off, v0, v1), ...] per tx."""
+    out = np.zeros((len(specs), tx.tx_words(CFG)), np.int32)
+    for i, ops in enumerate(specs):
+        out[i, 0] = len(ops)
+        for j, (off, *vals) in enumerate(ops):
+            base = 1 + j * (1 + CFG.val_words)
+            out[i, base] = off
+            out[i, base + 1: base + 1 + CFG.val_words] = vals
+    return jnp.asarray(out)
+
+
+def _np_chain(c):
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), c)
+
+
+def _assert_replicas_equal(c, a, b):
+    for field in ("store", "log", "log_tail", "committed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c, field)[a]), np.asarray(getattr(c, field)[b]),
+            err_msg=f"replica {a} vs {b}: {field}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# dead-replica commit semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_dead_replica_freezes(backend):
+    c = tx.make_chain(CFG)
+    c = c._replace(live=c.live.at[1].set(False))
+    frozen = _np_chain(c)
+    batch = _batch([[(3, 10, 11)], [(7, 20, 21), (9, 30, 31)]])
+    c, committed, _ = tx.chain_commit_local(
+        c, batch, CFG, jnp.ones((2,), bool), kernel_backend=backend)
+    assert bool(committed.all())
+    # live replicas advanced identically
+    _assert_replicas_equal(c, 0, 2)
+    assert int(c.log_tail[0]) == 2 and int(c.committed[0]) == 2
+    assert int(c.store[0, 3, 1]) == 11 and int(c.store[0, 9, 0]) == 30
+    # the dead replica is bit-for-bit frozen
+    for field in ("store", "log", "log_tail", "committed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c, field)[1]), getattr(frozen, field)[1],
+            err_msg=f"dead replica moved: {field}",
+        )
+    # sentinel rows stayed zero (dead scatters retarget them)
+    assert not np.asarray(c.store[:, CFG.num_keys]).any()
+    assert not np.asarray(c.log[:, CFG.log_capacity]).any()
+
+
+def test_backends_agree_with_dead_replica():
+    batch = _batch([[(1, 5, 6)], [(2, 7, 8)], [(1, 9, 9)]])
+    outs = []
+    for backend in ("ref", "pallas"):
+        c = tx.make_chain(CFG)
+        c = c._replace(live=c.live.at[2].set(False))
+        c, _, _ = tx.chain_commit_local(
+            c, batch, CFG, jnp.ones((3,), bool), kernel_backend=backend)
+        outs.append(_np_chain(c))
+    for field in ("store", "log", "log_tail", "committed"):
+        np.testing.assert_array_equal(
+            getattr(outs[0], field), getattr(outs[1], field),
+            err_msg=f"ref vs pallas: {field}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# log-replay resync
+# ---------------------------------------------------------------------------
+
+def test_resync_replays_log_bit_for_bit():
+    c = tx.make_chain(CFG)
+    oracle = tx.make_chain(CFG)  # never-failed twin
+    batches = [
+        _batch([[(3, 1, 2)], [(5, 3, 4)]]),
+        _batch([[(3, 9, 9)], [(8, 7, 7)]]),  # overwrites row 3
+        _batch([[(12, 5, 5)], [(0, 6, 6)]]),
+    ]
+    mask = jnp.ones((2,), bool)
+    c, _, _ = tx.chain_commit_local(c, batches[0], CFG, mask,
+                                    kernel_backend="ref")
+    c = c._replace(live=c.live.at[1].set(False))
+    for b in batches[1:]:
+        c, _, _ = tx.chain_commit_local(c, b, CFG, mask, kernel_backend="ref")
+    for b in batches:
+        oracle, _, _ = tx.chain_commit_local(oracle, b, CFG, mask,
+                                             kernel_backend="ref")
+    assert int(c.log_tail[1]) == 2 and int(c.log_tail[0]) == 6
+    c = fchain.resync_replica(c, CFG, 1)
+    assert bool(np.asarray(c.live).all())
+    _assert_replicas_equal(c, 1, 0)
+    for field in ("store", "log", "log_tail", "committed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c, field)[1]),
+            np.asarray(getattr(oracle, field)[0]),
+            err_msg=f"revived vs never-failed oracle: {field}",
+        )
+
+
+def test_resync_full_copy_when_ring_lapped():
+    cfg = tx.TxConfig(num_keys=16, val_words=1, max_ops=1, chain_len=2,
+                      log_capacity=4)
+    c = tx.make_chain(cfg)
+    c = c._replace(live=c.live.at[1].set(False))
+    mask = jnp.ones((1,), bool)
+    # 6 commits > log_capacity: replica 1's replay window fell off the ring
+    for i in range(6):
+        b = jnp.asarray([[1, i % cfg.num_keys, 100 + i]], I32)
+        c, _, _ = tx.chain_commit_local(c, b, cfg, mask, kernel_backend="ref")
+    assert int(c.log_tail[0]) - int(c.log_tail[1]) > cfg.log_capacity
+    c = fchain.resync_replica(c, cfg, 1)
+    _assert_replicas_equal(c, 0, 1)
+    assert bool(np.asarray(c.live).all())
+
+
+def test_resync_refuses_replica_ahead_of_source():
+    c = tx.make_chain(CFG)
+    c = c._replace(log_tail=c.log_tail.at[1].set(3))
+    with pytest.raises(ValueError, match="ahead of source"):
+        fchain.resync_replica(c, CFG, 1, source=0)
+
+
+def test_resync_needs_a_live_source():
+    c = tx.make_chain(tx.TxConfig(num_keys=8, val_words=1, max_ops=1,
+                                  chain_len=1, log_capacity=4))
+    c = c._replace(live=c.live.at[0].set(False))
+    with pytest.raises(ValueError, match="no live source"):
+        fchain.resync_replica(c, tx.TxConfig(num_keys=8, val_words=1,
+                                             max_ops=1, chain_len=1,
+                                             log_capacity=4), 0)
+
+
+# ---------------------------------------------------------------------------
+# ChainMonitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_schedule_mode_kill_revive():
+    mon = fchain.ChainMonitor(CFG)
+    c = tx.make_chain(CFG)
+    c = mon.apply_events(c, [("kill", 1)])
+    assert not bool(c.live[1]) and bool(c.live[0]) and bool(c.live[2])
+    b = _batch([[(4, 1, 1)]])
+    c, _, _ = tx.chain_commit_local(c, b, CFG, jnp.ones((1,), bool),
+                                    kernel_backend="ref")
+    c = mon.apply_events(c, [("revive", 1)])
+    assert bool(np.asarray(c.live).all())
+    _assert_replicas_equal(c, 0, 1)
+    assert mon.events == [("kill", 1), ("revive", 1)]
+
+
+def test_monitor_refuses_to_kill_last_replica():
+    mon = fchain.ChainMonitor(CFG)
+    c = tx.make_chain(CFG)
+    c = mon.kill(c, 0)
+    c = mon.kill(c, 1)
+    with pytest.raises(ValueError, match="last live replica"):
+        mon.kill(c, 2)
+    # the chain still serves
+    c, committed, _ = tx.chain_commit_local(
+        c, _batch([[(2, 3, 3)]]), CFG, jnp.ones((1,), bool),
+        kernel_backend="ref")
+    assert bool(committed[0]) and int(c.store[2, 2, 0]) == 3
+
+
+def test_monitor_heartbeat_sweep(tmp_path):
+    mon = fchain.ChainMonitor(CFG, directory=str(tmp_path), timeout=5.0)
+    c = tx.make_chain(CFG)
+    now = time.time()
+    for r in range(CFG.chain_len):
+        mon.beat(r)
+    # replica 1's heartbeat goes stale
+    os.utime(mon.hbs[1].path, (now - 60, now - 60))
+    c = mon.sweep(c, now=now)
+    assert [bool(x) for x in np.asarray(c.live)] == [True, False, True]
+    assert mon.events == [("kill", 1)]
+    # survivors commit while 1 is out
+    c, _, _ = tx.chain_commit_local(c, _batch([[(6, 4, 4)]]), CFG,
+                                    jnp.ones((1,), bool), kernel_backend="ref")
+    # heartbeat returns -> sweep revives and resyncs
+    mon.beat(1)
+    c = mon.sweep(c, now=now)
+    assert bool(np.asarray(c.live).all())
+    assert mon.events == [("kill", 1), ("revive", 1)]
+    _assert_replicas_equal(c, 0, 1)
+
+
+def test_monitor_sweep_ignores_never_beat_replica(tmp_path):
+    cfg = CFG
+    mon = fchain.ChainMonitor(cfg, directory=str(tmp_path), timeout=5.0)
+    c = tx.make_chain(cfg)
+    mon.beat(0)
+    mon.beat(2)
+    os.remove(mon.hbs[1].path) if os.path.exists(mon.hbs[1].path) else None
+    c = mon.sweep(c, now=time.time())
+    # replica 1 never beat: no file, left alone
+    assert bool(np.asarray(c.live).all())
+    assert mon.events == []

@@ -1,0 +1,273 @@
+"""Fault injection: deterministic schedules, per-class delivery semantics,
+app-side payload validation (MALFORMED NACKs), and the conservation
+property under random seeds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core import kvstore as kv
+from repro.core import ringbuf as rb
+from repro.core import status as stc
+from repro.core import transaction as tx
+from repro.core import tx_app
+from repro.fault import inject as finj
+from repro.fault import soak
+from repro.fault.watchdog import is_transient
+
+I32 = jnp.int32
+
+
+def _mini_state():
+    cfg = engine.EngineConfig(num_queues=2, capacity=4, req_words=3,
+                              resp_words=3, budget=2)
+    return engine.make(cfg, None), cfg
+
+
+def _fi(**kw):
+    return finj.FaultInjector(finj.FaultConfig(seed=kw.pop("seed", 0), **kw))
+
+
+# ---------------------------------------------------------------------------
+# injector unit semantics
+# ---------------------------------------------------------------------------
+
+def test_clean_inject_lands_with_doorbell():
+    state, _ = _mini_state()
+    fi = _fi()
+    state, acc = fi.inject(state, 0, np.array([1, 2, 3]))
+    assert acc and fi.counters["landed"] == 1
+    assert int(rb.available(state.req)[0]) == 1
+    assert int(state.cpoll.pointer_buffer[0]) == 1
+
+
+def test_drop_vanishes_on_the_wire():
+    state, _ = _mini_state()
+    fi = _fi(p_drop=1.0)
+    state, acc = fi.inject(state, 0, np.array([1, 2, 3]))
+    assert acc  # the client believes the send succeeded
+    assert fi.counters["dropped"] == 1 and fi.counters["landed"] == 0
+    assert int(rb.available(state.req)[0]) == 0
+
+
+def test_duplicate_lands_twice():
+    state, _ = _mini_state()
+    fi = _fi(p_dup=1.0)
+    state, acc = fi.inject(state, 1, np.array([7, 8, 9]), tag="a")
+    assert acc and fi.counters["duplicated"] == 1
+    assert len(fi.landed) == 2
+    assert int(rb.available(state.req)[1]) == 2
+    assert [t for (_, _, _, t) in fi.landed] == ["a", "a"]
+
+
+def test_corrupt_perturbs_payload():
+    state, _ = _mini_state()
+    fi = _fi(p_corrupt=1.0)
+    pristine = np.array([1, 2, 3])
+    state, acc = fi.inject(state, 0, pristine)
+    assert acc and fi.counters["corrupted"] == 1
+    (_, _, landed_payload, _) = fi.landed[0]
+    assert not np.array_equal(landed_payload, pristine)
+    got = rb.peek(state.req, jnp.array([0], I32), jnp.array([0], I32))
+    assert np.array_equal(np.asarray(got)[0], landed_payload)
+
+
+def test_delay_holds_until_tick_releases():
+    state, _ = _mini_state()
+    fi = _fi(p_delay=1.0, delay_min=2, delay_max=2)
+    state, acc = fi.inject(state, 0, np.array([4, 5, 6]))
+    assert acc and fi.in_flight == 1
+    assert int(rb.available(state.req)[0]) == 0
+    state, _ = fi.tick(state)  # t=1: not due yet
+    assert int(rb.available(state.req)[0]) == 0
+    state, _ = fi.tick(state)  # t=2: released
+    assert int(rb.available(state.req)[0]) == 1 and fi.in_flight == 0
+    assert int(state.cpoll.pointer_buffer[0]) == 1
+
+
+def test_suppress_withholds_doorbell_not_entry():
+    state, _ = _mini_state()
+    fi = _fi(p_suppress=1.0, suppress_steps=2)
+    state, acc = fi.inject(state, 0, np.array([1, 1, 1]))
+    assert acc and fi.counters["suppressed"] == 1
+    # the entry is in the ring, but cpoll has not been told
+    assert int(rb.available(state.req)[0]) == 1
+    assert int(state.cpoll.pointer_buffer[0]) == 0
+    state, _ = fi.tick(state)
+    assert int(state.cpoll.pointer_buffer[0]) == 0
+    state, _ = fi.tick(state)
+    assert int(state.cpoll.pointer_buffer[0]) == 1
+    assert fi.counters["doorbells_released"] == 1
+
+
+def test_ring_credit_rejection_reported():
+    state, cfg = _mini_state()
+    fi = _fi()
+    for i in range(cfg.capacity):
+        state, acc = fi.inject(state, 0, np.array([i, 0, 0]))
+        assert acc
+    state, acc = fi.inject(state, 0, np.array([99, 0, 0]))
+    assert not acc and fi.counters["rejected"] == 1
+
+
+def test_schedule_events_fire_on_tick():
+    state, _ = _mini_state()
+    fi = _fi(kill_schedule=((1, 2),), revive_schedule=((2, 2),))
+    state, ev = fi.tick(state)
+    assert ev == [("kill", 2)]
+    state, ev = fi.tick(state)
+    assert ev == [("revive", 2)]
+
+
+def test_injector_is_deterministic():
+    outs = []
+    for _ in range(2):
+        state, _ = _mini_state()
+        fi = _fi(seed=13, p_drop=0.2, p_dup=0.2, p_corrupt=0.2, p_delay=0.2)
+        for i in range(40):
+            state, _ = fi.inject(state, i % 2, np.array([i, i, i]))
+            if i % 5 == 0:
+                state, _ = fi.tick(state)
+        outs.append((dict(fi.counters),
+                     [(t, q, p.tolist()) for (t, q, p, _) in fi.landed]))
+    assert outs[0] == outs[1]
+
+
+def test_nack_error_is_transient():
+    err = finj.NackError(stc.SHED, "queue 3")
+    assert is_transient(err)
+    assert err.status == stc.SHED
+
+
+# ---------------------------------------------------------------------------
+# app-side payload validation (NACK instead of scattering garbage)
+# ---------------------------------------------------------------------------
+
+def test_kvstore_bad_opcode_nacks():
+    cfg = kv.KVConfig(num_buckets=8, ways=2, key_words=1, val_words=1,
+                      pool_size=16)
+    state = kv.make(cfg)
+    payloads = jnp.asarray([
+        [kv.OP_PUT, 3, 7],
+        [99, 3, 9],  # unknown opcode: must not become a PUT
+    ], I32)
+    state, resp = kv.app_step(state, payloads, jnp.ones((2,), bool), cfg,
+                              kernel_backend="ref")
+    assert int(resp[0, 0]) == 1
+    assert int(resp[1, 0]) == stc.MALFORMED
+    vals, found = kv.get(state, jnp.asarray([[3]], I32),
+                         mask=jnp.ones((1,), bool), backend="ref")
+    assert bool(found[0]) and int(vals[0, 0]) == 7  # the garbage PUT lost
+
+
+def test_tx_app_validation_nacks():
+    cfg = tx.TxConfig(num_keys=8, val_words=1, max_ops=2, chain_len=2,
+                      log_capacity=8)
+    chain = tx.make_chain(cfg)
+    w = tx_app.request_words(cfg)
+    good = [1, 3, 11, 0, 0]
+    over_count = [5, 3, 11, 0, 0]       # n_ops > max_ops
+    neg_count = [-2, 3, 11, 0, 0]
+    bad_offset = [1, 99, 11, 0, 0]      # offset outside the store
+    payloads = jnp.asarray([good, over_count, neg_count, bad_offset], I32)
+    assert payloads.shape[1] == w
+    chain, resp = tx_app.app_step(chain, payloads, jnp.ones((4,), bool), cfg,
+                                  kernel_backend="ref")
+    assert int(resp[0, 0]) == tx_app.RESP_COMMITTED
+    assert [int(resp[i, 0]) for i in (1, 2, 3)] == [stc.MALFORMED] * 3
+    # only the good tx touched the store — exactly one live row
+    store = np.asarray(chain.store[0])
+    assert store[3, 0] == 11
+    assert np.count_nonzero(store) == 1
+    assert int(chain.committed[0]) == 1
+
+
+def test_tx_app_tolerates_trailing_deadline_word():
+    cfg = tx.TxConfig(num_keys=8, val_words=1, max_ops=1, chain_len=1,
+                      log_capacity=4)
+    chain = tx.make_chain(cfg)
+    w = tx_app.request_words(cfg)
+    payload = jnp.asarray([[1, 2, 5, 123456]], I32)  # + deadline word
+    assert payload.shape[1] == w + 1
+    chain, resp = tx_app.app_step(chain, payload, jnp.ones((1,), bool), cfg,
+                                  kernel_backend="ref")
+    assert int(resp[0, 0]) == tx_app.RESP_COMMITTED
+    assert int(chain.store[0, 2, 0]) == 5
+    # the log record is the tx body only — the deadline word is sliced off
+    assert np.asarray(chain.log[0, 0]).tolist() == [1, 2, 5]
+
+
+def test_dlrm_bad_index_nacks():
+    from repro.core import dlrm
+
+    cfg = dlrm.DLRMConfig(num_tables=2, rows=8, dim=4, lookups=2,
+                          dense_features=2, bottom=(4,), top=(4, 1))
+    params = dlrm.init_params(jax.random.PRNGKey(0), cfg)
+    w = dlrm.request_words(cfg)
+    good = np.zeros((w,), np.int64)
+    good[0] = dlrm.OP_INFER
+    bad = good.copy()
+    bad[1 + cfg.dense_features] = 9999  # out-of-range embedding row
+    payloads = jnp.asarray(np.stack([good, bad]), I32)
+    _, resp = dlrm.app_step(params, payloads, jnp.ones((2,), bool), cfg,
+                            kernel_backend="ref")
+    assert int(resp[0, 0]) == 1
+    assert int(resp[1, 0]) == stc.MALFORMED
+    assert int(resp[1, 1]) == 0  # no garbage logit
+
+
+def test_duplicate_tx_request_is_idempotent():
+    """The dup fault: same transaction twice in one batch — the second
+    copy defers (first-claimant concurrency control); re-committing it
+    later leaves the store unchanged (state idempotency)."""
+    cfg = tx.TxConfig(num_keys=8, val_words=1, max_ops=1, chain_len=2,
+                      log_capacity=8)
+    chain = tx.make_chain(cfg)
+    payload = [1, 4, 42]
+    batch = jnp.asarray([payload, payload], I32)
+    chain, committed, deferred = tx.chain_commit_local(
+        chain, batch, cfg, jnp.ones((2,), bool), kernel_backend="ref")
+    assert [bool(committed[0]), bool(committed[1])] == [True, False]
+    assert [bool(deferred[0]), bool(deferred[1])] == [False, True]
+    store_after_first = np.asarray(chain.store)
+    # the deferred copy retries alone and commits — store is unchanged
+    chain, committed, _ = tx.chain_commit_local(
+        chain, batch[:1], cfg, jnp.ones((1,), bool), kernel_backend="ref")
+    assert bool(committed[0])
+    np.testing.assert_array_equal(np.asarray(chain.store), store_after_first)
+
+
+# ---------------------------------------------------------------------------
+# conservation property under seeded fault schedules
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_conservation_under_faults(seed):
+    """Any seeded fault schedule: every landed ring entry resolves to
+    exactly one response, every logical request recovers, and the store
+    equals the pure-numpy replay of the committed set."""
+    r = soak._drive(seed, 20, ((7, 1),), ((14, 1),))
+    assert r["responses"] == r["counters"]["landed"]
+    chain = r["chain"]
+    np.testing.assert_array_equal(
+        r["oracle_store"].astype(np.int64),
+        np.asarray(chain.store[0])[:-1].astype(np.int64),
+    )
+    # replicas 0 and 2 never died; they must agree bit-for-bit
+    np.testing.assert_array_equal(np.asarray(chain.store[0]),
+                                  np.asarray(chain.store[2]))
+    np.testing.assert_array_equal(np.asarray(chain.log[0]),
+                                  np.asarray(chain.log[2]))
+
+
+def test_soak_smoke_fixed_seed():
+    """The full acceptance gate at reduced scale (tier-1 runs the 200-step
+    version via scripts/fault_soak.py): every fault class fired, NACKs
+    recovered, revived replica bit-for-bit with the never-failed twin."""
+    r = soak.run_soak(seed=7, steps=60)
+    assert r["responses"] == r["counters"]["landed"]
+    for c in finj.FAULT_CLASSES:
+        assert r["counters"][c] >= 1

@@ -14,7 +14,8 @@ def test_enqueue_pop_roundtrip():
     s = rb.make(num_queues=3, capacity=4, entry_words=2)
     q = jnp.array([0, 2], I32)
     p = jnp.array([[1, 2], [3, 4]], I32)
-    s = rb.enqueue(s, q, p)
+    s, ok = rb.enqueue(s, q, p)
+    assert list(np.asarray(ok)) == [True, True]
     assert list(np.asarray(rb.available(s))) == [1, 0, 1]
     got = rb.peek(s, jnp.array([0, 2], I32), jnp.array([0, 0], I32))
     assert np.array_equal(np.asarray(got), [[1, 2], [3, 4]])
@@ -27,13 +28,16 @@ def test_enqueue_pop_roundtrip():
 def test_credit_rejects_when_full():
     s = rb.make(1, 2, 1)
     for i in range(2):
-        s = rb.enqueue(s, jnp.array([0], I32), jnp.array([[i + 1]], I32))
-    full = rb.enqueue(s, jnp.array([0], I32), jnp.array([[99]], I32))
+        s, ok = rb.enqueue(s, jnp.array([0], I32), jnp.array([[i + 1]], I32))
+        assert bool(ok[0])
+    full, ok = rb.enqueue(s, jnp.array([0], I32), jnp.array([[99]], I32))
+    assert not bool(ok[0])  # over-credit enqueue reported, not silent
     assert int(rb.available(full)[0]) == 2  # rejected, no overwrite
     assert int(rb.free_slots(full)[0]) == 0
     # consumer frees one slot -> producer credit returns
     full = rb.pop(full, jnp.array([0], I32), jnp.array([1], I32))
-    s2 = rb.enqueue(full, jnp.array([0], I32), jnp.array([[99]], I32))
+    s2, ok = rb.enqueue(full, jnp.array([0], I32), jnp.array([[99]], I32))
+    assert bool(ok[0])
     assert int(rb.available(s2)[0]) == 2
 
 
@@ -42,7 +46,7 @@ def test_wraparound_many_epochs():
     expected = []
     seen = []
     for i in range(25):
-        s = rb.enqueue(s, jnp.array([0], I32), jnp.array([[i]], I32))
+        s, _ = rb.enqueue(s, jnp.array([0], I32), jnp.array([[i]], I32))
         expected.append(i)
         got = rb.peek(s, jnp.array([0], I32), jnp.array([0], I32))
         seen.append(int(got[0, 0]))
@@ -54,7 +58,7 @@ def test_gather_batch_layout():
     s = rb.make(3, 8, 1)
     for q in range(3):
         for i in range(q + 1):
-            s = rb.enqueue(s, jnp.array([q], I32), jnp.array([[10 * q + i]], I32))
+            s, _ = rb.enqueue(s, jnp.array([q], I32), jnp.array([[10 * q + i]], I32))
     qids = jnp.array([2, 0, 1], I32)
     counts = jnp.array([2, 1, 1], I32)
     pay, srcq, valid = rb.gather_batch(s, qids, counts, budget=6)
@@ -72,7 +76,7 @@ def test_property_fifo_per_queue(ops):
     ctr = 0
     for q in ops:
         if int(rb.free_slots(s)[q]) > 0:
-            s = rb.enqueue(s, jnp.array([q], I32), jnp.array([[ctr]], I32))
+            s, _ = rb.enqueue(s, jnp.array([q], I32), jnp.array([[ctr]], I32))
             sent[q].append(ctr)
         ctr += 1
     for q in range(4):
@@ -81,6 +85,52 @@ def test_property_fifo_per_queue(ops):
         if n:
             got = rb.peek(s, jnp.full((n,), q, I32), jnp.arange(n, dtype=I32))
             assert [int(x) for x in np.asarray(got)[:, 0]] == sent[q]
+
+
+def test_enqueue_accepted_mask_mixed_credit():
+    """One call mixing full and open queues: the accepted mask singles out
+    exactly the over-credit entries, and only accepted entries land."""
+    s = rb.make(2, 1, 1)
+    s, ok = rb.enqueue(s, jnp.array([0], I32), jnp.array([[7]], I32))
+    assert bool(ok[0])
+    s, ok = rb.enqueue(
+        s, jnp.array([0, 1], I32), jnp.array([[8], [9]], I32)
+    )
+    assert list(np.asarray(ok)) == [False, True]  # q0 full, q1 open
+    assert list(np.asarray(rb.available(s))) == [1, 1]
+    got = rb.peek(s, jnp.array([0, 1], I32), jnp.array([0, 0], I32))
+    assert [int(x) for x in np.asarray(got)[:, 0]] == [7, 9]
+
+
+def test_enqueue_rejects_duplicate_queue_ids():
+    """SPSC contract: one entry per queue per call. Eagerly a duplicate is
+    a hard error; under a mask the masked-out duplicate is fine."""
+    s = rb.make(2, 4, 1)
+    with pytest.raises(ValueError, match="duplicate"):
+        rb.enqueue(s, jnp.array([1, 1], I32), jnp.array([[1], [2]], I32))
+    # same ids but the second masked off -> legal, one entry lands
+    s, ok = rb.enqueue(
+        s, jnp.array([1, 1], I32), jnp.array([[1], [2]], I32),
+        jnp.array([True, False]),
+    )
+    assert list(np.asarray(ok)) == [True, False]
+    assert list(np.asarray(rb.available(s))) == [0, 1]
+
+
+def test_enqueue_traced_duplicate_drops_not_raises():
+    """Inside jit the dup check can't raise; the duplicate is rejected via
+    the accepted mask instead (first entry per queue wins)."""
+    s = rb.make(2, 4, 1)
+
+    @jax.jit
+    def go(s, q, p):
+        return rb.enqueue(s, q, p)
+
+    s, ok = go(s, jnp.array([1, 1], I32), jnp.array([[5], [6]], I32))
+    assert list(np.asarray(ok)) == [True, False]
+    assert list(np.asarray(rb.available(s))) == [0, 1]
+    got = rb.peek(s, jnp.array([1], I32), jnp.array([0], I32))
+    assert int(got[0, 0]) == 5
 
 
 def test_host_client_flow_control():

@@ -1,0 +1,162 @@
+"""Deadline-based load shedding: shed_plan semantics, the engine's shed
+phase (TIMEOUT/SHED NACK responses, never silent drops), and the
+overload sweep showing shedding bounds tail latency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import ringbuf as rb
+from repro.core import scheduler as sched
+from repro.core import status as stc
+from repro.fault import soak
+
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# shed_plan
+# ---------------------------------------------------------------------------
+
+def test_shed_plan_expired_vs_predictive():
+    dl = jnp.asarray([[10, 10, 10, 11, 11, 11, 12, 12]], I32)
+    valid = jnp.ones((1, 8), bool)
+    counts, prefix, status = sched.shed_plan(dl, valid, jnp.asarray(10, I32),
+                                            quota=2)
+    assert int(counts[0]) == 8
+    assert prefix.all()
+    want = [stc.TIMEOUT] * 3 + [stc.SHED] * 5
+    assert np.asarray(status[0]).tolist() == want
+
+
+def test_shed_plan_prefix_only():
+    # a doomed entry parked behind a viable one survives (FIFO pop: the
+    # ring releases from the head only)
+    dl = jnp.asarray([[100, 5, 5]], I32)
+    counts, prefix, _ = sched.shed_plan(dl, jnp.ones((1, 3), bool),
+                                        jnp.asarray(10, I32), quota=1)
+    assert int(counts[0]) == 0
+    assert not prefix.any()
+
+
+def test_shed_plan_no_deadline_never_shed():
+    dl = jnp.asarray([[0, -1, 0]], I32)
+    counts, prefix, _ = sched.shed_plan(dl, jnp.ones((1, 3), bool),
+                                        jnp.asarray(10 ** 6, I32), quota=1)
+    assert int(counts[0]) == 0 and not prefix.any()
+
+
+def test_shed_plan_head_not_shed_before_expiry():
+    # pos 0 is about to be served this step: only an actually-passed
+    # deadline sheds it
+    dl = jnp.asarray([[11]], I32)
+    counts, _, _ = sched.shed_plan(dl, jnp.ones((1, 1), bool),
+                                   jnp.asarray(10, I32), quota=1)
+    assert int(counts[0]) == 0
+    counts, prefix, status = sched.shed_plan(dl, jnp.ones((1, 1), bool),
+                                             jnp.asarray(11, I32), quota=1)
+    assert int(counts[0]) == 1 and int(status[0, 0]) == stc.TIMEOUT
+
+
+def test_shed_plan_invalid_entries_ignored():
+    dl = jnp.asarray([[5, 5, 5]], I32)
+    valid = jnp.asarray([[True, False, False]])
+    counts, prefix, _ = sched.shed_plan(dl, valid, jnp.asarray(10, I32),
+                                        quota=1)
+    assert int(counts[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine shed phase
+# ---------------------------------------------------------------------------
+
+def _echo_app(app, payloads, valid):
+    resp = jnp.zeros_like(payloads).at[:, 0].set(valid.astype(I32))
+    return app, resp
+
+
+def _step_n(state, cfg, n):
+    for _ in range(n):
+        state, stats = engine.engine_step(state, _echo_app, cfg)
+    return state, stats
+
+
+def test_engine_sheds_doomed_prefix_as_nacks():
+    cfg = engine.EngineConfig(num_queues=1, capacity=8, req_words=3,
+                              resp_words=3, budget=1, kernel_backend="ref",
+                              deadline_word=2, shed_scan=4)
+    state = engine.make(cfg, None)
+    state, _ = _step_n(state, cfg, 3)  # advance the clock: now = 3
+    q = jnp.zeros((1,), I32)
+    # head expired (dl=2 < 3), then two doomed-but-not-expired, then viable
+    for i, dl in enumerate([2, 4, 5, 50]):
+        state = engine.inject(state, q, jnp.asarray([[100 + i, 0, dl]], I32))
+    state, stats = engine.engine_step(state, _echo_app, cfg)
+    assert int(stats["timed_out"]) == 1 and int(stats["shed"]) == 2
+    assert int(stats["served"]) == 1  # the viable entry got the budget
+    payloads, counts, state = engine.drain_responses(state, cfg.capacity)
+    assert int(counts[0]) == 4
+    word0 = np.asarray(payloads[0, :4, 0]).tolist()
+    # response FIFO order mirrors request order: NACKs first, then the serve
+    assert word0 == [stc.TIMEOUT, stc.SHED, stc.SHED, 1]
+    assert int(state.timed_out) == 1 and int(state.shed) == 2
+
+
+def test_engine_no_deadline_word_is_inert():
+    cfg = engine.EngineConfig(num_queues=1, capacity=8, req_words=3,
+                              resp_words=3, budget=2, kernel_backend="ref",
+                              deadline_word=-1)
+    state = engine.make(cfg, None)
+    state, _ = _step_n(state, cfg, 3)
+    q = jnp.zeros((1,), I32)
+    for dl in [1, 1]:  # long-expired deadlines, but the phase is off
+        state = engine.inject(state, q, jnp.asarray([[7, 0, dl]], I32))
+    state, stats = engine.engine_step(state, _echo_app, cfg)
+    assert int(stats["timed_out"]) == 0 and int(stats["shed"]) == 0
+    assert int(stats["served"]) == 2
+    assert int(state.timed_out) == 0 and int(state.shed) == 0
+
+
+def test_shed_clamped_by_response_credit():
+    # a shed MUST surface as a response: with one response slot free, only
+    # one of three expired entries is popped (no silent drops) — the rest
+    # wait for credit
+    cfg = engine.EngineConfig(num_queues=1, capacity=8, req_words=3,
+                              resp_words=3, budget=1, kernel_backend="ref",
+                              deadline_word=2, shed_scan=3)
+    state = engine.make(cfg, None)
+    state, _ = _step_n(state, cfg, 4)
+    # leave exactly one free response slot
+    state = state._replace(resp=state.resp._replace(
+        tail=state.resp.tail + cfg.capacity - 1))
+    q = jnp.zeros((1,), I32)
+    for _ in range(3):  # all long expired
+        state = engine.inject(state, q, jnp.asarray([[9, 0, 1]], I32))
+    state, stats = engine.engine_step(state, _echo_app, cfg)
+    assert int(stats["timed_out"]) == 1  # clamped from 3 by credit
+    assert int(rb.available(state.req)[0]) >= 1  # the rest still queued
+    # credit returns -> another NACK lands on the next step
+    state = state._replace(resp=state.resp._replace(
+        head=state.resp.head + cfg.capacity - 1))
+    state, stats = engine.engine_step(state, _echo_app, cfg)
+    assert int(stats["timed_out"]) >= 1
+
+
+# ---------------------------------------------------------------------------
+# overload sweep: shedding bounds the tail
+# ---------------------------------------------------------------------------
+
+def test_overload_shedding_bounds_p99():
+    steps, deadline = 120, 24
+    on = soak.run_overload(seed=0, steps=steps, shed=True, deadline=deadline)
+    off = soak.run_overload(seed=0, steps=steps, shed=False, deadline=deadline)
+    # without shedding the workload must actually be overloaded
+    assert off["shed"] == 0 and off["timed_out"] == 0
+    assert off["p99_sojourn"] > deadline
+    # shedding engaged and bounded the served tail near the deadline
+    assert on["shed"] + on["timed_out"] > 0
+    assert on["p99_sojourn"] < off["p99_sojourn"]
+    assert on["p99_sojourn"] <= 1.5 * deadline + 2
+    # the backlog stops growing without bound
+    assert on["final_backlog"] < off["final_backlog"]
