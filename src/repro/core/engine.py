@@ -186,8 +186,31 @@ def _shed_phase(state: EngineState, cfg: EngineConfig):
     return state, n_timeout, n_shed
 
 
+# App-state scalar counters surfaced as per-step deltas in the engine's
+# stats dict when the app carries them (the KVS hot-set cache tier:
+# kvstore.KVState.cache_hits/_misses/_evictions). Apps without the fields
+# simply contribute no entries, so the scan-carried stats structure stays
+# static per app type.
+_APP_STAT_FIELDS = ("cache_hits", "cache_misses", "cache_evictions")
+
+
+def _app_stat_deltas(prev_app, new_app):
+    out = {}
+    for name in _APP_STAT_FIELDS:
+        before = getattr(prev_app, name, None)
+        after = getattr(new_app, name, None)
+        if before is not None and after is not None:
+            out[name] = after - before
+    return out
+
+
 def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
-    """One APU iteration. Returns (state, stats dict)."""
+    """One APU iteration. Returns (state, stats dict).
+
+    The stats dict always carries ``served``/``backlog``/``timed_out``/
+    ``shed``; apps whose state exposes the hot-set cache counters
+    additionally report per-step ``cache_hits``/``cache_misses``/
+    ``cache_evictions`` deltas."""
     # 0. deadline shed phase (only when the config designates a deadline
     # word): give up on doomed queue prefixes before spending budget
     if cfg.deadline_word >= 0:
@@ -216,6 +239,7 @@ def engine_step(state: EngineState, app_fn: Callable, cfg: EngineConfig):
     return new, {
         "served": n_served, "backlog": jnp.sum(avail - take),
         "timed_out": n_timeout, "shed": n_shed,
+        **_app_stat_deltas(state.app, app),
     }
 
 

@@ -15,6 +15,17 @@ explicit VMEM staging; the jnp implementations here are their oracles, and
 through ``app_step``). PUT splits into :func:`plan_put` (hashes, dedupe,
 way ranking — ALU work, always jnp) and a commit phase that either backend
 applies identically, so the paths agree bit-for-bit.
+
+Hot-set cache tier (§IV-A's "serve the hot last mile from cache" bet,
+measured instead of modeled): ``KVConfig.cache_sets > 0`` adds a small
+set-associative cache — key/value/meta arrays resident in ``KVState``
+under the same sentinel convention — that GET probes *before* the bucket
+walk (``kernels.hash_probe.cache_probe`` / its ``kernels.ref`` oracle: one
+VMEM set lookup) and falls through to the bucket walk only for the miss
+subset. Eviction is frequency-decay (CLOCK-style reference bits in
+``cache_meta``); PUT commits write-through (update-on-hit, admit-on-miss)
+so no stale value ever survives and both backends stay bit-for-bit. All
+cache maintenance is ALU work shared by the backends, like the PUT plan.
 """
 from __future__ import annotations
 
@@ -35,6 +46,25 @@ class KVConfig(NamedTuple):
     key_words: int = 2
     val_words: int = 16  # 64 B values like the paper's workload
     pool_size: int = 8192
+    cache_sets: int = 0  # hot-set cache sets; 0 disables the cache tier
+    cache_ways: int = 4  # associativity of the hot-set cache
+
+
+# Hot-set cache reference bits (CLOCK-style frequency decay).
+# cache_meta values: 0 = never-used way; >= 1 = valid entry whose value is
+# its remaining reference count. A probe hit refreshes to the ceiling, an
+# admission starts one notch above the floor, and an admission attempt
+# that finds no victim sweeps its set's counters down by one (floor 1, so
+# a valid entry decays to "evictable" but never back to "empty"). Victims
+# are ways with meta <= 1: empty first, then fully-decayed cold entries.
+# The ceiling sets scan resistance: a hot entry survives ~CACHE_REF_MAX
+# pressured admission rounds between re-hits. 15 holds the zipf-0.9 head
+# stable at a 5%-of-pool cache (measured ~0.65 hit rate, near the
+# conflict-adjusted ideal); at 3 the mid-hot ranks churn out faster than
+# they recur and the measured rate drops under 0.6.
+CACHE_REF_MAX = 15  # refresh: meta = 1 + CACHE_REF_MAX
+CACHE_ADMIT_REF = 1  # admission: meta = 1 + CACHE_ADMIT_REF
+CACHE_SALT = 0x85EBCA6B  # set hash salt (distinct from both bucket salts)
 
 
 class KVState(NamedTuple):
@@ -49,6 +79,14 @@ class KVState(NamedTuple):
     pool: jax.Array  # (NP + 1, VW) int32; row NP = zero sentinel
     alloc: jax.Array  # () int32 bump allocator
     dropped: jax.Array  # () int32 PUTs rejected (both buckets full)
+    # hot-set cache tier (sentinel-resident like the buckets; row CS = zero
+    # sentinel forever — cache_sets=0 keeps only the sentinel row resident)
+    cache_keys: jax.Array  # (CS + 1, CW, KW) int32 cached keys
+    cache_vals: jax.Array  # (CS + 1, CW, VW) int32 cached values
+    cache_meta: jax.Array  # (CS + 1, CW) int32 CLOCK bits; 0 = empty way
+    cache_hits: jax.Array  # () int32 GETs served from the cache tier
+    cache_misses: jax.Array  # () int32 GETs that fell through to the walk
+    cache_evictions: jax.Array  # () int32 valid-but-decayed entries replaced
 
     @property
     def num_buckets(self) -> int:
@@ -60,10 +98,30 @@ class KVState(NamedTuple):
         """Live value-pool rows (the resident sentinel row excluded)."""
         return self.pool.shape[0] - 1
 
+    @property
+    def cache_sets(self) -> int:
+        """Live cache set rows (0 = cache tier disabled)."""
+        return self.cache_keys.shape[0] - 1
+
+    @property
+    def cache_ways(self) -> int:
+        return self.cache_keys.shape[1]
+
 
 def make(cfg: KVConfig) -> KVState:
     # the sentinel row of bucket_ptr is 0 (not -1) so every sentinel row in
     # the state is all-zero — the hygiene invariant the property tests pin
+    if cfg.cache_sets:
+        from repro.core import placement
+
+        cache_bytes = placement.kvs_cache_bytes(
+            cfg.cache_sets, cfg.cache_ways, cfg.key_words, cfg.val_words
+        )
+        if cache_bytes > placement.VMEM_BUDGET:
+            raise ValueError(
+                f"hot-set cache ({cache_bytes} B) exceeds the VMEM budget "
+                f"({placement.VMEM_BUDGET} B) — shrink cache_sets/cache_ways"
+            )
     return KVState(
         bucket_keys=jnp.zeros(
             (cfg.num_buckets + 1, cfg.ways, cfg.key_words), I32
@@ -74,6 +132,16 @@ def make(cfg: KVConfig) -> KVState:
         pool=jnp.zeros((cfg.pool_size + 1, cfg.val_words), I32),
         alloc=jnp.zeros((), I32),
         dropped=jnp.zeros((), I32),
+        cache_keys=jnp.zeros(
+            (cfg.cache_sets + 1, cfg.cache_ways, cfg.key_words), I32
+        ),
+        cache_vals=jnp.zeros(
+            (cfg.cache_sets + 1, cfg.cache_ways, cfg.val_words), I32
+        ),
+        cache_meta=jnp.zeros((cfg.cache_sets + 1, cfg.cache_ways), I32),
+        cache_hits=jnp.zeros((), I32),
+        cache_misses=jnp.zeros((), I32),
+        cache_evictions=jnp.zeros((), I32),
     )
 
 
@@ -85,25 +153,81 @@ def hash_keys(keys, num_buckets: int, salt: int = 0):
     return (h % jnp.uint32(num_buckets)).astype(I32)
 
 
-def get(state: KVState, keys, mask=None, *, backend: Optional[str] = "ref"):
-    """Batched GET. keys: (B, KW). Returns (vals (B, VW), found (B,)).
+def get(state: KVState, keys, mask=None, *, backend: Optional[str] = "auto",
+        with_state: bool = False):
+    """Batched GET. keys: (B, KW). Returns (vals (B, VW), found (B,)) —
+    or (state, vals, found) under ``with_state=True``, where the returned
+    state carries the hot-set cache maintenance (reference-bit refresh on
+    hits, admission of found misses, hit/miss counters). Bucket arrays and
+    the pool are never modified by a GET.
 
-    Three gathers: primary bucket, overflow bucket, value pool. ``backend``
-    picks the walk implementation: ``ref`` (default for direct library
-    calls — the ``kernels.ref`` oracle) or ``auto``/``pallas`` for the
-    kernel fast path; results are identical (integer data, single-match
-    buckets)."""
+    With the cache tier enabled the walk is: one ``cache_probe`` VMEM set
+    lookup first, then the bucket walk (primary bucket, overflow bucket,
+    value pool) only for the miss subset — hit rows retarget the resident
+    sentinel bucket, and an all-hit batch skips the bucket walk entirely
+    (``lax.cond``). ``backend`` picks the probe/walk implementation
+    (``auto``/``pallas`` = kernels, the same default ``app_step`` threads
+    from the engine; ``ref`` = the ``kernels.ref`` oracles); results are
+    identical (integer data, single-match buckets/sets)."""
     nb = state.num_buckets
-    h1 = hash_keys(keys, nb)
-    h2 = hash_keys(keys, nb, salt=0x9E3779B9)
-    use_ref, interpret = kops.resolve_backend(backend or "ref")
-    vals, found = kops.hash_get(
-        state.bucket_keys, state.bucket_ptr, state.pool, keys, h1, h2,
+    use_ref, interpret = kops.resolve_backend(backend or "auto")
+    if state.cache_sets == 0:
+        h1 = hash_keys(keys, nb)
+        h2 = hash_keys(keys, nb, salt=0x9E3779B9)
+        vals, found = kops.hash_get(
+            state.bucket_keys, state.bucket_ptr, state.pool, keys, h1, h2,
+            use_ref=use_ref, interpret=interpret,
+        )
+        if mask is not None:
+            found = found & mask
+        return (state, vals, found) if with_state else (vals, found)
+
+    live = jnp.ones(keys.shape[:1], bool) if mask is None else mask
+    cset = hash_keys(keys, state.cache_sets, salt=CACHE_SALT)
+    hit, way, cvals = kops.cache_probe(
+        state.cache_keys, state.cache_vals, state.cache_meta, keys, cset,
         use_ref=use_ref, interpret=interpret,
     )
-    if mask is not None:
-        found = found & mask
-    return vals, found
+
+    # miss-subset fallthrough: hit rows retarget the resident sentinel
+    # bucket (one hot line instead of a scattered walk), and a batch whose
+    # live rows all hit skips the bucket walk entirely — hashing included:
+    # h1/h2 are computed inside the cond branch, so the served-from-cache
+    # fast path pays one set hash + one VMEM probe, nothing else
+    def _walk(_):
+        h1m = jnp.where(hit, nb, hash_keys(keys, nb))
+        h2m = jnp.where(hit, nb, hash_keys(keys, nb, salt=0x9E3779B9))
+        return kops.hash_get(
+            state.bucket_keys, state.bucket_ptr, state.pool, keys, h1m, h2m,
+            use_ref=use_ref, interpret=interpret,
+        )
+
+    def _skip(_):
+        return jnp.zeros_like(cvals), jnp.zeros_like(hit)
+
+    bvals, bfound = jax.lax.cond(jnp.all(hit | ~live), _skip, _walk, None)
+    found_raw = hit | bfound
+    vals = jnp.where(
+        found_raw[:, None], jnp.where(hit[:, None], cvals, bvals), 0
+    )
+    found = found_raw & live
+    if not with_state:
+        return vals, found if mask is not None else found_raw
+
+    # maintenance: refresh reference bits on live hits; admit live misses
+    # the bucket walk found (deduped — a batch can GET one key twice)
+    refresh = live & hit
+    admit = _first_live(keys, live & ~hit & bfound)
+    ck, cv, cm, n_evict = _cache_commit(
+        state, keys, cset, refresh, way, admit, bvals
+    )
+    state = state._replace(
+        cache_keys=ck, cache_vals=cv, cache_meta=cm,
+        cache_hits=state.cache_hits + jnp.sum((live & hit).astype(I32)),
+        cache_misses=state.cache_misses + jnp.sum((live & ~hit).astype(I32)),
+        cache_evictions=state.cache_evictions + n_evict,
+    )
+    return state, vals, found
 
 
 def _rank_within(ids, num: int):
@@ -126,6 +250,80 @@ def _nth_empty_way(bp_rows, rank):
     has = jnp.any(is_nth, axis=-1)
     way = jnp.argmax(is_nth, axis=-1).astype(I32)
     return jnp.where(has, way, bp_rows.shape[-1])
+
+
+def _first_live(keys, rows):
+    """Keep only the first instance of each key among ``rows`` (the cache
+    admission dedupe — same lexsort-run trick as ``plan_put``, so duplicate
+    GETs of one key admit once instead of taking two ways)."""
+    b = keys.shape[0]
+    order = jnp.lexsort(
+        tuple(keys[:, w] for w in reversed(range(keys.shape[1])))
+        + ((~rows).astype(I32),)
+    )
+    sk = keys[order]
+    sr = rows[order]
+    boundary = jnp.any(sk[1:] != sk[:-1], axis=-1) | (sr[1:] != sr[:-1])
+    first_sorted = jnp.concatenate([jnp.ones((1,), bool), boundary])
+    is_first = jnp.zeros((b,), bool).at[order].set(first_sorted)
+    return rows & is_first
+
+
+def _cache_commit(state, keys, cset, refresh, way, admit, admit_vals,
+                  upd_vals=None):
+    """One batch of hot-set cache maintenance — ALU work shared by both
+    backends (like ``plan_put``), so ref == pallas stays bit-for-bit.
+
+    ``refresh`` rows bump (cset, way) to the reference ceiling and — when
+    ``upd_vals`` is given (the PUT write-through) — overwrite the cached
+    value in place. ``admit`` rows must carry unique keys (callers dedupe);
+    each takes the rank-th victim way of its set (meta <= 1 after the CLOCK
+    decay: empty first, then fully-decayed entries), so live scatter
+    targets never collide. No-op rows aim one past the sentinel row and
+    ``mode="drop"`` discards them — the sentinel row itself stays zero.
+
+    Returns (cache_keys, cache_vals, cache_meta, n_evictions)."""
+    cs = state.cache_sets
+    cw = state.cache_ways
+    meta = state.cache_meta
+
+    # CLOCK hand: an admission attempt sweeps its set's counters down one
+    # notch (floor 1 — valid entries decay to evictable, never empty), but
+    # ONLY under pressure, i.e. when the set has no victim way left (every
+    # way live with meta > 1). Like the real CLOCK hand, which stops at the
+    # first ref=0 frame: sets with an empty or fully-decayed way admit into
+    # it without touching the survivors, so hot entries age only while
+    # their set is full of protected entries — not on every tail-key miss
+    # that happens to hash nearby (scan resistance; unconditional decay
+    # measurably drains the zipf mid-hot ranks faster than they re-hit).
+    att = jnp.zeros((cs + 1,), I32).at[
+        jnp.where(admit, cset, cs + 1)
+    ].add(1, mode="drop") > 0
+    pressured = att & ~jnp.any(meta <= 1, axis=1)
+    meta = jnp.where(pressured[:, None] & (meta > 0),
+                     jnp.maximum(meta - 1, 1), meta)
+
+    rset = jnp.where(refresh, cset, cs + 1)
+    rway = jnp.where(refresh, jnp.clip(way, 0, cw - 1), 0)
+    meta = meta.at[rset, rway].set(1 + CACHE_REF_MAX, mode="drop")
+    cache_vals = state.cache_vals
+    if upd_vals is not None:
+        cache_vals = cache_vals.at[rset, rway].set(upd_vals, mode="drop")
+
+    # ranked admission: the r-th admitting key of a set takes the r-th
+    # victim way; sets with more admissions than victims drop the excess
+    r = _rank_within(jnp.where(admit, cset, cs), cs + 1)
+    victim_ok = jnp.where(meta <= 1, -1, 0)  # _nth_empty_way convention
+    vict = _nth_empty_way(victim_ok[cset], r)
+    can = admit & (vict < cw)
+    vclip = jnp.clip(vict, 0, cw - 1)
+    n_evict = jnp.sum((can & (meta[cset, vclip] == 1)).astype(I32))
+    aset = jnp.where(can, cset, cs + 1)
+    away = jnp.where(can, vclip, 0)
+    cache_keys = state.cache_keys.at[aset, away].set(keys, mode="drop")
+    cache_vals = cache_vals.at[aset, away].set(admit_vals, mode="drop")
+    meta = meta.at[aset, away].set(1 + CACHE_ADMIT_REF, mode="drop")
+    return cache_keys, cache_vals, meta, n_evict
 
 
 class PutPlan(NamedTuple):
@@ -152,7 +350,7 @@ class PutPlan(NamedTuple):
 
 
 def plan_put(state: KVState, keys, mask=None, *,
-             backend: Optional[str] = "ref") -> PutPlan:
+             backend: Optional[str] = "auto") -> PutPlan:
     """Plan a batched PUT/UPDATE (dedupe, match, way ranking) without
     touching the store. The commit phase (``ref``/Pallas) applies it.
 
@@ -168,7 +366,7 @@ def plan_put(state: KVState, keys, mask=None, *,
     np_ = state.pool_size
     h1 = hash_keys(keys, nb)
     h2 = hash_keys(keys, nb, salt=0x9E3779B9)
-    use_ref, interpret = kops.resolve_backend(backend or "ref")
+    use_ref, interpret = kops.resolve_backend(backend or "auto")
 
     # dedupe identical keys in the batch: only the first LIVE instance
     # inserts, and only the last LIVE instance writes the value row
@@ -263,7 +461,7 @@ def plan_put(state: KVState, keys, mask=None, *,
 
 
 def put(state: KVState, keys, vals, mask=None, *,
-        backend: Optional[str] = "ref"):
+        backend: Optional[str] = "auto"):
     """Batched PUT/UPDATE. keys: (B,KW), vals: (B,VW). Returns (state, ok).
 
     In-batch duplicate keys resolve last-writer-wins on the value row;
@@ -272,23 +470,56 @@ def put(state: KVState, keys, vals, mask=None, *,
     dropped and counted (the chained-allocation path of the paper, reported
     rather than allocated).
 
-    ``backend`` picks both the plan's existence probe and the commit —
-    ``ref`` (oracle gathers/scatters, the default for direct calls) or
-    ``auto``/``pallas`` (the scalar-prefetch probe + VMEM-staged scatter
-    kernels: all four PUT memory accesses kernelized). Both backends
-    write identical values, so they agree bit-for-bit.
+    With the cache tier enabled the commit is write-through: the final
+    writer of every landed key updates any cached copy in place (so no
+    stale value ever survives an overwrite) and misses are admission
+    attempts gated by the reference bits — a PUT flood cannot wipe a hot
+    GET working set.
+
+    ``backend`` picks the plan's existence probe, the cache probe, and the
+    commit — ``auto``/``pallas`` (the scalar-prefetch probe + VMEM-staged
+    scatter kernels: all four PUT memory accesses kernelized; the default,
+    matching ``app_step``) or ``ref`` (oracle gathers/scatters). Both
+    backends write identical values, so they agree bit-for-bit.
     """
     plan = plan_put(state, keys, mask, backend=backend)
-    use_ref, interpret = kops.resolve_backend(backend or "ref")
+    use_ref, interpret = kops.resolve_backend(backend or "auto")
     bucket_keys, bucket_ptr, pool = kops.hash_put(
         state.bucket_keys, state.bucket_ptr, state.pool, keys, vals,
         plan.tb, plan.tw, plan.bptr_val, plan.wp,
         plan.bucket_order, plan.row_order,
         use_ref=use_ref, interpret=interpret,
     )
-    return (
-        KVState(bucket_keys, bucket_ptr, pool, plan.alloc, plan.dropped),
-        plan.ok,
+    state = state._replace(
+        bucket_keys=bucket_keys, bucket_ptr=bucket_ptr, pool=pool,
+        alloc=plan.alloc, dropped=plan.dropped,
+    )
+    if state.cache_sets > 0:
+        state = _put_write_through(
+            state, keys, vals, plan, use_ref, interpret
+        )
+    return state, plan.ok
+
+
+def _put_write_through(state: KVState, keys, vals, plan: PutPlan, use_ref,
+                       interpret) -> KVState:
+    """Cache side of a committed PUT: the rows that wrote their run's final
+    value (``plan.wp`` targets a live pool row — unique keys by
+    construction) update-on-hit / admit-on-miss, so the cached copy always
+    equals the pool row just written. Dropped, masked, and superseded
+    duplicate rows aim at the drop target and never touch the cache."""
+    rows = plan.wp < state.pool_size
+    cset = hash_keys(keys, state.cache_sets, salt=CACHE_SALT)
+    hit, way, _ = kops.cache_probe(
+        state.cache_keys, state.cache_vals, state.cache_meta, keys, cset,
+        use_ref=use_ref, interpret=interpret,
+    )
+    ck, cv, cm, n_evict = _cache_commit(
+        state, keys, cset, rows & hit, way, rows & ~hit, vals, upd_vals=vals
+    )
+    return state._replace(
+        cache_keys=ck, cache_vals=cv, cache_meta=cm,
+        cache_evictions=state.cache_evictions + n_evict,
     )
 
 
@@ -321,8 +552,14 @@ def app_step(state: KVState, payloads, valid, cfg: KVConfig, *,
     # MALFORMED instead of silently resolving to a zero-status no-op —
     # the row is masked out of both walks, so it cannot scatter garbage
     bad = valid & ~((op == OP_NOP) | (op == OP_GET) | (op == OP_PUT))
-    get_vals, found = get(
-        state, keys, mask=valid & (op == OP_GET), backend=kernel_backend
+    # GETs read the store from before this batch's PUTs; the returned state
+    # carries the cache maintenance (hit refresh, admissions, counters).
+    # Invalid and MALFORMED rows are masked out of both walks, so they
+    # neither scatter garbage nor touch the cache (no admission, no
+    # reference-bit bump).
+    state, get_vals, found = get(
+        state, keys, mask=valid & (op == OP_GET), backend=kernel_backend,
+        with_state=True,
     )
     state, put_ok = put(
         state, keys, vals, mask=valid & ~bad & (op == OP_PUT),

@@ -124,6 +124,16 @@ def block_spaces(block_bytes: dict, bulk_bytes: dict,
     return kernel_operand_spaces(regions, vmem_budget)
 
 
+def kvs_cache_bytes(cache_sets: int, cache_ways: int, key_words: int,
+                    val_words: int) -> int:
+    """Resident footprint of the KVS hot-set cache tier (keys + values +
+    meta, int32, sentinel row included). ``kvstore.make`` checks this
+    against :data:`VMEM_BUDGET` at build time — the cache is the one KVS
+    region that must take the VMEM/DDIO-to-cache treatment whole, or the
+    measured hit path degrades into another bulk walk."""
+    return (cache_sets + 1) * cache_ways * (key_words + val_words + 1) * 4
+
+
 def device_put_tier(x, tier: Tier):
     """Apply the placement to a live array (host tier uses memory kinds)."""
     if tier is Tier.HOST:

@@ -101,6 +101,67 @@ def probe(bucket_keys, bucket_ptr, keys, h1, h2, *, interpret: bool = True):
     return out[:, 0].astype(bool), out[:, 1]
 
 
+def _cache_probe_kernel(cset_ref, keys_ref, ck_ref, cv_ref, cm_ref, out_ref):
+    del cset_ref  # consumed by the index maps
+    q = keys_ref[0]  # (KW,)
+    ck, cv, cm = ck_ref[0], cv_ref[0], cm_ref[0]  # (CW, KW), (CW, VW), (CW,)
+    eq = jnp.all(ck == q[None, :], axis=-1) & (cm > 0)  # (CW,)
+    hit = jnp.any(eq)
+    cw = cm.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, cw), 1)
+    way = jnp.max(jnp.where(eq[None, :], iota, -1))
+    # masked sum over ways: at most one way matches (kvstore admits each
+    # key once), so the sum IS the matched value — and zero on a miss
+    val = jnp.sum(jnp.where(eq[:, None], cv, 0), axis=0)  # (VW,)
+    out_ref[0, 0] = hit.astype(jnp.int32)
+    out_ref[0, 1] = jnp.where(hit, way, 0).astype(jnp.int32)
+    out_ref[0, 2:] = val
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_probe(cache_keys, cache_vals, cache_meta, keys, cset, *,
+                interpret: bool = True):
+    """Hot-set cache lookup: one scalar-prefetch VMEM set probe per request
+    — the access that precedes (and on a hit replaces) the bucket walk.
+
+    cache_keys: (CS + 1, CW, KW); cache_vals: (CS + 1, CW, VW);
+    cache_meta: (CS + 1, CW) — the sentinel-resident ``KVState`` cache
+    layout (cset only ever indexes the CS live rows; meta == 0 marks an
+    empty way so the zero sentinel can never hit); keys: (B, KW);
+    cset: (B,) set ids. Returns (hit (B,) bool, way (B,) int32,
+    vals (B, VW) — way/vals zero where missed)."""
+    b, kw = keys.shape
+    cw, vw = cache_vals.shape[1], cache_vals.shape[2]
+    sp = _spaces(
+        {"query": kw * 4, "cset_keys": cw * kw * 4, "cset_vals": cw * vw * 4,
+         "cset_meta": cw * 4, "out": (2 + vw) * 4},
+        {},
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # cset
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, kw), lambda i, cset: (i, 0),
+                         memory_space=sp["query"]),
+            pl.BlockSpec((1, cw, kw), lambda i, cset: (cset[i], 0, 0),
+                         memory_space=sp["cset_keys"]),
+            pl.BlockSpec((1, cw, vw), lambda i, cset: (cset[i], 0, 0),
+                         memory_space=sp["cset_vals"]),
+            pl.BlockSpec((1, cw), lambda i, cset: (cset[i], 0),
+                         memory_space=sp["cset_meta"]),
+        ],
+        out_specs=pl.BlockSpec((1, 2 + vw), lambda i, cset: (i, 0),
+                               memory_space=sp["out"]),
+    )
+    out = pl.pallas_call(
+        _cache_probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 2 + vw), jnp.int32),
+        interpret=interpret,
+    )(cset, keys, cache_keys, cache_vals, cache_meta)
+    return out[:, 0].astype(bool), out[:, 1], out[:, 2:]
+
+
 def _fetch_kernel(ptr_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...]
 

@@ -62,6 +62,20 @@ def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2, *,
     return _hp.probe(bucket_keys, bucket_ptr, keys, h1, h2, interpret=it)
 
 
+def cache_probe(cache_keys, cache_vals, cache_meta, keys, cset, *,
+                use_ref: bool = False, interpret=None):
+    """Hot-set cache lookup — the VMEM set probe ``kvstore.get`` runs
+    before the bucket walk (and ``put`` before its write-through commit).
+    Returns (hit (B,), way (B,), vals (B, VW)); both backends agree
+    bit-for-bit (integer data, single-match sets)."""
+    if use_ref:
+        return _ref.cache_probe(cache_keys, cache_vals, cache_meta, keys,
+                                cset)
+    it = _auto_interpret() if interpret is None else interpret
+    return _hp.cache_probe(cache_keys, cache_vals, cache_meta, keys, cset,
+                           interpret=it)
+
+
 def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2, *,
              use_ref: bool = False, interpret=None):
     if use_ref:

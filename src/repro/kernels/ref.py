@@ -128,6 +128,33 @@ def hash_probe(bucket_keys, bucket_ptr, keys, h1, h2):
     return found, jnp.where(found, ptr, 0)
 
 
+def cache_probe(cache_keys, cache_vals, cache_meta, keys, cset):
+    """Hot-set cache lookup (the VMEM set probe that precedes the bucket
+    walk). cache_keys: (CS + 1, CW, KW); cache_vals: (CS + 1, CW, VW);
+    cache_meta: (CS + 1, CW) — the sentinel-resident ``KVState`` cache
+    layout (meta == 0 marks an empty way, so the zero sentinel row can
+    never hit); keys: (B, KW); cset: (B,) set ids.
+
+    Returns (hit (B,) bool, way (B,) int32 — 0 where missed, vals (B, VW)
+    — 0 where missed), mirroring ``hash_probe.cache_probe`` exactly: the
+    way is the max matching index and the value is that way's line (at
+    most one way matches a key — ``kvstore`` admits each key once, so the
+    kernel's masked sum over ways selects the same line). The oracle
+    gathers only the matching way — the serve path reads one VW-word line,
+    not the whole set — and masks misses to zero (way 0's line is the
+    gather target but ``hit`` gates it out)."""
+    ck = cache_keys[cset]  # (B, CW, KW)
+    cm = cache_meta[cset]  # (B, CW)
+    eq = jnp.all(ck == keys[:, None, :], axis=-1) & (cm > 0)
+    hit = jnp.any(eq, axis=-1)
+    cw = cm.shape[1]
+    way = jnp.max(jnp.where(eq, jnp.arange(cw, dtype=jnp.int32)[None, :], -1),
+                  axis=-1)
+    way = jnp.where(hit, way, 0)
+    vals = jnp.where(hit[:, None], cache_vals[cset, way], 0)
+    return hit, way, vals
+
+
 def hash_get(bucket_keys, bucket_ptr, pool, keys, h1, h2):
     """Two-bucket probe + value fetch. Returns (vals, found).
 

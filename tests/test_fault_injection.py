@@ -162,6 +162,40 @@ def test_kvstore_bad_opcode_nacks():
     assert bool(found[0]) and int(vals[0, 0]) == 7  # the garbage PUT lost
 
 
+def test_kvstore_malformed_payloads_do_not_touch_cache():
+    """MALFORMED-NACK'd and invalid rows are masked out of the hot-set
+    cache tier too: no admission, no reference-bit bump, no counter
+    movement — a corrupted opcode must not be able to pollute the cache
+    or perturb the control twin's cache state."""
+    cfg = kv.KVConfig(num_buckets=8, ways=2, key_words=1, val_words=1,
+                      pool_size=16, cache_sets=2, cache_ways=2)
+    state = kv.make(cfg)
+    # seed key 3 into store AND cache (the PUT write-through admits it),
+    # so a live GET of it would refresh its reference bits
+    state, _ = kv.put(state, jnp.asarray([[3]], I32),
+                      jnp.asarray([[7]], I32), backend="ref")
+    assert int(np.asarray(state.cache_meta).sum()) > 0  # really cached
+    payloads = jnp.asarray([
+        [99, 3, 9],          # unknown opcode -> MALFORMED NACK
+        [kv.OP_GET, 3, 0],   # valid=False: dead ring slot
+        [kv.OP_PUT, 5, 8],   # valid=False
+    ], I32)
+    valid = jnp.asarray([True, False, False])
+    state2, resp = kv.app_step(state, payloads, valid, cfg,
+                               kernel_backend="ref")
+    assert int(resp[0, 0]) == stc.MALFORMED
+    for name in ("cache_keys", "cache_vals", "cache_meta", "cache_hits",
+                 "cache_misses", "cache_evictions"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state2, name)),
+            np.asarray(getattr(state, name)), err_msg=name,
+        )
+    # and the store itself is untouched (no garbage PUT landed)
+    vals, found = kv.get(state2, jnp.asarray([[3]], I32),
+                         mask=jnp.ones((1,), bool), backend="ref")
+    assert bool(found[0]) and int(vals[0, 0]) == 7
+
+
 def test_tx_app_validation_nacks():
     cfg = tx.TxConfig(num_keys=8, val_words=1, max_ops=2, chain_len=2,
                       log_capacity=8)

@@ -354,6 +354,157 @@ def test_resolve_backend_rejects_unknown():
         ops.resolve_backend("cuda")
 
 
+# -------------------------- hot-set cache dispatch -------------------------
+
+_CACHED_CFG = kv.KVConfig(num_buckets=32, ways=4, key_words=2, val_words=8,
+                          pool_size=1024, cache_sets=8, cache_ways=2)
+
+
+@pytest.mark.parametrize("batch", [1, 7, 33])
+def test_cache_probe_dispatch_matches_oracle(batch):
+    """ops.cache_probe ref vs pallas: empty cache, warm cache, duplicate
+    and missing keys, odd batch sizes — (hit, way, vals) all bit-for-bit."""
+    rng = np.random.default_rng(batch)
+    s = kv.make(_CACHED_CFG)
+    keys = jnp.asarray(rng.integers(1, 40, (48, 2)), I32)
+    vals = jnp.asarray(rng.integers(0, 99, (48, 8)), I32)
+    warm, _ = kv.put(s, keys, vals, backend="ref")
+    for state in (s, warm):  # cold probe must miss everywhere, warm hits
+        qk = np.concatenate(
+            [np.asarray(keys)[:batch], np.asarray(keys)[:batch]]
+        )[:batch]
+        qk[batch // 2:] = rng.integers(100, 200, (batch - batch // 2, 2))
+        qk = jnp.asarray(qk, I32)
+        cset = kv.hash_keys(qk, state.cache_sets, salt=kv.CACHE_SALT)
+        out_ref = ops.cache_probe(state.cache_keys, state.cache_vals,
+                                  state.cache_meta, qk, cset, use_ref=True)
+        out_pal = ops.cache_probe(state.cache_keys, state.cache_vals,
+                                  state.cache_meta, qk, cset)
+        for r, p in zip(out_ref, out_pal):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+    if batch > 1:  # batch=1 queries only missing keys (the [:0] slice)
+        assert bool(jnp.any(out_ref[0]))  # the warm probe really hit
+
+
+def test_cached_get_put_backends_bit_for_bit():
+    """The cached GET/PUT acceptance surface: several rounds of mixed
+    traffic through the cache tier (admissions, refreshes, write-through
+    updates, evictions) — every piece of KVState, cache arrays and
+    counters included, must match exactly across backends."""
+    rng = np.random.default_rng(17)
+    s_ref = s_pal = kv.make(_CACHED_CFG)
+    for step, b in enumerate([1, 7, 16, 33, 8]):
+        keys = jnp.asarray(rng.integers(1, 30, (b, 2)), I32)
+        vals = jnp.asarray(rng.integers(0, 99, (b, 8)), I32)
+        mask = jnp.asarray(rng.random(b) < 0.9)
+        s_ref, ok_r = kv.put(s_ref, keys, vals, mask, backend="ref")
+        s_pal, ok_p = kv.put(s_pal, keys, vals, mask, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ok_r), np.asarray(ok_p))
+        s_ref, v_r, f_r = kv.get(s_ref, keys, mask, backend="ref",
+                                 with_state=True)
+        s_pal, v_p, f_p = kv.get(s_pal, keys, mask, backend="pallas",
+                                 with_state=True)
+        np.testing.assert_array_equal(np.asarray(v_r), np.asarray(v_p))
+        np.testing.assert_array_equal(np.asarray(f_r), np.asarray(f_p))
+        _assert_states_equal(s_ref, s_pal, msg=f"round {step}")
+    assert int(s_ref.cache_hits) > 0 and int(s_ref.cache_misses) > 0
+
+    # eviction epilogue: fresh never-reused keys, so nothing refreshes and
+    # the pressured CLOCK decay has to walk resident entries down to the
+    # floor and evict them — scan resistance makes that take
+    # ~CACHE_REF_MAX pressured rounds, hence the long distinct-key tail
+    put_r = jax.jit(lambda s, k, v: kv.put(s, k, v, backend="ref"))
+    put_p = jax.jit(lambda s, k, v: kv.put(s, k, v, backend="pallas"))
+    get_r = jax.jit(lambda s, k: kv.get(s, k, backend="ref", with_state=True))
+    get_p = jax.jit(lambda s, k: kv.get(s, k, backend="pallas",
+                                        with_state=True))
+    for r2 in range(2 * kv.CACHE_REF_MAX):
+        keys = jnp.asarray(np.stack([100 + 16 * r2 + np.arange(16),
+                                     np.ones(16)], 1), I32)
+        vals = jnp.asarray(rng.integers(0, 99, (16, 8)), I32)
+        s_ref, _ = put_r(s_ref, keys, vals)
+        s_pal, _ = put_p(s_pal, keys, vals)
+        s_ref, _, _ = get_r(s_ref, keys)
+        s_pal, _, _ = get_p(s_pal, keys)
+    _assert_states_equal(s_ref, s_pal, msg="eviction epilogue")
+    assert int(s_ref.cache_evictions) > 0  # the CLOCK decay really evicted
+
+
+def test_get_all_hit_batch_skips_walk_consistently():
+    """A fully cache-resident batch takes the lax.cond fast path (no bucket
+    walk); its outputs must equal the ones a mixed batch would produce for
+    the same keys."""
+    rng = np.random.default_rng(4)
+    s = kv.make(_CACHED_CFG)
+    keys = jnp.asarray(rng.integers(1, 20, (8, 2)), I32)
+    vals = jnp.asarray(rng.integers(0, 99, (8, 8)), I32)
+    s, _ = kv.put(s, keys, vals, backend="ref")
+    s, v1, f1 = kv.get(s, keys, backend="ref", with_state=True)  # admits
+    hits_before = int(s.cache_hits)
+    s, v2, f2 = kv.get(s, keys, backend="ref", with_state=True)  # all hit
+    assert int(s.cache_hits) - hits_before == 8
+    assert bool(jnp.all(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_dispatch_default_backend_is_auto():
+    """Satellite regression: get/put/plan_put must default to the kernel
+    path (``auto``), exactly like ``app_step`` — the engine GET walk used
+    to silently pin the jnp oracle via a ``"ref"`` default."""
+    assert ops.resolve_backend(None) == ops.resolve_backend("auto")
+    cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=1, val_words=2,
+                      pool_size=32)
+    s = kv.make(cfg)
+    keys = jnp.asarray([[3], [4]], I32)
+    vals = jnp.asarray([[1, 1], [2, 2]], I32)
+    jx_get = str(jax.make_jaxpr(lambda st, k: kv.get(st, k))(s, keys))
+    jx_put = str(jax.make_jaxpr(lambda st, k, v: kv.put(st, k, v))(
+        s, keys, vals))
+    assert "pallas_call" in jx_get, "get default no longer kernel-dispatched"
+    assert "pallas_call" in jx_put, "put default no longer kernel-dispatched"
+    # and None (an unset engine knob) must mean auto too, not ref
+    jx_none = str(jax.make_jaxpr(
+        lambda st, k: kv.get(st, k, backend=None))(s, keys))
+    assert "pallas_call" in jx_none
+
+
+def test_engine_kvs_cached_backends_bit_for_bit_with_stats():
+    """Engine traffic over a cache-enabled KVS: ref vs pallas bit-for-bit
+    on the whole EngineState, and the stats dict surfaces the per-step
+    cache hit/miss/eviction deltas."""
+    kcfg = kv.KVConfig(num_buckets=32, ways=2, key_words=2, val_words=4,
+                       pool_size=64, cache_sets=4, cache_ways=2)
+    w = kv.request_words(kcfg)
+
+    def run(backend):
+        ecfg = eng.EngineConfig(num_queues=4, capacity=16, req_words=w,
+                                resp_words=w, budget=8,
+                                kernel_backend=backend)
+        state = eng.make(ecfg, kv.make(kcfg))
+        app_fn = eng.bind_app(kv.app_step, kcfg, ecfg)
+        step = jax.jit(lambda s: eng.engine_step(s, app_fn, ecfg))
+        r = np.random.default_rng(7)  # identical traffic per backend
+        stats = None
+        for _ in range(6):
+            n = int(r.integers(1, 5))
+            qids = r.choice(4, size=n, replace=False).astype(np.int32)
+            pls = np.zeros((n, w), np.int32)
+            pls[:, 0] = r.integers(1, 3, n)
+            # few distinct keys so GETs re-read what PUTs admitted
+            pls[:, 1:3] = r.integers(1, 3, (n, 2))
+            pls[:, 3:7] = r.integers(0, 99, (n, 4))
+            state = eng.inject(state, jnp.asarray(qids), jnp.asarray(pls))
+            state, stats = step(state)
+        return state, stats
+
+    s_ref, _ = run("ref")
+    s_pal, stats = run("pallas")
+    _assert_states_equal(s_ref, s_pal)
+    for key in ("cache_hits", "cache_misses", "cache_evictions"):
+        assert key in stats
+    assert int(s_pal.app.cache_hits) > 0  # traffic re-read hot keys
+
+
 # --------------------------- engine bit-for-bit ----------------------------
 
 def test_engine_kvs_pallas_matches_ref_bit_for_bit():

@@ -87,6 +87,90 @@ def test_property_differential_vs_dict(seed):
                 assert not gf[i], (kq, seed)
 
 
+# ------------------------- hot-set cache coherence -------------------------
+
+_CACHED_CFG = kv.KVConfig(num_buckets=16, ways=2, key_words=2, val_words=2,
+                          pool_size=64, cache_sets=4, cache_ways=2)
+
+
+def _check_cache_invariants(s):
+    """The cache-tier safety net: sentinel row zero, meta within the CLOCK
+    range, each key cached in at most one way (occupancy never exceeds
+    capacity), and every cached value equal to the bucket-walk read of its
+    key (no stale value survives an overwrite)."""
+    from repro.kernels import ref as kref
+
+    ck = np.asarray(s.cache_keys)
+    cv = np.asarray(s.cache_vals)
+    cm = np.asarray(s.cache_meta)
+    assert not ck[-1].any() and not cv[-1].any() and not cm[-1].any()
+    assert (cm >= 0).all() and (cm <= 1 + kv.CACHE_REF_MAX).all()
+    valid = cm[:-1] > 0
+    keys = ck[:-1][valid]
+    vals = cv[:-1][valid]
+    if not len(keys):
+        return
+    assert len({tuple(k) for k in keys}) == len(keys)  # one way per key
+    kj = jnp.asarray(keys, jnp.int32)
+    h1 = kv.hash_keys(kj, s.num_buckets)
+    h2 = kv.hash_keys(kj, s.num_buckets, salt=0x9E3779B9)
+    bv, bf = kref.hash_get(s.bucket_keys, s.bucket_ptr, s.pool, kj, h1, h2)
+    assert np.asarray(bf).all()  # a cached key always exists in the store
+    np.testing.assert_array_equal(vals, np.asarray(bv))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_cache_coherence(seed):
+    """Any interleaving of (masked) PUT and GET batches over a cached
+    store: a cached read equals the bucket-walk read, overwrites never
+    leave a stale cached value, the sentinel row stays zero, and
+    occupancy never exceeds capacity."""
+    from repro.kernels import ref as kref
+
+    s = kv.make(_CACHED_CFG)
+    rng = np.random.default_rng(seed)
+    b = 8
+    for _ in range(5):
+        keys = jnp.asarray(rng.integers(1, 12, (b, 2)), jnp.int32)
+        vals = jnp.asarray(rng.integers(0, 99, (b, 2)), jnp.int32)
+        mask = jnp.asarray(rng.random(b) < 0.8)
+        s, _ = kv.put(s, keys, vals, mask, backend="ref")
+        _check_cache_invariants(s)
+        qk = jnp.asarray(rng.integers(1, 14, (b, 2)), jnp.int32)
+        qmask = jnp.asarray(rng.random(b) < 0.8)
+        s, gv, gf = kv.get(s, qk, qmask, backend="ref", with_state=True)
+        _check_cache_invariants(s)
+        h1 = kv.hash_keys(qk, s.num_buckets)
+        h2 = kv.hash_keys(qk, s.num_buckets, salt=0x9E3779B9)
+        bv, bf = kref.hash_get(s.bucket_keys, s.bucket_ptr, s.pool, qk,
+                               h1, h2)
+        np.testing.assert_array_equal(
+            np.asarray(gf), np.asarray(bf & qmask)
+        )
+        live_found = np.asarray(gf)
+        np.testing.assert_array_equal(
+            np.asarray(gv)[live_found], np.asarray(bv)[live_found]
+        )
+
+
+def test_cache_overwrite_leaves_no_stale_value():
+    """Directed version of the write-through guarantee: admit a key into
+    the cache via a GET, overwrite it with a PUT, and the very next cached
+    GET must serve the new value (and still count as a hit)."""
+    s = kv.make(_CACHED_CFG)
+    k = jnp.asarray([[4, 2]], jnp.int32)
+    s, _ = kv.put(s, k, jnp.asarray([[7, 7]], jnp.int32), backend="ref")
+    s, v, f = kv.get(s, k, backend="ref", with_state=True)  # cached now
+    assert bool(f[0]) and list(np.asarray(v)[0]) == [7, 7]
+    s, _ = kv.put(s, k, jnp.asarray([[9, 9]], jnp.int32), backend="ref")
+    hits0 = int(s.cache_hits)
+    s, v, f = kv.get(s, k, backend="ref", with_state=True)
+    assert bool(f[0]) and list(np.asarray(v)[0]) == [9, 9]
+    assert int(s.cache_hits) == hits0 + 1  # served from the cache tier
+    _check_cache_invariants(s)
+
+
 def test_engine_app_request_format():
     cfg = kv.KVConfig(num_buckets=16, ways=2, key_words=2, val_words=4, pool_size=64)
     s = kv.make(cfg)

@@ -23,8 +23,9 @@ I32 = jnp.int32
 
 # deliberately odd, collision-free sizes: no model/batch dim equals any of
 # the state dims below, so a shape test cannot pass by coincidence
+# (cache_sets=11 makes the hot-set cache arrays part of the pinned layout)
 KV_CFG = kv.KVConfig(num_buckets=37, ways=2, key_words=2, val_words=4,
-                     pool_size=53)
+                     pool_size=53, cache_sets=11, cache_ways=2)
 TX_CFG = tx.TxConfig(num_keys=29, val_words=2, max_ops=3, chain_len=2,
                      log_capacity=19)
 
@@ -59,7 +60,8 @@ def _assert_no_state_sized_pad_copies(jaxpr, state_dims):
 def _kv_state_dims(cfg):
     # live size, resident (+1), and would-be re-padded (+2) leading dims
     return {cfg.num_buckets, cfg.num_buckets + 1, cfg.num_buckets + 2,
-            cfg.pool_size, cfg.pool_size + 1, cfg.pool_size + 2}
+            cfg.pool_size, cfg.pool_size + 1, cfg.pool_size + 2,
+            cfg.cache_sets, cfg.cache_sets + 1, cfg.cache_sets + 2}
 
 
 def _tx_state_dims(cfg):
@@ -148,20 +150,24 @@ def test_property_kvs_sentinel_rows_stay_zero(seed):
     drops, pool exhaustion — must leave the resident sentinel rows of all
     three KVS state arrays zero, on both backends."""
     cfg = kv.KVConfig(num_buckets=8, ways=2, key_words=2, val_words=4,
-                      pool_size=24)  # tiny: forces spills + drops
+                      pool_size=24,  # tiny: forces spills + drops
+                      cache_sets=3, cache_ways=2)  # tiny cache: evictions
     rng = np.random.default_rng(seed)
     for backend in ("ref", "pallas"):
         s = kv.make(cfg)
         put = jax.jit(lambda st, k, v, m: kv.put(st, k, v, m, backend=backend))
-        get = jax.jit(lambda st, k: kv.get(st, k, backend=backend))
+        get = jax.jit(lambda st, k: kv.get(st, k, backend=backend,
+                                           with_state=True))
         for _ in range(4):
             keys = jnp.asarray(rng.integers(1, 30, (16, 2)), I32)
             vals = jnp.asarray(rng.integers(1, 99, (16, 4)), I32)
             mask = jnp.asarray(rng.random(16) < 0.8)
             s, _ = put(s, keys, vals, mask)
-            get(s, keys)  # GETs must not perturb state either
+            # GETs only maintain the cache tier — buckets/pool untouched
+            s, _, _ = get(s, keys)
         assert int(s.alloc) > 0  # traffic actually landed
-        for arr in (s.bucket_keys, s.bucket_ptr, s.pool):
+        for arr in (s.bucket_keys, s.bucket_ptr, s.pool,
+                    s.cache_keys, s.cache_vals, s.cache_meta):
             np.testing.assert_array_equal(
                 np.asarray(arr[-1]), 0,
                 err_msg=f"{backend}: sentinel row dirtied",
