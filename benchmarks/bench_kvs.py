@@ -359,7 +359,59 @@ def run():
         f"cpu={kopw['cpu']:.0f};orca={kopw['orca']:.0f};"
         f"ratio={kopw['orca'] / kopw['cpu']:.2f}x(paper~3x_at_equal_tput)",
     ))
+    rows.extend(_durability_rows())
     return rows
+
+
+def _durability_rows():
+    """Durability-overhead sweep for the KVS engine (fault.recovery): the
+    KVS has no redo log, so its WAL-delta is the materialized dirty-row
+    diff against a shadow copy (``kvstore.DURABLE_ROW_ARRAYS``) — the arm
+    where the adaptive full-vs-delta split actually reacts to the measured
+    dirty fraction. Same shape as bench_tx's sweep: delivery-gated p99
+    sojourn and flush bytes/step per policy, with the WAL-delta-cheaper-
+    than-every-step-full inequality asserted at equal cadence."""
+    import shutil
+    import tempfile
+
+    from benchmarks.common import SMOKE
+    from repro.fault import recovery as frec
+    from repro.fault import soak
+
+    steps = 40 if SMOKE else 160
+    root = tempfile.mkdtemp(prefix="orca-bench-dur-kvs-")
+    arms = (
+        ("off", None),
+        ("full_every1", dict(every=1, mode="full")),
+        ("full_every4", dict(every=4, mode="full")),
+        ("wal_adaptive", dict(every=1, snapshot_every=16, mode="adaptive")),
+    )
+    out, reports = [], {}
+    try:
+        for name, kw in arms:
+            dcfg = (frec.DurabilityConfig(f"{root}/{name}", **kw)
+                    if kw is not None else None)
+            rep = soak.run_durability(seed=0, steps=steps, app="kvs",
+                                      durability=dcfg)
+            reports[name] = rep
+            out.append(row(
+                f"kvs_durability_{name}", rep["p99_sojourn"],
+                f"unit=engine_steps;p50={rep['p50_sojourn']:.1f}"
+                f";responses={rep['responses']}"
+                f";throughput_per_step={rep['throughput_per_step']:.2f}"
+                f";flush_bytes_per_step={rep['flush_bytes_per_step']:.0f}"
+                f";flush_full={rep['flush_full']}"
+                f";flush_delta={rep['flush_delta']}",
+            ))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    assert (reports["wal_adaptive"]["flush_bytes"]
+            < reports["full_every1"]["flush_bytes"]), (
+        "WAL-delta must ship fewer bytes than every-step full snapshots",
+        reports["wal_adaptive"]["flush_bytes"],
+        reports["full_every1"]["flush_bytes"],
+    )
+    return out
 
 
 if __name__ == "__main__":

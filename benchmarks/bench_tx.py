@@ -223,6 +223,7 @@ def run():
 
     rows.extend(_degraded_chain_rows())
     rows.extend(_overload_rows())
+    rows.extend(_durability_rows())
     return rows
 
 
@@ -298,6 +299,60 @@ def _overload_rows():
             f";backlog={off['final_backlog']};deadline={off['deadline']}",
         ),
     ]
+
+
+def _durability_rows():
+    """Durability-overhead sweep (fault.recovery): the closed-loop TX
+    engine with responses released only once a committed flush covers
+    their production (group commit), vs flush policy — off, full snapshot
+    every step / every 4, and the WAL-delta adaptive mode at the same
+    every-step cadence as the full baseline. p99/p50 sojourn therefore
+    *includes* the commit-release lag each policy buys, and
+    flush_bytes_per_step is what it ships to the host NVM tier. The
+    acceptance inequality — the WAL-delta ships fewer bytes than
+    every-step full snapshots at equal cadence — is asserted, not just
+    reported."""
+    import shutil
+    import tempfile
+
+    from benchmarks.common import SMOKE
+    from repro.fault import recovery as frec
+    from repro.fault import soak
+
+    steps = 40 if SMOKE else 160
+    root = tempfile.mkdtemp(prefix="orca-bench-dur-tx-")
+    arms = (
+        ("off", None),
+        ("full_every1", dict(every=1, mode="full")),
+        ("full_every4", dict(every=4, mode="full")),
+        ("wal_adaptive", dict(every=1, snapshot_every=16, mode="adaptive")),
+    )
+    out, reports = [], {}
+    try:
+        for name, kw in arms:
+            dcfg = (frec.DurabilityConfig(f"{root}/{name}", **kw)
+                    if kw is not None else None)
+            rep = soak.run_durability(seed=0, steps=steps, app="tx",
+                                      durability=dcfg)
+            reports[name] = rep
+            out.append(row(
+                f"tx_durability_{name}", rep["p99_sojourn"],
+                f"unit=engine_steps;p50={rep['p50_sojourn']:.1f}"
+                f";responses={rep['responses']}"
+                f";throughput_per_step={rep['throughput_per_step']:.2f}"
+                f";flush_bytes_per_step={rep['flush_bytes_per_step']:.0f}"
+                f";flush_full={rep['flush_full']}"
+                f";flush_delta={rep['flush_delta']}",
+            ))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    assert (reports["wal_adaptive"]["flush_bytes"]
+            < reports["full_every1"]["flush_bytes"]), (
+        "WAL-delta must ship fewer bytes than every-step full snapshots",
+        reports["wal_adaptive"]["flush_bytes"],
+        reports["full_every1"]["flush_bytes"],
+    )
+    return out
 
 
 if __name__ == "__main__":

@@ -4,8 +4,17 @@ fault schedule against the TX engine and assert the acceptance set —
 every fault class fired at least once, every landed entry resolved to
 exactly one response, every logical request recovered, and the
 surviving + revived replicas ended bit-for-bit equal to a never-failed
-control run (``repro.fault.soak.run_soak``). Exits non-zero on any
-violation; prints the counters as JSON on success."""
+control run (``repro.fault.soak.run_soak``).
+
+``--crash`` runs the crash-restart variant instead
+(``repro.fault.soak.run_crash_soak``): durability flushes on a cadence,
+SIGKILL-equivalent engine death mid-run leaving a torn ``.tmp`` flush,
+restart via ``fault.recovery.recover`` + WAL replay, then resume — with
+the recovered state asserted bit-for-bit against a never-crashed control
+twin and every pre-crash landing conserved across the boundary.
+
+Exits non-zero on any violation; prints the counters as JSON on success
+(``--out`` additionally persists the JSON as a CI artifact)."""
 import argparse
 import json
 import sys
@@ -18,10 +27,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--steps", type=int, default=200,
                     help="warm-phase engine steps (drain adds more)")
+    ap.add_argument("--crash", action="store_true",
+                    help="crash-restart soak (durability + recovery) "
+                         "instead of the fault-schedule soak")
+    ap.add_argument("--out", type=str, default=None,
+                    help="also write the report JSON to this path")
     args = ap.parse_args(argv)
-    report = soak.run_soak(seed=args.seed, steps=args.steps)
+    if args.crash:
+        report = soak.run_crash_soak(seed=args.seed, steps=args.steps)
+    else:
+        report = soak.run_soak(seed=args.seed, steps=args.steps)
     out = {
         "seed": args.seed,
+        "mode": "crash" if args.crash else "soak",
         "steps": report["engine"]["steps"],
         "requests": report["requests"],
         "responses": report["responses"],
@@ -32,7 +50,18 @@ def main(argv=None):
         "engine": report["engine"],
         "monitor_events": report["monitor_events"],
     }
-    print(json.dumps(out, indent=2))
+    if args.crash:
+        crash = dict(report["crash"])
+        crash.pop("recovered_state", None)
+        out["crash"] = crash
+        out["covered"] = report["covered"]
+        out["flush_bytes"] = report["flush_bytes"]
+        out["flushes"] = len(report["flush_records"])
+    text = json.dumps(out, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
     return 0
 
 

@@ -23,6 +23,14 @@ if [[ "$SMOKE" == 1 ]]; then
   # never-failed control run (exits non-zero on any violation)
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fault_soak.py --seed 7 --steps 200 > /dev/null
   echo "fault soak OK"
+  echo "--- crash-recovery soak (snapshot + WAL replay across engine death) ---"
+  # run_crash_soak kills the engine mid-run (leaving a torn .tmp flush),
+  # recovers from the latest committed snapshot + WAL-delta replay, and
+  # asserts the recovered state bit-for-bit against a never-crashed
+  # control twin plus conservation of every pre-crash landing; the JSON
+  # artifact rides the CI upload next to the bench rows
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fault_soak.py --crash --seed 11 --steps 80 --out SOAK_crash.json > /dev/null
+  echo "crash-recovery soak OK"
   echo "--- smoke benchmarks (a few iterations per arm) ---"
   # bench_kvs's kvs_get_zipf0.9_cached arm asserts measured hit_rate > 0
   # under --smoke, so a dead cache tier (probe or CLOCK maintenance) fails

@@ -1,2 +1,12 @@
-from repro.checkpoint.checkpointer import AsyncCheckpointer, latest_step, restore, save
+from repro.checkpoint.checkpointer import (
+    AsyncCheckpointer,
+    clean_stale,
+    latest_step,
+    list_deltas,
+    load_delta,
+    rebuild,
+    restore,
+    save,
+    save_delta,
+)
 from repro.checkpoint.elastic import resume, shardings_for

@@ -8,14 +8,27 @@ Layout::
 
 Commit protocol: write into ``step_<N>.tmp`` then ``os.rename`` — a crashed
 save never shadows the last good checkpoint (restore picks the largest
-committed step). ``async_save`` runs the serialization on a background
-thread; the train driver only blocks on the *previous* save (one outstanding
-checkpoint, like Orbax).
+committed step; ``latest_step(clean_stale=True)`` additionally garbage-
+collects torn ``.tmp`` leftovers). ``async_save`` runs the serialization on
+a background thread; the train driver only blocks on the *previous* save
+(one outstanding checkpoint, like Orbax) — ``AsyncCheckpointer.submit``
+exposes that one-outstanding worker thread for arbitrary flush work, which
+is how the engine durability tier (``fault.recovery.DurabilityManager``)
+overlaps its snapshot/WAL flushes with the jitted engine step.
+
+Between snapshots the durability tier persists *delta* records —
+``wal_<N>.npz`` files written with the same tmp→rename protocol at file
+granularity (``save_delta`` / ``list_deltas`` / ``load_delta``). A delta is
+a flat dict of numpy arrays plus an int metadata record; chaining/validity
+is the caller's contract (``fault.recovery`` stores ``base_step`` /
+``prev_covered`` in the metadata and validates the chain on recover).
 
 Restore reads every host file it can see (single-host CPU tests see all of
 them) and ``jax.device_put``s each tree leaf with the *target* sharding, so
 the mesh at restore time may differ from the mesh at save time — that is the
-elastic-resize path (fault tolerance §6 of DESIGN.md).
+elastic-resize path (fault tolerance §6 of DESIGN.md). Leaves of any dtype
+roundtrip (bf16 stored as a uint16 view; the engine states are int32+bool
+trees — see ``fault.recovery.recover`` for the engine restart path).
 """
 from __future__ import annotations
 
@@ -75,25 +88,39 @@ def save(directory: str, step: int, tree, host_id: int = 0, num_hosts: int = 1):
 
 
 class AsyncCheckpointer:
-    """One outstanding async save; ``wait()`` before the next or at exit."""
+    """One outstanding async save; ``wait()`` before the next or at exit.
+
+    ``submit`` is the general form: it runs any host-side flush callable on
+    the single background worker thread (the durability tier submits both
+    full snapshots and WAL-delta writes through it, so at most one flush is
+    ever in flight and flushes overlap the device step). ``save`` is the
+    train-path convenience wrapper that device_gets the tree synchronously
+    (so the donated device buffers may be reused immediately) and serializes
+    on the worker.
+    """
 
     def __init__(self, directory: str):
         self.directory = directory
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
 
-    def save(self, step: int, tree):
+    def submit(self, work) -> None:
+        """Run ``work()`` on the background thread after joining the
+        previous one; its exception (if any) surfaces on the next wait()."""
         self.wait()
-        host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
 
-        def work():
+        def runner():
             try:
-                save(self.directory, step, host_tree)
+                work()
             except BaseException as e:  # surfaced on next wait()
                 self._err = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread = threading.Thread(target=runner, daemon=True)
         self._thread.start()
+
+    def save(self, step: int, tree):
+        host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        self.submit(lambda: save(self.directory, step, host_tree))
 
     def wait(self):
         if self._thread is not None:
@@ -104,15 +131,85 @@ class AsyncCheckpointer:
             raise err
 
 
-def latest_step(directory: str) -> Optional[int]:
+def clean_stale(directory: str) -> list[str]:
+    """Remove torn flush leftovers: ``step_*.tmp`` dirs (snapshot was being
+    written when the process died) and ``wal_*.npz.tmp`` files (torn delta).
+    Returns the names removed. Safe to call any time — committed state is
+    never named ``*.tmp``."""
+    import shutil
+
+    removed = []
+    if not os.path.isdir(directory):
+        return removed
+    for name in os.listdir(directory):
+        path = os.path.join(directory, name)
+        if name.startswith("step_") and name.endswith(".tmp") and os.path.isdir(path):
+            shutil.rmtree(path)
+            removed.append(name)
+        elif name.startswith("wal_") and name.endswith(".npz.tmp") and os.path.isfile(path):
+            os.remove(path)
+            removed.append(name)
+    return removed
+
+
+def latest_step(directory: str, clean_stale_files: bool = False) -> Optional[int]:
+    """Largest committed snapshot step, or None. A leftover ``step_N.tmp``
+    from a crashed save is never a candidate (no rename happened); with
+    ``clean_stale_files=True`` such leftovers (and torn ``wal_*.npz.tmp``)
+    are also deleted, which is what the restart path wants."""
     if not os.path.isdir(directory):
         return None
+    if clean_stale_files:
+        clean_stale(directory)
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, name, "manifest.json")):
                 steps.append(int(name.split("_")[1]))
     return max(steps) if steps else None
+
+
+def save_delta(directory: str, step: int, arrays: dict[str, np.ndarray], meta: dict[str, int]) -> str:
+    """Atomically commit one WAL delta record covering engine step ``step``.
+
+    ``arrays`` is a flat dict of numpy arrays; ``meta`` a flat dict of ints
+    (stored as a structured side array). Written as ``wal_<step>.npz.tmp``
+    then renamed — a crash mid-write leaves only a ``.tmp`` that
+    ``clean_stale`` removes and ``list_deltas`` never returns."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"wal_{step}.npz")
+    tmp = final + ".tmp"
+    meta_keys = sorted(meta)
+    payload = dict(arrays)
+    payload["__meta_keys__"] = np.array(meta_keys, dtype=np.str_)
+    payload["__meta_vals__"] = np.array([int(meta[k]) for k in meta_keys], dtype=np.int64)
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    return final
+
+
+def list_deltas(directory: str) -> list[int]:
+    """Sorted steps of committed WAL delta records (``.tmp`` never listed)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("wal_") and name.endswith(".npz"):
+            steps.append(int(name[len("wal_"):-len(".npz")]))
+    return sorted(steps)
+
+
+def load_delta(directory: str, step: int) -> tuple[dict[str, np.ndarray], dict[str, int]]:
+    """Load one committed delta record → (arrays, meta)."""
+    with np.load(os.path.join(directory, f"wal_{step}.npz")) as z:
+        meta_keys = [str(k) for k in z["__meta_keys__"]]
+        meta_vals = z["__meta_vals__"]
+        meta = {k: int(v) for k, v in zip(meta_keys, meta_vals)}
+        arrays = {k: z[k] for k in z.files if not k.startswith("__meta_")}
+    return arrays, meta
 
 
 def restore(directory: str, step: int, like, shardings=None):
@@ -142,11 +239,15 @@ def restore(directory: str, step: int, like, shardings=None):
         if tuple(arr.shape) != tuple(proto.shape):
             raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {proto.shape}")
         out[k] = jax.device_put(arr, flat_sh[k]) if flat_sh[k] is not None else jnp.asarray(arr)
-    # rebuild the tree
+    return rebuild(like, out), manifest["step"]
+
+
+def rebuild(like, flat: dict[str, Any]):
+    """Unflatten a ``_flatten``-keyed dict back into ``like``'s structure."""
     leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     ordered = []
     for path, _ in leaves_with_path:
         key = "/".join(str(getattr(kk, "key", getattr(kk, "idx", kk))) for kk in path)
-        ordered.append(out[key])
-    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["step"]
+        ordered.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered)

@@ -102,6 +102,32 @@ def bind_app(app_step: Callable, app_cfg, cfg: EngineConfig, **kw) -> Callable:
 
 
 class EngineState(NamedTuple):
+    """One engine's complete jit-resident state.
+
+    Durability classification (``fault.recovery`` — every field must be
+    either durable or derivable; the DRAM+NVM host tier models ORCA's
+    adaptive device-to-host transfer):
+
+    * **durable** — ``req``/``resp`` ring bytes and their monotonic
+      tail/head counters (in-flight requests and not-yet-drained
+      responses ARE application state: losing them loses answers),
+      ``sched`` round-robin cursor, the scalar counters
+      (``steps``/``served``/``timed_out``/``shed``), and ``app``:
+      all of a ``kvstore.KVState`` (no WAL — see its classification),
+      a TX chain's log ring + counters (its store is *derivable* by
+      ``transaction.replay_records``).
+    * **derivable** — ``cpoll`` completion words: recomputed from the
+      restored ring counters by the first post-recovery step's cpoll
+      scan, exactly as a doorbell re-ring would. The LM engine's
+      ``host_pages`` cold tier lives *outside* this persistence domain
+      (host numpy arrays; ``launch/serve.py`` refuses ``--snapshot-dir``
+      with ``host_pages > 0``).
+
+    Because every counter is monotonic (``ringbuf`` convention), a
+    restored snapshot is *consistent by construction* at its step
+    boundary — recovery reconciles the client/wire against the restored
+    ``req.tail``/``resp.head`` counts (``fault.soak``)."""
+
     req: rb.RingState
     resp: rb.RingState
     cpoll: cp.CpollState

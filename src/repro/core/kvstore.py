@@ -72,7 +72,18 @@ class KVState(NamedTuple):
     permanent all-zero pad row past its live extent (the shared convention
     of ``serving.kv_cache``'s zero sentinel page) — dropped/no-op writes
     land there as zeros instead of the kernel wrappers concatenating and
-    stripping an O(state) padded copy around every commit."""
+    stripping an O(state) padded copy around every commit.
+
+    Durability classification (``fault.recovery``): the KVS keeps **no
+    write-ahead log** — *every* field here is durable truth (buckets,
+    bucket→pool pointers, the value pool, the bump allocator, the cache
+    tier and all counters); nothing is derivable from anything else after
+    a crash. The WAL-delta flush mode therefore persists a *materialized
+    dirty-row delta*: a host-side row diff of :data:`DURABLE_ROW_ARRAYS`
+    against the shadow copy of the last flush (the measured dirty bytes
+    that also drive the adaptive full-vs-delta policy), plus the scalar
+    counters verbatim. Sentinel rows are all-zero in every reachable state
+    (the hygiene property tests) so they never appear dirty."""
 
     bucket_keys: jax.Array  # (NB + 1, W, KW) int32; row NB = zero sentinel
     bucket_ptr: jax.Array  # (NB + 1, W) int32 value-pool row, -1 = empty
@@ -106,6 +117,15 @@ class KVState(NamedTuple):
     @property
     def cache_ways(self) -> int:
         return self.cache_keys.shape[1]
+
+
+# KVState fields that are large row-indexed arrays (axis 0 = row), diffed
+# row-wise by the durability tier's WAL-delta flush; every other field is a
+# scalar counter persisted verbatim in the delta record's control section.
+DURABLE_ROW_ARRAYS = (
+    "bucket_keys", "bucket_ptr", "pool", "cache_keys", "cache_vals",
+    "cache_meta",
+)
 
 
 def make(cfg: KVConfig) -> KVState:

@@ -38,6 +38,17 @@ O(state).
 
 The store is offset-addressed like HyperLoop's NVM space; the redo-log ring
 is the persistence domain and is what the checkpointer (fault layer) saves.
+
+Durability classification (``fault.recovery``): the **redo-log ring +
+``log_tail`` are the durable truth** — every store write is logged first
+(write-ahead order inside ``ops.tx_commit``), so the store is *derivable*
+by :func:`replay_records` from any consistent (store, log_tail) base plus
+the log records past it. ``committed`` advances in lockstep with
+``log_tail`` and ``live`` is host-side liveness policy re-imposed at
+restart. The WAL-delta flush mode persists exactly the log records past a
+per-replica high-water mark; ``fault.chain.resync_replica`` (replica →
+replica) and ``fault.recovery.recover`` (disk → engine) are the same replay
+loop, both built on :func:`replay_records`.
 """
 from __future__ import annotations
 
@@ -243,6 +254,29 @@ def replica_commit(state: ReplicaState, plan: TxCommitPlan, *,
         store, log, state.log_tail + bump, state.committed + bump,
         state.live,
     )
+
+
+def replay_records(state: ReplicaState, records, cfg: TxConfig, *,
+                   use_ref: bool = True) -> ReplicaState:
+    """Replay raw redo-log records (in log order) into one replica through
+    the normal plan/commit path — the generic WAL-replay loop shared by
+    replica→replica resync (``fault.chain.resync_replica``) and
+    disk→engine crash recovery (``fault.recovery.recover``).
+
+    ``proceed`` is forced True per record: the log only ever holds
+    transactions that proceeded, so re-planning re-derives the very store
+    scatter, log-ring slot, and counter bumps the original commit executed
+    — one record at a time, hence bit-for-bit reproduction of the source's
+    store and log ring. The caller guarantees the records are consecutive
+    from ``state.log_tail`` (a gap wider than the ring means the replay
+    window is gone — restore by full copy instead)."""
+    for record in records:
+        plan = plan_commit(
+            jnp.asarray(record, I32)[None, :], cfg,
+            proceed=jnp.ones((1,), bool),
+        )
+        state = replica_commit(state, plan, use_ref=use_ref)
+    return state
 
 
 # ---------------------------------------------------------------------------

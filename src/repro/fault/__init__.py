@@ -15,15 +15,27 @@ four layers, one module each:
 * ``chain`` — chain-replica failover: :class:`ChainMonitor` (liveness
   authority over ``core.transaction``'s ``live`` mask) and
   :func:`resync_replica` (log-replay resync, bit-for-bit).
+* ``recovery`` — crash-consistent durability: :class:`DurabilityManager`
+  (periodic full-snapshot / WAL-delta flushes of the engine state to the
+  host NVM tier through the atomic checkpoint protocol, full-vs-delta
+  decided per flush from measured dirty bytes) and :func:`recover` (the
+  restart path: latest committed snapshot + redo-log replay, bit-for-bit).
 * ``soak`` — the acceptance harness: :func:`~repro.fault.soak.run_soak`
   (conservation + control-twin equality under a seeded fault schedule;
-  ``scripts/fault_soak.py`` is the tier-1 smoke entry) and
-  :func:`~repro.fault.soak.run_overload` (deadline shedding bounds p99).
+  ``scripts/fault_soak.py`` is the tier-1 smoke entry),
+  :func:`~repro.fault.soak.run_overload` (deadline shedding bounds p99),
+  :func:`~repro.fault.soak.run_crash_soak` (SIGKILL-equivalent engine
+  death incl. a torn flush, restart + recover + resume, conservation and
+  control-twin equality across the crash boundary), and
+  :func:`~repro.fault.soak.run_durability` (the bench overhead arm).
 """
 from repro.fault.chain import ChainMonitor, resync_replica
 from repro.fault.inject import (
     FAULT_CLASSES, FaultConfig, FaultInjector, NackError,
     request_with_retries,
+)
+from repro.fault.recovery import (
+    DurabilityConfig, DurabilityManager, derive_tx_cfg, recover,
 )
 from repro.fault.watchdog import (
     Heartbeat, StragglerDetector, is_transient, with_retries,
@@ -32,5 +44,6 @@ from repro.fault.watchdog import (
 __all__ = [
     "FAULT_CLASSES", "FaultConfig", "FaultInjector", "NackError",
     "request_with_retries", "ChainMonitor", "resync_replica",
+    "DurabilityConfig", "DurabilityManager", "derive_tx_cfg", "recover",
     "Heartbeat", "StragglerDetector", "is_transient", "with_retries",
 ]

@@ -87,12 +87,11 @@ def resync_replica(chain: tx.ReplicaState, cfg: tx.TxConfig, r: int,
         # the replay window fell off the ring: restore by full copy
         dst = src._replace(live=jnp.ones((), bool))
     else:
-        for t in range(int(dst.log_tail), int(src.log_tail)):
-            record = src.log[t % lc]
-            plan = tx.plan_commit(
-                record[None, :], cfg, proceed=jnp.ones((1,), bool)
-            )
-            dst = tx.replica_commit(dst, plan, use_ref=True)
+        records = [
+            src.log[t % lc]
+            for t in range(int(dst.log_tail), int(src.log_tail))
+        ]
+        dst = tx.replay_records(dst, records, cfg, use_ref=True)
     return write_replica(chain, r, dst)
 
 

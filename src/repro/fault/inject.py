@@ -135,7 +135,11 @@ class FaultInjector:
         # (step_landed, queue, payload np.ndarray, tag) in landing order
         self.landed: list = []
         self._delayed: list = []  # (release_step, queue, payload, tag)
-        self._doorbells: list = []  # (release_step, queue)
+        # (release_step, queue, landed_index) — the per-queue landing ordinal
+        # of the suppressed entry, so a crash reconciliation can tell which
+        # withheld doorbells cover entries that survived in the restored ring
+        self._doorbells: list = []
+        self._landed_q = collections.Counter()  # per-queue landing ordinals
 
     # -- delivery ----------------------------------------------------------
 
@@ -171,6 +175,7 @@ class FaultInjector:
             (self.now, int(queue_id), np.asarray(payload).copy(), tag)
         )
         self.counters["landed"] += 1
+        self._landed_q[int(queue_id)] += 1
         return state, True
 
     def inject(self, state, queue_id: int, payload, tag=None):
@@ -206,7 +211,8 @@ class FaultInjector:
             )
             if acc:
                 self._doorbells.append(
-                    (self.now + self.cfg.suppress_steps, int(queue_id))
+                    (self.now + self.cfg.suppress_steps, int(queue_id),
+                     self._landed_q[int(queue_id)] - 1)
                 )
                 self.counters["suppressed"] += 1
             return state, acc
@@ -240,7 +246,7 @@ class FaultInjector:
         due = [d for d in self._doorbells if d[0] <= self.now]
         self._doorbells = [d for d in self._doorbells if d[0] > self.now]
         if due:
-            cnt = collections.Counter(q for _, q in due)
+            cnt = collections.Counter(q for _, q, _ in due)
             qs = sorted(cnt)
             state = state._replace(cpoll=_doorbell(
                 state.cpoll, jnp.asarray(qs, I32),
@@ -252,6 +258,73 @@ class FaultInjector:
         events += [("revive", r) for (t, r) in self.cfg.revive_schedule
                    if t == self.now]
         return state, events
+
+    # -- crash recovery ----------------------------------------------------
+
+    def reconcile_crash(self, state):
+        """Re-align the wire with a recovered engine (``fault.recovery``).
+
+        An engine crash rolls its rings back to the last committed flush;
+        the wire (this injector = client NIC + link) survives. Three
+        repairs, all derived from the recovered monotonic counters:
+
+        * entries that landed *after* the flush were wiped from the
+          restored ring — remove them from the landing history (per-queue
+          ordinals past the recovered ``req.tail``) and hand them back so
+          the driver can NACK + resubmit (they are provably unanswered:
+          never covered by a committed flush, hence never released).
+        * withheld (suppressed) doorbells for wiped entries are dropped;
+          those for surviving entries stay pending.
+        * doorbells the dead engine consumed-or-received after the flush
+          are lost with it: re-ring the pointer buffer up to
+          ``req.tail - still_pending`` per queue, so every surviving entry
+          is announced exactly once (coalescing makes the bump safe).
+
+        Returns ``(state, wiped)`` — ``wiped`` as ``(step, q, payload,
+        tag)`` landing records. Delayed (not yet landed) entries are
+        untouched: they land on the recovered engine like any late packet.
+        """
+        rec_tail = np.asarray(jax.device_get(state.req.tail))
+        # 1) wipe the landing history past the recovered tails
+        kept, wiped = [], []
+        seen_q = collections.Counter()
+        for entry in self.landed:
+            q = entry[1]
+            if seen_q[q] < int(rec_tail[q]):
+                kept.append(entry)
+            else:
+                wiped.append(entry)
+            seen_q[q] += 1
+        self.landed = kept
+        self.counters["landed"] -= len(wiped)
+        self._landed_q = collections.Counter(
+            {q: int(rec_tail[q]) for q in range(rec_tail.shape[0])}
+        )
+        # 2) drop withheld doorbells that covered wiped entries
+        self._doorbells = [
+            (t, q, i) for (t, q, i) in self._doorbells if i < int(rec_tail[q])
+        ]
+        pending = collections.Counter(q for _, q, _ in self._doorbells)
+        # 3) re-announce surviving entries the restored pointer buffer and
+        # the pending doorbells do not already cover
+        pb = np.asarray(jax.device_get(state.cpoll.pointer_buffer))
+        qs, bumps = [], []
+        for q in range(rec_tail.shape[0]):
+            target = int(rec_tail[q]) - pending[q]
+            bump = target - int(pb[q])
+            assert bump >= 0, (
+                f"reconcile_crash: queue {q} pointer buffer {int(pb[q])} "
+                f"ahead of target {target} — flush captured a torn state?"
+            )
+            if bump:
+                qs.append(q)
+                bumps.append(bump)
+        if qs:
+            state = state._replace(cpoll=_doorbell(
+                state.cpoll, jnp.asarray(qs, I32), jnp.asarray(bumps, I32),
+            ))
+            self.counters["doorbells_released"] += len(qs)
+        return state, wiped
 
     @property
     def in_flight(self) -> int:

@@ -30,10 +30,27 @@ step budget with a fixed relative deadline, run with shedding on vs off.
 With ``deadline_word`` set the scheduler sheds doomed queue prefixes and
 the p99 sojourn of *served* requests stays bounded near the deadline;
 without it the backlog (and sojourn) grows with the run length.
+
+:func:`run_crash_soak` extends the soak across an engine-death boundary
+(``fault.recovery``): the driver flushes durability snapshots/WAL deltas
+on a cadence, releases responses only once a committed flush covers their
+production (group commit), then SIGKILL-equivalently tears the engine down
+mid-run — leaving a torn ``.tmp`` flush behind — and restarts via
+``recovery.recover`` + ``FaultInjector.reconcile_crash``. Assertions: the
+recovered state equals a never-crashed control twin's state at the covered
+step bit-for-bit, and every landed request is conserved across the crash
+(exactly one delivered response or crash-NACK + resubmission).
+
+:func:`run_durability` is the faultless overhead arm behind the
+``bench_tx``/``bench_kvs`` durability rows: closed-loop load vs flush
+cadence (off / full-snapshot sweep / WAL-delta), reporting delivery-gated
+p99 sojourn, throughput, and flush bytes per step.
 """
 from __future__ import annotations
 
 import collections
+import os
+import time
 from typing import Optional
 
 import jax
@@ -41,11 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.core import kvstore
 from repro.core import status as st
 from repro.core import transaction as tx
 from repro.core import tx_app
 from repro.fault import chain as fchain
 from repro.fault import inject as finj
+from repro.fault import recovery as frec
 from repro.fault.inject import NackError, request_with_retries
 
 I32 = jnp.int32
@@ -90,10 +109,26 @@ def _tx_payload(rng, queue, keys_per_queue, cfg: tx.TxConfig, deadline):
 def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
            keys_per_queue=32, max_ops=3, val_words=2, chain_len=3,
            log_capacity=256, capacity=16, budget=4, deadline_lo=3,
-           deadline_hi=16, max_outstanding=5, drain_factor=6):
+           deadline_hi=16, max_outstanding=5, drain_factor=6,
+           durability: Optional[frec.DurabilityConfig] = None,
+           crash_at: Optional[int] = None, torn_flush: bool = True,
+           control_capture: Optional[int] = None):
     """One full soak run. Returns a report dict; raises on any
     conservation violation (response with no matching landed entry,
-    or a drain that cannot complete)."""
+    or a drain that cannot complete).
+
+    With ``durability`` set the driver flushes through a
+    ``recovery.DurabilityManager`` every ``durability.every`` engine steps
+    (right after the jitted step, before the drain pops — so the flush
+    covers this step's productions) and *holds back* popped responses,
+    delivering each only once a committed flush covers its production
+    position (group commit). ``crash_at`` kills the engine at that wall
+    step: state is discarded, a torn ``.tmp`` flush is left behind
+    (``torn_flush``), and the run resumes via ``recovery.recover`` +
+    ``FaultInjector.reconcile_crash`` + client-side reconciliation.
+    ``control_capture`` makes a (non-crashing) run snapshot its host state
+    right after the step whose counter equals that value — the control
+    twin's bit-for-bit comparison point."""
     tx_cfg = tx.TxConfig(
         num_keys=num_queues * keys_per_queue, val_words=val_words,
         max_ops=max_ops, chain_len=chain_len, log_capacity=log_capacity,
@@ -119,7 +154,8 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
     landed_cursor = 0
     pending = collections.deque()  # uids awaiting (re)submission
     next_uid = 0
-    now = 0
+    now = 0  # wall clock: survives a crash (client + wire keep ticking)
+    engine_now = 0  # tracks state.steps: rolls back to the covered flush
     responses = 0
     status_counts = collections.Counter()
     resubmits = 0
@@ -127,14 +163,31 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
     oracle = np.zeros((tx_cfg.num_keys, val_words), np.int64)
     # a send is presumed lost (dropped, or its response shed while we
     # waited) after the worst honest round trip: full queue + max delay +
-    # suppressed doorbell + scheduling slack
+    # suppressed doorbell + scheduling slack (+ group-commit release lag
+    # when responses wait for a covering flush to commit)
     resend_after = capacity + 4 + 2 + 10
+    if durability is not None:
+        resend_after += 3 * durability.every
+
+    mgr = frec.DurabilityManager(durability) if durability is not None else None
+    flush_recs = []  # submit order; all but the last are committed (the
+    #                  manager's submit joins the previous worker first)
+    all_flush_recs = []  # cumulative across a crash (mgr is re-created)
+    cov = None  # (Q,) committed production coverage; None = nothing durable
+    held = {q: collections.deque() for q in range(num_queues)}  # (pos, row)
+    delivered = {q: [] for q in range(num_queues)}  # released rows by position
+    popped = {q: 0 for q in range(num_queues)}  # next pop's production position
+    applied_events = []  # (step, kind, replica) — re-imposed past the flush
+    crash_info = {}
+    capture = {}
 
     def submit(uid):
         nonlocal state
         r = reqs[uid]
         payload = r["payload"].copy()
-        payload = np.concatenate([payload, [now + r["deadline_rel"]]])
+        # deadlines are engine-clock absolute: the engine compares them to
+        # state.steps, which rolls back across a crash with everything else
+        payload = np.concatenate([payload, [engine_now + r["deadline_rel"]]])
         state2, acc = fi.inject(state, r["queue"], payload, tag=uid)
         state = state2
         if not acc:
@@ -147,39 +200,156 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
             fifos[q].append((tag, payload))
         landed_cursor = len(fi.landed)
 
+    def process_response(q, row):
+        """Release one response to the client: FIFO-match it against the
+        landed entry at the same per-queue position, account, resubmit on
+        NACK. With durability on this runs at *delivery* (covered) time."""
+        nonlocal responses
+        word0 = int(row[0])
+        if not fifos[q]:
+            raise AssertionError(
+                f"response on queue {q} with no landed entry "
+                f"(status {word0})"
+            )
+        uid, sent = fifos[q].popleft()
+        responses += 1
+        status_counts[word0] += 1
+        r = reqs[uid]
+        if word0 == tx_app.RESP_COMMITTED:
+            # replay the committed entry (possibly a corrupted or
+            # duplicated copy — commit means it validated)
+            n = int(sent[0])
+            for j in range(n):
+                off = int(sent[1 + j * (1 + val_words)])
+                vals = sent[2 + j * (1 + val_words):
+                            2 + j * (1 + val_words) + val_words]
+                oracle[off] = vals
+            if not r["done"]:
+                sojourns.append((now, now - r["born"]))
+            r["done"] = True
+        elif not r["done"]:
+            # DEFERRED / MALFORMED / SHED / TIMEOUT: resubmit the
+            # pristine payload with a fresh deadline
+            pending.append(uid)
+
     def drain():
-        nonlocal state, responses
+        nonlocal state
         payloads, counts, state = drain_fn(state)
         payloads = np.asarray(jax.device_get(payloads))
         counts = np.asarray(jax.device_get(counts))
         for q in range(num_queues):
             for i in range(int(counts[q])):
-                word0 = int(payloads[q, i, 0])
-                if not fifos[q]:
-                    raise AssertionError(
-                        f"response on queue {q} with no landed entry "
-                        f"(status {word0})"
-                    )
-                uid, sent = fifos[q].popleft()
-                responses += 1
-                status_counts[word0] += 1
-                r = reqs[uid]
-                if word0 == tx_app.RESP_COMMITTED:
-                    # replay the committed entry (possibly a corrupted or
-                    # duplicated copy — commit means it validated)
-                    n = int(sent[0])
-                    for j in range(n):
-                        off = int(sent[1 + j * (1 + val_words)])
-                        vals = sent[2 + j * (1 + val_words):
-                                    2 + j * (1 + val_words) + val_words]
-                        oracle[off] = vals
-                    if not r["done"]:
-                        sojourns.append((now, now - r["born"]))
-                    r["done"] = True
-                elif not r["done"]:
-                    # DEFERRED / MALFORMED / SHED / TIMEOUT: resubmit the
-                    # pristine payload with a fresh deadline
-                    pending.append(uid)
+                if mgr is None:
+                    process_response(q, payloads[q, i])
+                else:
+                    # group commit: hold the popped row until a committed
+                    # flush covers its production position
+                    held[q].append((popped[q], payloads[q, i].copy()))
+                    popped[q] += 1
+
+    def deliver():
+        if mgr is None or cov is None:
+            return
+        for q in range(num_queues):
+            while held[q] and held[q][0][0] < int(cov[q]):
+                pos, row = held[q].popleft()
+                if pos < len(delivered[q]):
+                    # re-surfaced after a crash: the pop was not durable, so
+                    # the restored ring re-serves bytes already released —
+                    # the position cursor dedupes, and the bytes must match
+                    # what the client saw (exactly-once)
+                    np.testing.assert_array_equal(row, delivered[q][pos])
+                    continue
+                delivered[q].append(row)
+                process_response(q, row)
+
+    def do_crash():
+        """SIGKILL-equivalent engine death + restart-recover-resume."""
+        nonlocal state, engine_now, landed_cursor, cov, mgr, flush_recs
+        # the kill lands mid-flush: everything submitted before it commits
+        # (the worker finishes the rename) and the in-flight write tears —
+        # modeled as partially-written artifacts recovery must ignore AND
+        # garbage-collect
+        mgr.wait()
+        torn = []
+        if torn_flush:
+            tdir = os.path.join(
+                durability.directory, f"step_{engine_now + 1}.tmp"
+            )
+            os.makedirs(tdir, exist_ok=True)
+            with open(os.path.join(tdir, "host0.npz"), "wb") as f:
+                f.write(b"torn mid-write, no manifest")
+            twal = os.path.join(
+                durability.directory, f"wal_{engine_now + 1}.npz.tmp"
+            )
+            with open(twal, "wb") as f:
+                f.write(b"torn delta")
+            torn = [tdir, twal]
+        # restart: a fresh process recovers from the NVM tier alone
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        state, covered = frec.recover(durability.directory, like)
+        for p in torn:
+            assert not os.path.exists(p), f"torn artifact survived: {p}"
+        # capture the pure recover() output NOW — the control twin compares
+        # against this, before wire reconciliation re-rings doorbells and
+        # post-flush chain events are re-imposed
+        recovered_host = jax.tree_util.tree_map(
+            np.asarray, jax.device_get(state)
+        )
+        engine_now = covered
+        mgr = frec.DurabilityManager(durability)
+        flush_recs = []
+        # wire repair: wiped landings returned, withheld doorbells pruned,
+        # lost announcements re-rung against the recovered counters
+        state, wiped = fi.reconcile_crash(state)
+        # client repair: future pops resume at the recovered drain position.
+        # Held rows split at that position: a pop the covered flush captured
+        # (pos < recovered head) zeroed its slot durably — the client's held
+        # copy is the only copy, and its production is covered by the
+        # recovered snapshot, so it releases below. A later pop rolls back
+        # (pos >= recovered head): discard the stale copy — the row either
+        # re-surfaces bit-for-bit from the restored ring or is re-produced
+        # from the restored (unconsumed) request.
+        rec_head = np.asarray(jax.device_get(state.resp.head))
+        for q in range(num_queues):
+            kept = [(p, row) for (p, row) in held[q] if p < int(rec_head[q])]
+            held[q].clear()
+            held[q].extend(kept)
+            popped[q] = int(rec_head[q])
+        # rebuild the per-queue landing FIFOs from the surviving history:
+        # everything landed-but-not-yet-released is still awaiting a response
+        per_q = {q: [] for q in range(num_queues)}
+        for (_, q, payload, tag) in fi.landed:
+            per_q[q].append((tag, payload))
+        for q in range(num_queues):
+            fifos[q] = collections.deque(per_q[q][len(delivered[q]):])
+        landed_cursor = len(fi.landed)
+        # the recovered snapshot itself is committed coverage
+        cov = np.asarray(jax.device_get(state.resp.tail))
+        # chain kill/revive applied after the covered flush died with the
+        # engine — re-impose it (kill = mask flip, revive = resync)
+        for (t, kind, r) in applied_events:
+            if t > covered:
+                if kind == "kill":
+                    state = state._replace(app=monitor.kill(state.app, r))
+                else:
+                    state = state._replace(app=monitor.revive(state.app, r))
+        # landings wiped by the rollback are provably unanswered (their
+        # production was never covered, so never released): crash-NACK and
+        # resubmit the pristine payloads
+        wiped_resubmitted = 0
+        for (_, q, payload, tag) in wiped:
+            if not reqs[tag]["done"] and tag not in pending:
+                pending.append(tag)
+                wiped_resubmitted += 1
+        crash_info.update(
+            wall_step=now, covered=int(covered), wiped=len(wiped),
+            wiped_resubmitted=wiped_resubmitted,
+            torn_cleaned=bool(torn),
+            recovered_state=recovered_host,
+        )
+        # release the durably-popped held rows the recovered coverage spans
+        deliver()
 
     def pump_sends():
         nonlocal resubmits
@@ -198,7 +368,7 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
     limit = steps * drain_factor
 
     def one_step(generating: bool):
-        nonlocal state, next_uid, now, total_steps
+        nonlocal state, next_uid, now, total_steps, engine_now, cov
         if generating:
             for q in range(num_queues):
                 out = sum(1 for r in reqs.values()
@@ -226,25 +396,47 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
             state = state._replace(
                 app=monitor.apply_events(state.app, events)
             )
+            applied_events.extend((fi.now, k, r) for (k, r) in events)
         state, _ = step_fn(state)
         now += 1
+        engine_now += 1
         total_steps += 1
+        if (control_capture is not None and engine_now == control_capture
+                and not capture):
+            # the control twin's comparison point: post-step, pre-drain —
+            # exactly what a flush at this step captures
+            capture["state"] = jax.tree_util.tree_map(
+                np.asarray, jax.device_get(state)
+            )
+        if mgr is not None and engine_now % durability.every == 0:
+            rec = mgr.flush(state)  # submit joins the previous flush, so
+            if flush_recs:          # everything before it is now committed
+                cov = flush_recs[-1].resp_tail
+            flush_recs.append(rec)
+            all_flush_recs.append(rec)
         sync_landed()
         drain()
+        deliver()
 
     for _ in range(steps):
         one_step(generating=True)
+        if crash_at is not None and now == crash_at and not crash_info:
+            do_crash()
     while (pending or fi.in_flight
            or any(fifos[q] for q in fifos)
+           or any(held[q] for q in held)
            or not all(r["done"] for r in reqs.values())):
         if total_steps >= limit:
             raise AssertionError(
                 f"soak failed to drain in {limit} steps: "
                 f"pending={len(pending)} in_flight={fi.in_flight} "
                 f"fifo={sum(len(f) for f in fifos.values())} "
+                f"held={sum(len(h) for h in held.values())} "
                 f"undone={sum(not r['done'] for r in reqs.values())}"
             )
         one_step(generating=False)
+    if mgr is not None:
+        mgr.wait()
 
     chain = jax.device_get(state.app)
     return {
@@ -261,6 +453,10 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
         "requests": len(reqs),
         "oracle_store": oracle,
         "monitor_events": list(monitor.events),
+        "flush_records": list(all_flush_recs),
+        "flush_bytes": sum(r.bytes for r in all_flush_recs),
+        "crash": crash_info or None,
+        "capture": capture.get("state"),
         "config": {"tx": tx_cfg, "engine": ecfg},
     }
 
@@ -311,6 +507,266 @@ def run_soak(seed: int = 7, steps: int = 200, *, kill=None, revive=None,
     )
     main["control_chain"] = cc
     return main
+
+
+def run_crash_soak(seed: int = 11, steps: int = 80, *, crash_at=None,
+                   kill=None, revive=None, directory=None, every: int = 2,
+                   snapshot_every: int = 8, mode: str = "adaptive",
+                   torn_flush: bool = True, **kw):
+    """Crash-restart chaos: the faulted soak with durability flushes, an
+    engine SIGKILL at wall step ``crash_at`` (leaving a torn ``.tmp`` flush
+    behind), restart-recover-resume, and a never-crashed control twin run
+    at the same flush cadence. Asserts, across the crash boundary:
+
+    * ``recover()`` + WAL replay equals the control twin's state at the
+      covered step **bit-for-bit** (every leaf of the engine tree);
+    * conservation — every landed entry resolves to exactly one released
+      response (wiped landings are crash-NACKed and resubmitted; released
+      duplicates dedupe byte-equal by position);
+    * the torn flush artifacts were ignored AND garbage-collected;
+    * every fault class fired, the chain kill/revive happened, and the
+      numpy oracle still reproduces the final store.
+
+    Returns the crashed run's report (with ``crash`` details attached)."""
+    import shutil
+    import tempfile
+
+    if kill is None:
+        kill = ((max(steps // 3, 2), 1),)
+    if revive is None:
+        revive = ((max((2 * steps) // 3, 4), 1),)
+    if crash_at is None:
+        # land mid-flush-window so some landings are past the committed
+        # coverage — exercising the wipe + crash-NACK + resubmit path
+        crash_at = max(steps // 2, 3)
+        if crash_at % every == 0:
+            crash_at += 1
+    tmp_root = None
+    if directory is None:
+        tmp_root = tempfile.mkdtemp(prefix="orca-crash-soak-")
+        directory = tmp_root
+    try:
+        dmain = frec.DurabilityConfig(
+            os.path.join(directory, "main"), every=every,
+            snapshot_every=snapshot_every, mode=mode,
+        )
+        dctrl = frec.DurabilityConfig(
+            os.path.join(directory, "ctrl"), every=every,
+            snapshot_every=snapshot_every, mode=mode,
+        )
+        main = _drive(seed, steps, kill, revive, durability=dmain,
+                      crash_at=crash_at, torn_flush=torn_flush, **kw)
+        assert main["crash"] is not None, "crash never triggered"
+        covered = main["crash"]["covered"]
+        ctrl = _drive(seed, steps, kill, revive, durability=dctrl,
+                      control_capture=covered, **kw)
+    finally:
+        if tmp_root is not None:
+            shutil.rmtree(tmp_root, ignore_errors=True)
+
+    # -- recovery == never-crashed control at the covered step, bit-for-bit
+    ctl = ctrl["capture"]
+    assert ctl is not None, "control twin never reached the covered step"
+    rec_leaves = jax.tree_util.tree_flatten_with_path(
+        main["crash"]["recovered_state"])[0]
+    ctl_leaves = jax.tree_util.tree_flatten_with_path(ctl)[0]
+    assert len(rec_leaves) == len(ctl_leaves)
+    for (path, a), (_, b) in zip(rec_leaves, ctl_leaves):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"recovered != control at {jax.tree_util.keystr(path)}",
+        )
+    # -- conservation across the crash boundary ----------------------------
+    assert main["responses"] == main["counters"]["landed"], (
+        main["responses"], main["counters"])
+    assert main["requests"] > 0
+    assert main["crash"]["torn_cleaned"] == torn_flush
+    assert main["crash"]["wiped_resubmitted"] <= main["crash"]["wiped"]
+    # -- fault & failover coverage still holds under durability ------------
+    for c in finj.FAULT_CLASSES:
+        assert main["counters"][c] >= 1, (c, main["counters"])
+    assert ("kill", kill[0][1]) in main["monitor_events"]
+    assert ("revive", revive[0][1]) in main["monitor_events"]
+    nacks = sum(v for k, v in main["status_counts"].items() if k < 0)
+    assert nacks >= 1, main["status_counts"]
+    assert main["resubmits"] >= 1
+    # -- final state internally consistent: replicas agree, oracle agrees --
+    mc = main["chain"]
+    live = np.asarray(mc.live)
+    assert live.all(), live
+    for r in range(1, live.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(mc.store[r]), np.asarray(mc.store[0]))
+    np.testing.assert_array_equal(
+        main["oracle_store"].astype(np.int64),
+        np.asarray(mc.store[0])[:-1].astype(np.int64),
+    )
+    main["covered"] = covered
+    return main
+
+
+# (app, tx/kv config, engine config) -> (step_fn, drain_fn) for the
+# durability arms — same motivation as _COMPILED
+_COMPILED_DUR = {}
+
+
+def _compiled_dur(app: str, app_cfg, ecfg: engine.EngineConfig):
+    key = (app, app_cfg, ecfg)
+    if key not in _COMPILED_DUR:
+        mod = tx_app if app == "tx" else kvstore
+        app_fn = engine.bind_app(mod.app_step, app_cfg, ecfg)
+        _COMPILED_DUR[key] = (
+            jax.jit(lambda s: engine.engine_step(s, app_fn, ecfg)),
+            jax.jit(lambda s: engine.drain_responses(s, ecfg.capacity)),
+        )
+    return _COMPILED_DUR[key]
+
+
+def run_durability(seed: int = 0, steps: int = 160, *, app: str = "tx",
+                   durability: Optional[frec.DurabilityConfig] = None,
+                   num_queues: int = 4, capacity: int = 64, budget: int = 8,
+                   offered_per_queue: int = 2, drain_factor: int = 8):
+    """Durability-overhead arm (faultless, closed loop): drive the TX or
+    KVS engine under steady offered load with the flush policy of
+    ``durability`` (None = durability off), releasing responses only once
+    a committed flush covers their production — so the reported p50/p99
+    sojourn *includes* the group-commit release lag the flush cadence
+    buys, and ``flush_bytes_per_step`` measures what each policy ships to
+    the NVM tier. The bench sweeps: off / full-snapshot-every-N /
+    WAL-delta (``bench_tx.py`` / ``bench_kvs.py``)."""
+    if app == "tx":
+        app_cfg = tx.TxConfig(num_keys=num_queues * 32, val_words=2,
+                              max_ops=2, chain_len=2, log_capacity=1024)
+        w = tx_app.request_words(app_cfg)
+        app_state = tx.make_chain(app_cfg)
+    elif app == "kvs":
+        app_cfg = kvstore.KVConfig(num_buckets=256, ways=4, key_words=2,
+                                   val_words=8, pool_size=2048)
+        w = kvstore.request_words(app_cfg)
+        app_state = kvstore.make(app_cfg)
+    else:
+        raise ValueError(f"run_durability: unknown app {app!r}")
+    ecfg = engine.EngineConfig(
+        num_queues=num_queues, capacity=capacity, req_words=w,
+        resp_words=w, budget=budget, kernel_backend="ref",
+    )
+    state = engine.make(ecfg, app_state)
+    step_fn, drain_fn = _compiled_dur(app, app_cfg, ecfg)
+    wl = np.random.default_rng(seed)
+    mgr = frec.DurabilityManager(durability) if durability is not None else None
+    qids = jnp.arange(num_queues, dtype=I32)
+    fifos = {q: collections.deque() for q in range(num_queues)}  # born steps
+    held = {q: collections.deque() for q in range(num_queues)}  # positions
+    popped = {q: 0 for q in range(num_queues)}
+    flush_prev = None
+    cov = None
+    responses = 0
+    sojourns = []
+
+    def gen_payload(q):
+        if app == "tx":
+            return _tx_payload(wl, q, 32, app_cfg, 0)[:-1]
+        if wl.random() < 0.7:
+            vals = wl.integers(1, 2 ** 15, size=app_cfg.val_words)
+            op = kvstore.OP_PUT
+        else:
+            vals = np.zeros((app_cfg.val_words,), np.int64)
+            op = kvstore.OP_GET
+        key = [q * 64 + int(wl.integers(0, 64)), 7]
+        return np.asarray([op, *key, *vals], np.int64)
+
+    def flush_step():
+        nonlocal flush_prev, cov
+        rec = mgr.flush(state)  # joins (commits) the previous flush
+        if flush_prev is not None:
+            cov = flush_prev.resp_tail
+        flush_prev = rec
+
+    def drain_and_deliver(now):
+        nonlocal state, responses
+        payloads, counts, state = drain_fn(state)
+        counts = np.asarray(jax.device_get(counts))
+        for q in range(num_queues):
+            for i in range(int(counts[q])):
+                if mgr is None:
+                    born = fifos[q].popleft()
+                    responses += 1
+                    sojourns.append((now, now - born))
+                else:
+                    held[q].append(popped[q])
+                    popped[q] += 1
+        if mgr is not None and cov is not None:
+            for q in range(num_queues):
+                while held[q] and held[q][0] < int(cov[q]):
+                    held[q].popleft()
+                    born = fifos[q].popleft()
+                    responses += 1
+                    sojourns.append((now, now - born))
+
+    now = -1
+    for now in range(steps):
+        for _ in range(offered_per_queue):
+            pays = np.stack([gen_payload(q) for q in range(num_queues)])
+            state, acc = engine.inject(
+                state, qids, jnp.asarray(pays, I32), with_accepted=True
+            )
+            acc = np.asarray(jax.device_get(acc))
+            for q in range(num_queues):
+                if acc[q]:
+                    fifos[q].append(now)
+        state, _ = step_fn(state)
+        if mgr is not None and (now + 1) % durability.every == 0:
+            flush_step()
+        drain_and_deliver(now)
+    # drain the backlog, then barrier the final flush so every response is
+    # covered and released
+    extra = 0
+    while any(len(f) for f in fifos.values()):
+        if extra > steps * drain_factor:
+            raise AssertionError(
+                f"durability run failed to drain: "
+                f"fifo={sum(len(f) for f in fifos.values())} "
+                f"held={sum(len(h) for h in held.values())}"
+            )
+        state, _ = step_fn(state)
+        now += 1
+        extra += 1
+        flushed = False
+        if mgr is not None and (now + 1) % durability.every == 0:
+            flush_step()
+            flushed = True
+        drain_and_deliver(now)
+        if mgr is not None and any(len(h) for h in held.values()) and all(
+                len(fifos[q]) == len(held[q]) for q in range(num_queues)):
+            # the engine is fully drained; only flush coverage is missing —
+            # barrier: flush at the final state, join the worker, release
+            if not flushed:
+                flush_step()
+            mgr.wait()
+            cov = np.asarray(flush_prev.resp_tail).copy()
+            drain_and_deliver(now)
+    if mgr is not None:
+        mgr.wait()
+    steps_run = now + 1
+    tail = [s for (t, s) in sojourns if t >= steps // 2]
+    full = sum(1 for r in (mgr.records if mgr else []) if r.kind == "full")
+    delta = sum(1 for r in (mgr.records if mgr else []) if r.kind == "delta")
+    fbytes = mgr.flush_bytes() if mgr else 0
+    return {
+        "app": app,
+        "p99_sojourn": float(np.percentile(tail, 99)) if tail else 0.0,
+        "p50_sojourn": float(np.percentile(tail, 50)) if tail else 0.0,
+        "responses": responses,
+        "steps_run": steps_run,
+        "throughput_per_step": responses / max(steps_run, 1),
+        "flush_count": full + delta,
+        "flush_full": full,
+        "flush_delta": delta,
+        "flush_bytes": fbytes,
+        "flush_bytes_per_step": fbytes / max(steps_run, 1),
+        "mode": durability.mode if durability else "off",
+        "every": durability.every if durability else 0,
+    }
 
 
 def run_overload(seed: int = 0, steps: int = 240, shed: bool = True, *,

@@ -17,6 +17,7 @@ transient device/runtime errors, and outright node loss. The train driver
 from __future__ import annotations
 
 import os
+import random
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -64,8 +65,16 @@ def is_transient(err: BaseException) -> bool:
 
 
 def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.1,
-                 on_retry: Optional[Callable] = None, **kwargs):
-    """Run fn with exponential backoff on transient errors."""
+                 jitter: float = 0.0, on_retry: Optional[Callable] = None,
+                 sleep: Callable = time.sleep, rng=None, **kwargs):
+    """Run fn with exponential backoff on transient errors.
+
+    The delay before retry ``k`` (1-based) is ``backoff * 2**(k-1)``,
+    scaled by a uniform factor in ``[1-jitter, 1+jitter]`` when
+    ``jitter > 0`` (decorrelates retry storms across hosts; ``rng`` is a
+    ``random.Random``-like source, default the module ``random``).
+    ``sleep`` is injectable so tests (and simulated drivers) can capture
+    the schedule instead of waiting it out."""
     attempt = 0
     while True:
         try:
@@ -76,7 +85,11 @@ def with_retries(fn: Callable, *args, retries: int = 3, backoff: float = 0.1,
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(backoff * (2 ** (attempt - 1)))
+            delay = backoff * (2 ** (attempt - 1))
+            if jitter:
+                src = rng if rng is not None else random
+                delay *= 1 + jitter * (2 * src.random() - 1)
+            sleep(delay)
 
 
 class Heartbeat:

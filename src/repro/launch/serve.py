@@ -22,8 +22,8 @@ from repro.configs import get_config, reduced
 from repro.core import engine as eng
 from repro.core import ringbuf as rb
 from repro.fault import (
-    FaultConfig, FaultInjector, NackError, StragglerDetector,
-    request_with_retries,
+    DurabilityConfig, DurabilityManager, FaultConfig, FaultInjector,
+    NackError, StragglerDetector, recover, request_with_retries,
 )
 from repro.launch.mesh import make_context
 from repro.models import (
@@ -101,7 +101,30 @@ def main(argv=None):
                          "fault.FaultInjector (drop/dup/corrupt/delay/"
                          "doorbell-suppress); completion then counts "
                          "entries that actually landed")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="flush full engine-state snapshots to this host "
+                         "NVM-tier directory (fault.recovery, atomic "
+                         ".tmp-rename commit on the async checkpoint "
+                         "thread, overlapping the jitted step)")
+    ap.add_argument("--snapshot-every", type=int, default=16,
+                    help="engine ticks between snapshot flushes")
+    ap.add_argument("--recover", action="store_true",
+                    help="restore the latest committed snapshot from "
+                         "--snapshot-dir before serving (crash-restart "
+                         "path; torn .tmp leftovers are garbage-collected)")
     args = ap.parse_args(argv)
+
+    if args.recover and args.snapshot_dir is None:
+        ap.error("--recover requires --snapshot-dir")
+    if args.snapshot_dir is not None and args.paged and args.host_pages:
+        # the host cold tier lives OUTSIDE LMEngineState (pages already
+        # evicted to host DRAM are invisible to the snapshot), so a
+        # restore would resurrect slots whose cold pages are gone —
+        # refuse instead of silently corrupting (engine.EngineState's
+        # durability classification)
+        ap.error("--snapshot-dir is incompatible with --host-pages: the "
+                 "host cold tier is outside the snapshot's persistence "
+                 "domain")
 
     cfg = reduced(get_config(args.arch)).replace(dtype="float32")
     ctx = local_context()
@@ -121,6 +144,22 @@ def main(argv=None):
     cold = None
     if ecfg.paged and ecfg.host_pages:
         swap, cold, _ = eng.make_swap_service(ecfg, cfg, ctx)
+
+    mgr = None
+    recovered_step = None
+    if args.snapshot_dir is not None:
+        mgr = DurabilityManager(DurabilityConfig(
+            args.snapshot_dir, every=args.snapshot_every, mode="full",
+        ))
+    if args.recover:
+        # fresh state is the geometry template; the restored tree replaces
+        # it (copy per leaf: the jit step donates its input, so recovered
+        # buffers must be owned)
+        state, recovered_step = recover(args.snapshot_dir, state)
+        state = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
+                                       state)
+        print(f"recovered engine state at step {recovered_step} from "
+              f"{args.snapshot_dir}")
 
     rng = np.random.default_rng(args.seed)
     clients = [rb.HostClient(i, ecfg.capacity, ecfg.prompt_len)
@@ -194,6 +233,11 @@ def main(argv=None):
         jax.block_until_ready(state.resp.tail)
         stragglers += int(straggler.observe(time.time() - t_step)["straggler"])
         ticks += 1
+        if mgr is not None and ticks % args.snapshot_every == 0:
+            # synchronous device->host copy, async file write: the next
+            # step's donation reuses the device buffers while the NVM
+            # tier's atomic .tmp-rename commit happens off-thread
+            mgr.flush(state)
         # clients poll responses (entry = [count | tokens..., zero pad])
         avail = np.asarray(rb.available(state.resp))
         for qi in range(args.queues):
@@ -212,10 +256,17 @@ def main(argv=None):
                 state.resp, jnp.arange(args.queues, dtype=jnp.int32),
                 jnp.asarray(avail, jnp.int32),
             ))
+    if mgr is not None:
+        mgr.flush(state)
+        mgr.wait()
     dt = time.time() - t0
     print(f"served {recv}/{sent} requests ({tokens_out} tokens) in {ticks} "
           f"engine ticks ({dt:.1f}s wall, {recv / max(dt, 1e-9):.1f} req/s "
           f"on CPU)")
+    if mgr is not None:
+        committed = mgr.committed()
+        print(f"  snapshots: {len(committed)} committed to "
+              f"{args.snapshot_dir} ({mgr.flush_bytes()} bytes flushed)")
     if cold is not None:
         print(f"  cold tier: {cold.evictions} evictions, "
               f"{cold.restores} restores, {cold.pages_used} pages stranded")
@@ -233,6 +284,11 @@ def main(argv=None):
         assert recv == c["landed"], (
             "every landed entry must be answered exactly once"
         )
+    elif args.recover:
+        # a recovered run inherits the crashed process's in-flight backlog
+        # (restored ring/slot occupancy): this process's recv counts both
+        # inherited and fresh completions, so only liveness is asserted
+        assert recv > 0, "recovered engine must make progress"
     else:
         assert recv == args.requests, "all requests must complete"
     return recv

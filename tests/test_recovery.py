@@ -1,0 +1,319 @@
+"""Crash-consistent durability (fault.recovery): snapshot/WAL-delta
+flushes through the atomic checkpoint protocol, the adaptive full-vs-delta
+split, and the restart path — recover() + redo-log replay must reproduce
+the live engine state bit-for-bit, clean torn .tmp leftovers, compose with
+chain kill/revive, and carry the full crash-restart soak."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import kvstore
+from repro.core import transaction as tx
+from repro.core import tx_app
+from repro.fault import recovery as frec
+from repro.fault import soak
+
+I32 = jnp.int32
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(la) == len(lb)
+    for (p, x), (_, y) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"mismatch at {jax.tree_util.keystr(p)}",
+        )
+
+
+# --------------------------- TX engine fixture ------------------------------
+
+def _mk_tx(num_queues=2, log_capacity=64, chain_len=3):
+    tx_cfg = tx.TxConfig(num_keys=num_queues * 8, val_words=2, max_ops=2,
+                         chain_len=chain_len, log_capacity=log_capacity)
+    w = tx_app.request_words(tx_cfg)
+    ecfg = engine.EngineConfig(num_queues=num_queues, capacity=8,
+                               req_words=w, resp_words=w, budget=4,
+                               kernel_backend="ref")
+    state = engine.make(ecfg, tx.make_chain(tx_cfg))
+    app_fn = engine.bind_app(tx_app.app_step, tx_cfg, ecfg)
+    step = jax.jit(lambda s: engine.engine_step(s, app_fn, ecfg))
+    drain = jax.jit(lambda s: engine.drain_responses(s, ecfg.capacity))
+    return tx_cfg, ecfg, state, step, drain
+
+
+def _tx_steps(state, step, drain, rng, tx_cfg, ecfg, n, inject=True):
+    qids = jnp.arange(ecfg.num_queues, dtype=I32)
+    for _ in range(n):
+        if inject:
+            pays = np.stack([
+                soak._tx_payload(rng, q, 8, tx_cfg, 0)[:-1]
+                for q in range(ecfg.num_queues)
+            ])
+            state, _ = engine.inject(state, qids, jnp.asarray(pays, I32),
+                                     with_accepted=True)
+        state, _ = step(state)
+        _, _, state = drain(state)
+    return state
+
+
+def _mk_kvs(num_queues=2):
+    kcfg = kvstore.KVConfig(num_buckets=64, ways=4, key_words=2,
+                            val_words=4, pool_size=256)
+    w = kvstore.request_words(kcfg)
+    ecfg = engine.EngineConfig(num_queues=num_queues, capacity=8,
+                               req_words=w, resp_words=w, budget=4,
+                               kernel_backend="ref")
+    state = engine.make(ecfg, kvstore.make(kcfg))
+    app_fn = engine.bind_app(kvstore.app_step, kcfg, ecfg)
+    step = jax.jit(lambda s: engine.engine_step(s, app_fn, ecfg))
+    drain = jax.jit(lambda s: engine.drain_responses(s, ecfg.capacity))
+    return kcfg, ecfg, state, step, drain
+
+
+def _kvs_steps(state, step, drain, rng, kcfg, ecfg, n):
+    qids = jnp.arange(ecfg.num_queues, dtype=I32)
+    for _ in range(n):
+        pays = []
+        for q in range(ecfg.num_queues):
+            vals = rng.integers(1, 1 << 15, size=kcfg.val_words)
+            pays.append([kvstore.OP_PUT, q * 16 + int(rng.integers(0, 16)),
+                         5, *vals])
+        state, _ = engine.inject(state, qids,
+                                 jnp.asarray(np.asarray(pays), I32),
+                                 with_accepted=True)
+        state, _ = step(state)
+        _, _, state = drain(state)
+    return state
+
+
+# ------------------------------ snapshots -----------------------------------
+
+def test_full_snapshot_roundtrip():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(d, mode="full"))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 3)
+        rec = mgr.flush(state)
+        mgr.wait()
+        assert rec.kind == "full"
+        assert [r.step for r in mgr.committed()] == [rec.step]
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        out, covered = frec.recover(d, like)
+        assert covered == int(jax.device_get(state.steps))
+        _assert_tree_equal(out, state)
+
+
+def test_wal_delta_recovery_bit_for_bit():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(1)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="delta", snapshot_every=1000))
+        for _ in range(4):
+            state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 2)
+            mgr.flush(state)
+        mgr.wait()
+        kinds = [r.kind for r in mgr.records]
+        assert kinds[0] == "full" and set(kinds[1:]) == {"delta"}
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        out, covered = frec.recover(d, like)
+        assert covered == int(jax.device_get(state.steps))
+        _assert_tree_equal(out, state)
+
+
+def test_recover_cleans_torn_artifacts():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(2)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(d, mode="full"))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 2)
+        mgr.flush(state)
+        mgr.wait()
+        torn_dir = os.path.join(d, "step_99.tmp")
+        os.makedirs(torn_dir)
+        with open(os.path.join(torn_dir, "host0.npz"), "wb") as f:
+            f.write(b"\x00torn")
+        torn_wal = os.path.join(d, "wal_99.npz.tmp")
+        with open(torn_wal, "wb") as f:
+            f.write(b"\x00torn")
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        out, covered = frec.recover(d, like)
+        assert not os.path.exists(torn_dir) and not os.path.exists(torn_wal)
+        _assert_tree_equal(out, state)
+
+
+def test_recover_without_snapshot_raises():
+    tx_cfg, ecfg, state, _, _ = _mk_tx()
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            frec.recover(d, state)
+
+
+# --------------------------- adaptive policy --------------------------------
+
+def test_adaptive_policy_first_flush_is_full_then_delta():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(3)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="adaptive", snapshot_every=1000, dirty_threshold=0.5))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+        r0 = mgr.flush(state)  # no base yet -> full, whatever the mode
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+        r1 = mgr.flush(state)  # lightly dirty -> delta
+        mgr.wait()
+        assert r0.kind == "full" and r1.kind == "delta"
+        assert r1.bytes < r0.bytes
+
+
+def test_adaptive_policy_dirty_threshold_escapes_to_full():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(4)
+    with tempfile.TemporaryDirectory() as d:
+        # threshold 0: any dirty byte makes the delta "not pay for itself"
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="adaptive", snapshot_every=1000, dirty_threshold=0.0))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+        mgr.flush(state)
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+        rec = mgr.flush(state)
+        mgr.wait()
+        assert rec.kind == "full"
+
+
+def test_snapshot_every_bounds_replay_chain():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(5)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="delta", snapshot_every=2))
+        kinds = []
+        for _ in range(6):
+            state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+            kinds.append(mgr.flush(state).kind)
+        mgr.wait()
+        # every=1 flushes: full at step1, delta at 2, full at 3 (gap==2)...
+        assert kinds == ["full", "delta"] * 3
+
+
+def test_tx_log_lap_forces_full_snapshot():
+    # tiny log ring: committing more entries than log_capacity between two
+    # flushes laps the high-water mark — the delta window is gone and the
+    # manager must escape to a full snapshot
+    tx_cfg, ecfg, state, step, drain = _mk_tx(log_capacity=4)
+    rng = np.random.default_rng(6)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="delta", snapshot_every=1000))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+        mgr.flush(state)
+        # 2 queues x 4 steps = up to 8 commits > capacity 4
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 4)
+        rec = mgr.flush(state)
+        mgr.wait()
+        tails = np.atleast_1d(np.asarray(jax.device_get(state.app.log_tail)))
+        assert int(tails[0]) > 4, "load did not lap the log ring"
+        assert rec.kind == "full"
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        out, _ = frec.recover(d, like)
+        _assert_tree_equal(out, state)
+
+
+# ------------------------------- KVS path -----------------------------------
+
+def test_kvs_delta_recovery_bit_for_bit():
+    kcfg, ecfg, state, step, drain = _mk_kvs()
+    rng = np.random.default_rng(7)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="delta", snapshot_every=1000))
+        for _ in range(3):
+            state = _kvs_steps(state, step, drain, rng, kcfg, ecfg, 2)
+            mgr.flush(state)
+        mgr.wait()
+        kinds = [r.kind for r in mgr.records]
+        assert kinds[0] == "full" and set(kinds[1:]) == {"delta"}
+        # the dirty-row diff must undercut a full flush
+        assert all(r.bytes < mgr.records[0].bytes for r in mgr.records[1:])
+        like = engine.make(ecfg, kvstore.make(kcfg))
+        out, covered = frec.recover(d, like)
+        assert covered == int(jax.device_get(state.steps))
+        _assert_tree_equal(out, state)
+
+
+def test_kvs_crash_resume_deterministic():
+    """Recovery composes with resumed execution: feeding the recovered
+    state the same post-crash inputs as the never-crashed original yields
+    the same final state bit-for-bit."""
+    kcfg, ecfg, state, step, drain = _mk_kvs()
+    rng = np.random.default_rng(8)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="adaptive", snapshot_every=4))
+        for _ in range(3):
+            state = _kvs_steps(state, step, drain, rng, kcfg, ecfg, 1)
+            mgr.flush(state)
+        mgr.wait()
+        like = engine.make(ecfg, kvstore.make(kcfg))
+        recovered, covered = frec.recover(d, like)
+        assert covered == int(jax.device_get(state.steps))
+        # identical post-recovery input stream for both twins
+        seed = int(rng.integers(0, 1 << 31))
+        live_end = _kvs_steps(state, step, drain,
+                              np.random.default_rng(seed), kcfg, ecfg, 3)
+        rec_end = _kvs_steps(recovered, step, drain,
+                             np.random.default_rng(seed), kcfg, ecfg, 3)
+        _assert_tree_equal(rec_end, live_end)
+
+
+# --------------------------- chain interaction ------------------------------
+
+def test_dead_replica_inside_delta_window():
+    """A replica killed between flushes: it stops logging, so its delta is
+    empty; survivors' records replay; the delta's control section restores
+    the at-flush live mask — recovery is bit-for-bit, dead replica and
+    all (revive-by-resync happens above, exactly as without a crash)."""
+    tx_cfg, ecfg, state, step, drain = _mk_tx(chain_len=3)
+    rng = np.random.default_rng(9)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, mode="delta", snapshot_every=1000))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 2)
+        mgr.flush(state)
+        state = state._replace(app=state.app._replace(
+            live=state.app.live.at[1].set(False)))
+        state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 2)
+        rec = mgr.flush(state)
+        mgr.wait()
+        assert rec.kind == "delta"
+        like = engine.make(ecfg, tx.make_chain(tx_cfg))
+        out, _ = frec.recover(d, like)
+        assert not bool(np.asarray(jax.device_get(out.app.live))[1])
+        _assert_tree_equal(out, state)
+
+
+# ----------------------------- end to end -----------------------------------
+
+def test_crash_soak_end_to_end():
+    """The acceptance harness itself: seeded crash mid-run (torn flush
+    left behind), restart + recover + resume; bit-for-bit control twin
+    and conservation asserts live inside run_crash_soak."""
+    rep = soak.run_crash_soak(seed=11, steps=40)
+    assert rep["crash"]["torn_cleaned"]
+    assert rep["responses"] == rep["counters"]["landed"]
+    assert rep["covered"] <= rep["crash"]["wall_step"]
+
+
+def test_crash_soak_wipes_and_resubmits_uncovered_landings():
+    rep = soak.run_crash_soak(seed=11, steps=40, crash_at=21)
+    assert rep["crash"]["wiped"] >= 1
+    assert rep["crash"]["wiped_resubmitted"] >= 1
+    assert rep["responses"] == rep["counters"]["landed"]

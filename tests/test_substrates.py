@@ -11,7 +11,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.checkpoint import (
+    AsyncCheckpointer, clean_stale, latest_step, restore, save,
+)
 from repro.configs import SHAPES, get_config, reduced
 from repro.core import placement
 from repro.data import DataConfig, TokenPipeline, batch_for_step
@@ -162,6 +164,58 @@ def test_checkpoint_atomic_commit_ignores_partial():
         assert latest_step(d) == 10
 
 
+def test_checkpoint_torn_tmp_ignored_and_cleaned():
+    """A crashed save's ``step_N.tmp`` (and a torn WAL ``.tmp``) must be
+    invisible to ``latest_step`` AND garbage-collected by the stale sweep —
+    the restart path's first move (``fault.recovery.recover``)."""
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 10, {"w": jnp.arange(4.0)})
+        torn_dir = os.path.join(d, "step_20.tmp")
+        os.makedirs(torn_dir)
+        with open(os.path.join(torn_dir, "host0.npz"), "wb") as f:
+            f.write(b"torn")  # partially written shard
+        torn_wal = os.path.join(d, "wal_21.npz.tmp")
+        with open(torn_wal, "wb") as f:
+            f.write(b"torn")
+        assert latest_step(d) == 10  # ignored...
+        assert latest_step(d, clean_stale_files=True) == 10  # ...and swept
+        assert not os.path.exists(torn_dir)
+        assert not os.path.exists(torn_wal)
+        assert clean_stale(d) == []  # idempotent: nothing stale remains
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(
+        st.sampled_from(("i32", "bool")),
+        st.lists(st.integers(-2 ** 31, 2 ** 31 - 1), min_size=1, max_size=8),
+    ),
+    min_size=1, max_size=5,
+))
+def test_property_checkpoint_int_bool_roundtrip(leaves):
+    """Engine-state trees are int32/bool (ring words, counters, masks) —
+    unlike the float training states the checkpointer grew up on. Any such
+    tree must roundtrip save->restore bit-for-bit, dtypes intact."""
+    tree = {}
+    for i, (kind, vals) in enumerate(leaves):
+        arr = np.asarray(vals, np.int64)
+        tree[f"leaf{i}"] = (
+            jnp.asarray(arr.astype(np.int32))
+            if kind == "i32" else jnp.asarray(arr % 2 == 0)
+        )
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+        )
+        out, step = restore(d, 1, like)
+        assert step == 1
+        for k in tree:
+            assert out[k].dtype == tree[k].dtype, k
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(tree[k]))
+
+
 def test_checkpoint_restore_shape_mismatch_raises():
     with tempfile.TemporaryDirectory() as d:
         save(d, 1, {"w": jnp.zeros((4,))})
@@ -225,12 +279,70 @@ def test_retries_only_on_transient():
                      retries=5, backoff=0.001)
 
 
+def test_retries_backoff_schedule():
+    """The injectable sleep captures the exact exponential schedule:
+    backoff * 2**(k-1) per retry k, no jitter by default."""
+    delays = []
+    calls = {"n": 0}
+
+    def always_transient():
+        calls["n"] += 1
+        raise RuntimeError("UNAVAILABLE")
+
+    with pytest.raises(RuntimeError):
+        with_retries(always_transient, retries=4, backoff=0.1,
+                     sleep=delays.append)
+    assert calls["n"] == 5  # initial try + 4 retries
+    np.testing.assert_allclose(delays, [0.1, 0.2, 0.4, 0.8])
+
+
+def test_retries_jitter_bounded_and_seeded():
+    """Jittered delays stay inside [1-j, 1+j] x the exponential base, vary
+    within a run, and reproduce exactly under a seeded rng."""
+    import random as _random
+
+    def run_once(seed):
+        delays = []
+        with pytest.raises(RuntimeError):
+            with_retries(
+                lambda: (_ for _ in ()).throw(RuntimeError("UNAVAILABLE")),
+                retries=6, backoff=0.1, jitter=0.5,
+                sleep=delays.append, rng=_random.Random(seed),
+            )
+        return delays
+
+    a, b = run_once(3), run_once(3)
+    assert a == b  # seeded -> reproducible
+    bases = [0.1 * 2 ** k for k in range(6)]
+    assert any(abs(d - base) > 1e-12 for d, base in zip(a, bases))
+    for d, base in zip(a, bases):
+        assert 0.5 * base <= d <= 1.5 * base
+
+
 def test_heartbeat_detects_dead_hosts():
     with tempfile.TemporaryDirectory() as d:
         h0, h1 = Heartbeat(d, 0), Heartbeat(d, 1)
         h0.beat(); h1.beat()
         assert Heartbeat.dead_hosts(d, timeout=60) == []
         assert Heartbeat.dead_hosts(d, timeout=0.0, now=time.time() + 10) == [0, 1]
+
+
+def test_heartbeat_expiry_boundary_and_rebeat():
+    """Expiry is strict (age > timeout, not >=), per host — and a re-beat
+    resurrects a host the coordinator had declared dead."""
+    with tempfile.TemporaryDirectory() as d:
+        h0, h1 = Heartbeat(d, 0), Heartbeat(d, 1)
+        h0.beat(); h1.beat()
+        t1 = os.path.getmtime(h1.path)
+        # age h0 only: 30s older than h1's beat
+        os.utime(h0.path, (t1 - 30.0, t1 - 30.0))
+        assert Heartbeat.dead_hosts(d, timeout=30.0, now=t1) == []  # strict
+        assert Heartbeat.dead_hosts(d, timeout=29.0, now=t1) == [0]
+        assert Heartbeat.dead_hosts(d, timeout=10.0, now=t1 + 15) == [0, 1]
+        h0.beat()  # resurrect
+        now = os.path.getmtime(h0.path)
+        os.utime(h1.path, (now - 30.0, now - 30.0))  # h1 went quiet
+        assert Heartbeat.dead_hosts(d, timeout=10.0, now=now) == [1]
 
 
 # ------------------------------- placement ---------------------------------
