@@ -26,6 +26,7 @@ full configs lower through the same code path):
 from __future__ import annotations
 
 import functools
+import tempfile
 import time
 
 import jax
@@ -37,6 +38,7 @@ from benchmarks.common import measure, row
 from repro.configs import get_config, reduced
 from repro.core import engine as eng
 from repro.core import ringbuf as rb
+from repro.fault import recovery as frec
 from repro.launch.serve import build_engine
 from repro.models import attention as attn_mod
 from repro.models import (
@@ -391,6 +393,98 @@ def _poisson_arm(rows, cfg, ctx, params):
     ))
 
 
+def _durability_arm(rows, cfg, ctx, params):
+    """Durability overhead at equal flush cadence: off vs full snapshots
+    vs PR 9's per-flush npz WAL vs the log-structured streaming WAL.
+
+    Identical workload and delta content per arm — the comparison isolates
+    the container. The acceptance asserts are the streaming log's whole
+    claim: fewer bytes/step than npz (no zip central directory, no
+    per-member headers) and fewer fsyncs than records (group commit)."""
+    p_len, g_len, ps, slots = 8, 12, 4, 4
+    ecfg = eng.LMEngineConfig(
+        num_queues=2, capacity=16, prompt_len=p_len, gen_len=g_len,
+        slots=slots, admit_per_step=2, cache_len=p_len + g_len + 2,
+        paged=True, page_size=ps, kernel_backend="ref")
+    n_req = 8 if common.SMOKE else 24
+    rng = np.random.default_rng(9)
+    prompts = rng.integers(1, cfg.vocab_size, (n_req, p_len)).astype(np.int32)
+    every = 2
+
+    def loop(dcfg):
+        step, state = build_engine(cfg, ctx, ecfg, params)
+        mgr = frec.DurabilityManager(dcfg) if dcfg is not None else None
+        nq = ecfg.num_queues
+        sent = done = tick = 0
+        per_tick = []
+        while done < n_req and tick < n_req * (g_len + 16):
+            free = np.asarray(rb.free_slots(state.req))
+            qids, pls = [], []
+            for q in range(nq):
+                if sent < n_req and free[q] > 0:
+                    qids.append(q)
+                    pls.append(prompts[sent])
+                    sent += 1
+            if qids:
+                state = eng.lm_inject(state, jnp.asarray(qids, I32),
+                                      jnp.asarray(np.stack(pls)))
+            t0 = time.perf_counter()
+            state = step(state)
+            jax.block_until_ready(state.resp.tail)
+            if mgr is not None and (tick + 1) % every == 0:
+                mgr.flush(state)
+            per_tick.append((time.perf_counter() - t0) * 1e6)
+            tick += 1
+            avail = np.asarray(rb.available(state.resp))
+            if avail.sum():
+                done += int(avail.sum())
+                state = state._replace(resp=rb.pop(
+                    state.resp, jnp.arange(nq, dtype=I32),
+                    jnp.asarray(avail, I32)))
+        assert done == n_req, f"only {done}/{n_req} completed"
+        stats = None
+        if mgr is not None:
+            mgr.wait()
+            stats = mgr.stats()
+        return np.asarray(per_tick), tick, stats
+
+    arms = [
+        ("off", lambda d: None),
+        ("full", lambda d: frec.DurabilityConfig(d, every=every, mode="full")),
+        # snapshot_every past the run length: after the one mandatory base
+        # snapshot both WAL arms stream identical delta content, so
+        # bytes/step differences are pure container overhead
+        ("wal_npz", lambda d: frec.DurabilityConfig(
+            d, every=every, snapshot_every=10_000, mode="delta",
+            wal="npz")),
+        ("wal_stream", lambda d: frec.DurabilityConfig(
+            d, every=every, snapshot_every=10_000, mode="delta",
+            wal="segment", group_records=4)),
+    ]
+    results = {}
+    for name, mk in arms:
+        with tempfile.TemporaryDirectory(prefix="orca_lm_dur_") as d:
+            per_tick, ticks, stats = loop(mk(d))
+        bps = stats["disk_bytes"] / ticks if stats else 0.0
+        results[name] = (bps, stats)
+        notes = f"ticks={ticks};completed={n_req}/{n_req}"
+        if stats is not None:
+            notes += (f";disk_bytes_per_step={bps:.0f}"
+                      f";fsyncs={stats['fsyncs']}"
+                      f";wal_records={stats['wal_records']}"
+                      f";flush_wait_us={stats['flush_wait_us']:.0f}"
+                      f";flushes_skipped={stats['flushes_skipped']}")
+        rows.append(row(f"lm_durability_{name}",
+                        float(np.percentile(per_tick, 50)), notes))
+    assert results["wal_stream"][0] < results["wal_npz"][0], (
+        f"streaming WAL must undercut per-flush npz on bytes/step: "
+        f"{results['wal_stream'][0]:.0f} vs {results['wal_npz'][0]:.0f}")
+    st_s = results["wal_stream"][1]
+    assert st_s["fsyncs"] < st_s["wal_records"], (
+        f"group commit missing: {st_s['fsyncs']} fsyncs for "
+        f"{st_s['wal_records']} records")
+
+
 def run():
     rows = []
     cfg = reduced(get_config("qwen1.5-0.5b")).replace(dtype="float32")
@@ -401,6 +495,7 @@ def run():
         _engine_arm(rows, cfg, ctx, params, slots)
     _skew_arm(rows)
     _poisson_arm(rows, cfg, ctx, params)
+    _durability_arm(rows, cfg, ctx, params)
     return rows
 
 

@@ -342,7 +342,12 @@ def _durability_rows():
                 f";throughput_per_step={rep['throughput_per_step']:.2f}"
                 f";flush_bytes_per_step={rep['flush_bytes_per_step']:.0f}"
                 f";flush_full={rep['flush_full']}"
-                f";flush_delta={rep['flush_delta']}",
+                f";flush_delta={rep['flush_delta']}"
+                f";fsyncs={rep['fsyncs']}"
+                f";wal_records={rep['wal_records']}"
+                f";disk_bytes_per_step={rep['disk_bytes_per_step']:.0f}"
+                f";flush_wait_us={rep['flush_wait_us']:.0f}"
+                f";flushes_skipped={rep['flushes_skipped']}",
             ))
     finally:
         shutil.rmtree(root, ignore_errors=True)

@@ -13,6 +13,12 @@ restart via ``fault.recovery.recover`` + WAL replay, then resume — with
 the recovered state asserted bit-for-bit against a never-crashed control
 twin and every pre-crash landing conserved across the boundary.
 
+``--crash --app lm`` aims the crash arm at the paged LM engine instead
+(``repro.fault.soak.run_lm_crash_soak``): streaming-WAL deltas of dirty
+KV pages + the host cold tier's parked slabs, a torn segment tail left at
+the kill point, torn-tail truncation at the last valid CRC on recovery,
+and per-queue token streams byte-identical to the never-crashed twin.
+
 Exits non-zero on any violation; prints the counters as JSON on success
 (``--out`` additionally persists the JSON as a CI artifact)."""
 import argparse
@@ -30,9 +36,38 @@ def main(argv=None):
     ap.add_argument("--crash", action="store_true",
                     help="crash-restart soak (durability + recovery) "
                          "instead of the fault-schedule soak")
+    ap.add_argument("--app", choices=("tx", "lm"), default="tx",
+                    help="crash-soak application: the TX chain engine, or "
+                         "the paged LM engine with a host cold tier in "
+                         "the persistence domain "
+                         "(soak.run_lm_crash_soak; requires --crash)")
     ap.add_argument("--out", type=str, default=None,
                     help="also write the report JSON to this path")
     args = ap.parse_args(argv)
+    if args.app == "lm" and not args.crash:
+        ap.error("--app lm only has a crash arm; pass --crash")
+    if args.app == "lm":
+        report = soak.run_lm_crash_soak(seed=args.seed, steps=args.steps)
+        out = {
+            "seed": args.seed,
+            "mode": "crash-lm",
+            "covered": report["covered"],
+            "crash_at": report["crash_at"],
+            "torn_segment_truncated":
+                report["main"]["crash"]["torn_segment_truncated"],
+            "delivered": {str(q): len(report["main"]["delivered"][q])
+                          for q in report["main"]["delivered"]},
+            "durability": report["stats"],
+            "evictions": report["main"]["evictions"],
+            "restores": report["main"]["restores"],
+            "wall_ticks": report["main"]["wall_ticks"],
+        }
+        text = json.dumps(out, indent=2)
+        print(text)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        return 0
     if args.crash:
         report = soak.run_crash_soak(seed=args.seed, steps=args.steps)
     else:

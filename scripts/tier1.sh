@@ -31,6 +31,13 @@ if [[ "$SMOKE" == 1 ]]; then
   # artifact rides the CI upload next to the bench rows
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fault_soak.py --crash --seed 11 --steps 80 --out SOAK_crash.json > /dev/null
   echo "crash-recovery soak OK"
+  echo "--- LM crash-recovery soak (paged pool + cold tier, streaming WAL) ---"
+  # run_lm_crash_soak kills the paged LM engine mid-decode leaving a torn
+  # streaming-WAL segment tail; recovery truncates at the last valid CRC,
+  # replays dirty-page deltas + cold-tier slabs, and asserts recovered
+  # state + per-queue token streams bit-for-bit vs a never-crashed twin
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/fault_soak.py --crash --app lm --seed 3 --steps 30 --out SOAK_crash_lm.json > /dev/null
+  echo "LM crash-recovery soak OK"
   echo "--- smoke benchmarks (a few iterations per arm) ---"
   # bench_kvs's kvs_get_zipf0.9_cached arm asserts measured hit_rate > 0
   # under --smoke, so a dead cache tier (probe or CLOCK maintenance) fails

@@ -10,3 +10,10 @@ from repro.checkpoint.checkpointer import (
     save_delta,
 )
 from repro.checkpoint.elastic import resume, shardings_for
+from repro.checkpoint.wal import (
+    SegmentWriter,
+    gc_covered,
+    list_segments,
+    read_segments,
+    scan_segment,
+)

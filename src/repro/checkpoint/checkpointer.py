@@ -122,6 +122,10 @@ class AsyncCheckpointer:
         host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
         self.submit(lambda: save(self.directory, step, host_tree))
 
+    def busy(self) -> bool:
+        """True while the previous flush is still running (submit would block)."""
+        return self._thread is not None and self._thread.is_alive()
+
     def wait(self):
         if self._thread is not None:
             self._thread.join()

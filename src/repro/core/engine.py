@@ -118,10 +118,15 @@ class EngineState(NamedTuple):
       ``transaction.replay_records``).
     * **derivable** — ``cpoll`` completion words: recomputed from the
       restored ring counters by the first post-recovery step's cpoll
-      scan, exactly as a doorbell re-ring would. The LM engine's
-      ``host_pages`` cold tier lives *outside* this persistence domain
-      (host numpy arrays; ``launch/serve.py`` refuses ``--snapshot-dir``
-      with ``host_pages > 0``).
+      scan, exactly as a doorbell re-ring would.
+
+    The LM engine (``LMEngineState``) is in the same persistence domain:
+    its paged pool (``decode.k_pages``/``v_pages``, page table, free
+    stack, residency) and slot scalars are durable — flushed as dirty
+    *pages* between snapshots — and the ``host_pages`` cold tier's slabs
+    + allocator bookkeeping ride along in the flush payload
+    (``HostColdTier.state_arrays``), so ``recover(..., cold=tier)``
+    restores residency maps and cold slabs together.
 
     Because every counter is monotonic (``ringbuf`` convention), a
     restored snapshot is *consistent by construction* at its step
@@ -759,7 +764,8 @@ def _lm_step_paged(state: LMEngineState, cfg: LMEngineConfig, model_cfg, ctx,
 # Host-boundary swap service: device pool <-> host cold tier
 # ---------------------------------------------------------------------------
 
-def make_swap_service(cfg: LMEngineConfig, model_cfg, ctx):
+def make_swap_service(cfg: LMEngineConfig, model_cfg, ctx, *, budget=None,
+                      cold=None):
     """Build the step-boundary evict/restore policy for an oversubscribed
     paged engine (``cfg.host_pages > 0``).
 
@@ -781,14 +787,21 @@ def make_swap_service(cfg: LMEngineConfig, model_cfg, ctx):
       outnumber free pages: the *youngest* hot non-terminal slot (fewest
       generated tokens = fewest pages lost to the transfer), and never
       the only hot runner — someone must keep decoding to free pages.
+
+    ``budget`` (a ``placement.MemoryBudget``) charges parked pages to the
+    shared DRAM/NVM ledger the durability tier also reads — eviction is
+    additionally gated on budget headroom. Pass ``cold`` to reuse an
+    existing tier (the crash-recovery path restores into it).
     """
     from repro.serving import kv_cache as pk
 
     if cfg.host_pages <= 0:
         raise ValueError("make_swap_service needs cfg.host_pages > 0")
     pcfg = lm_paged_kv_config(cfg, model_cfg, ctx)
-    cold = pk.HostColdTier(pcfg, cfg.host_pages,
-                           dtype=jnp.dtype(model_cfg.dtype))
+    if cold is None:
+        cold = pk.HostColdTier(pcfg, cfg.host_pages,
+                               dtype=jnp.dtype(model_cfg.dtype),
+                               budget=budget)
     swap_out_fn = jax.jit(lambda kv, seq: pk.swap_out(kv, pcfg, seq))
     swap_in_fn = jax.jit(lambda kv, seq, k, v: pk.swap_in(kv, pcfg, seq, k, v))
     mppr = pcfg.max_pages_per_seq
@@ -831,7 +844,7 @@ def make_swap_service(cfg: LMEngineConfig, model_cfg, ctx):
                 order = np.argsort(done, kind="stable")
                 victim = next((int(s) for s in order if cand[s]), None)
                 npg = 0 if victim is None else -(-int(lengths[victim]) // ps)
-                if victim is not None and cold.can_store(npg):
+                if victim is not None and cold.can_accept(victim, npg):
                     kvs, k, v, ok = swap_out_fn(kvs, jnp.asarray(victim, I32))
                     if bool(jax.device_get(ok)):
                         cold.store(victim, k, v, npg)

@@ -16,10 +16,13 @@ four layers, one module each:
   authority over ``core.transaction``'s ``live`` mask) and
   :func:`resync_replica` (log-replay resync, bit-for-bit).
 * ``recovery`` — crash-consistent durability: :class:`DurabilityManager`
-  (periodic full-snapshot / WAL-delta flushes of the engine state to the
-  host NVM tier through the atomic checkpoint protocol, full-vs-delta
-  decided per flush from measured dirty bytes) and :func:`recover` (the
-  restart path: latest committed snapshot + redo-log replay, bit-for-bit).
+  (periodic full-snapshot flushes through the atomic checkpoint protocol
+  plus a log-structured streaming WAL — ``checkpoint.wal``'s CRC-framed,
+  group-fsynced segments — with full-vs-delta decided per flush from
+  measured dirty bytes against the shared ``placement.MemoryBudget``)
+  and :func:`recover` (the restart path: latest committed snapshot +
+  torn-tail-truncating WAL replay, bit-for-bit; with ``cold=`` it
+  restores the LM host cold tier too).
 * ``soak`` — the acceptance harness: :func:`~repro.fault.soak.run_soak`
   (conservation + control-twin equality under a seeded fault schedule;
   ``scripts/fault_soak.py`` is the tier-1 smoke entry),
@@ -35,7 +38,7 @@ from repro.fault.inject import (
     request_with_retries,
 )
 from repro.fault.recovery import (
-    DurabilityConfig, DurabilityManager, derive_tx_cfg, recover,
+    DurabilityConfig, DurabilityManager, FlushRecord, derive_tx_cfg, recover,
 )
 from repro.fault.watchdog import (
     Heartbeat, StragglerDetector, is_transient, with_retries,
@@ -44,6 +47,7 @@ from repro.fault.watchdog import (
 __all__ = [
     "FAULT_CLASSES", "FaultConfig", "FaultInjector", "NackError",
     "request_with_retries", "ChainMonitor", "resync_replica",
-    "DurabilityConfig", "DurabilityManager", "derive_tx_cfg", "recover",
+    "DurabilityConfig", "DurabilityManager", "FlushRecord", "derive_tx_cfg",
+    "recover",
     "Heartbeat", "StragglerDetector", "is_transient", "with_retries",
 ]

@@ -1,41 +1,52 @@
-"""Engine durability & crash recovery: host NVM-tier snapshots + WAL replay.
+"""Engine durability & crash recovery: log-structured WAL + NVM snapshots.
 
 ORCA's fourth component moves accelerator state adaptively over the link
 into a DRAM+NVM server memory system; this module models that NVM tier with
-the atomic-rename checkpointer and gives the request engine crash
-consistency:
+the atomic-rename checkpointer plus a **log-structured streaming WAL**
+(``checkpoint.wal``) and gives the request engines crash consistency:
 
-* :class:`DurabilityManager` — periodic flushes of the full
-  :class:`~repro.core.engine.EngineState` through
-  ``checkpoint.checkpointer``'s ``step_N.tmp``→rename commit protocol, on
-  its one-outstanding background thread (``AsyncCheckpointer.submit``) so
-  serialization overlaps the jitted engine step. Between full snapshots the
-  **WAL-delta** mode persists only what changed: the TX redo-log records
-  past a per-replica high-water mark (the store is *derivable* — see
-  ``core.transaction``'s classification) or a KVS dirty-row delta diffed
-  against a shadow copy (the KVS has no log — see ``core.kvstore``). The
-  full-vs-delta decision is re-made **per flush from measured dirty bytes**
-  (the paper's adaptive DRAM-vs-NVM split): a mostly-dirty state flushes
-  whole, a lightly-dirty one ships the delta.
+* :class:`DurabilityManager` — periodic flushes of an engine state through
+  the checkpointer's one-outstanding worker thread. The driver side of
+  ``flush`` only snapshots device buffers to host (so donated buffers may
+  be reused immediately); the delta diff, the full-vs-delta decision, and
+  the writes all run **on the worker**, overlapped with the jitted step.
+  Between full snapshots (``step_N.tmp``→rename protocol) the WAL-delta
+  modes *append* records to a shared ``seg_<N>.log`` segment — CRC-framed,
+  group-fsynced (one fsync per ``group_records`` records, not per record)
+  — and a full snapshot rotates the segment and GCs everything it covers.
+  Delta payloads per app: TX redo-log records past a per-replica
+  high-water mark (the store is *derivable* — ``core.transaction``'s
+  classification), a KVS dirty-row diff against a shadow copy, or the LM
+  paged pool's dirty *pages* (page axis diff of ``decode.k_pages`` /
+  ``v_pages`` and the host cold tier's slabs). The full-vs-delta decision
+  is re-made per flush from measured dirty bytes, and when a
+  ``placement.MemoryBudget`` is attached the dirty threshold scales with
+  the shared DRAM/NVM ledger's occupancy — one budget governs KV-page
+  eviction and durability placement (the paper's unified server memory).
 * :func:`recover` — restart path: garbage-collect torn ``.tmp`` leftovers,
-  restore the latest committed snapshot, then replay the chained WAL deltas
-  record-by-record (``transaction.replay_records`` — the same loop
-  ``fault.chain.resync_replica`` uses replica→replica, here disk→engine).
-  The result is bit-for-bit the state the engine held at the last committed
-  flush.
+  **truncate torn segment tails at the last valid CRC frame** (keeping
+  every record a group fsync covered), restore the latest committed
+  snapshot, then replay chained WAL records in step order. Passing the
+  restarted process's ``HostColdTier`` as ``cold`` restores the LM cold
+  slabs and allocator bookkeeping too — the paged pool and its host tier
+  are inside the persistence domain.
 
 Release semantics (group commit, driven by ``fault.soak``): a response is
 delivered to the client only once a *committed* flush covers its
-production (``resp.tail``). Combined with the monotonic ring counters this
-gives exactly-once across a crash: delivered responses are never
-re-executed (their production is inside the restored state — at most they
+production (``resp.tail``). A flush commits when its bytes are fsynced —
+on snapshot rename for full flushes, on the group fsync for streamed
+records — so the driver gates on ``last_committed()``, not on submit
+order. Combined with the monotonic ring counters this gives exactly-once
+across a crash: delivered responses are never re-executed (at most they
 re-surface from restored ring bytes and the client dedupes by per-queue
 position), and requests that landed after the last committed flush are
-provably unanswered (wiped from the restored ring, never covered, hence
-never delivered) — the driver NACKs and resubmits exactly those.
+provably unanswered — the driver NACKs and resubmits exactly those.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import time
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -43,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpointer as ckpt
+from repro.checkpoint import wal
 from repro.core import kvstore
 from repro.core import transaction as tx
 
@@ -51,8 +63,11 @@ I32 = jnp.int32
 # delta-record kind tags (stored in the WAL metadata)
 KIND_TX = 0
 KIND_KVS = 1
+KIND_LM = 2
 
 _TX_BIG = (".app/.log", ".app/.store")
+_LM_BIG_SUFFIXES = (".decode/.k_pages", ".decode/.v_pages")
+_COLD_BIG = ("cold/k", "cold/v")
 
 
 class DurabilityConfig(NamedTuple):
@@ -63,24 +78,41 @@ class DurabilityConfig(NamedTuple):
     the delta modes (bounds replay length). ``mode``: ``"full"`` = every
     flush is a full snapshot; ``"delta"`` = WAL-delta between snapshots;
     ``"adaptive"`` = delta, escaping to full when measured dirty bytes
-    exceed ``dirty_threshold`` × full-state bytes."""
+    exceed ``dirty_threshold`` × full-state bytes. ``wal``: ``"segment"``
+    streams deltas into group-fsynced ``seg_<N>.log`` files (one fsync per
+    ``group_records``); ``"npz"`` is the legacy one-file-one-fsync
+    ``wal_<N>.npz`` path kept for the durability bench baseline.
+    ``skip_busy``: drop a flush instead of stalling the driver behind a
+    slow previous one (counted in ``flushes_skipped``)."""
 
     directory: str
     every: int = 1
     snapshot_every: int = 32
     mode: str = "adaptive"
     dirty_threshold: float = 0.5
+    wal: str = "segment"
+    group_records: int = 4
+    segment_bytes: int = 1 << 20
+    skip_busy: bool = False
 
 
-class FlushRecord(NamedTuple):
-    """One committed flush, as the release-gating driver sees it."""
+@dataclasses.dataclass
+class FlushRecord:
+    """One flush, as the release-gating driver sees it.
+
+    Created by ``flush`` with the at-capture ring coverage; ``kind`` /
+    ``bytes`` are resolved by the worker (read them after ``wait()``), and
+    ``committed`` flips once the record's bytes are fsynced — snapshot
+    rename for fulls, the group fsync for streamed deltas."""
 
     step: int
-    kind: str  # "full" | "delta"
+    kind: str  # "pending" -> "full" | "delta" | "skipped"
     bytes: int
     req_tail: np.ndarray  # (Q,) landing coverage at capture
     resp_tail: np.ndarray  # (Q,) production coverage at capture
     resp_head: np.ndarray  # (Q,) drain position at capture
+    committed: bool = False
+    wait_us: float = 0.0  # driver stall joining the previous flush
 
 
 def _app_kind(app) -> str:
@@ -89,6 +121,26 @@ def _app_kind(app) -> str:
     if isinstance(app, kvstore.KVState):
         return "kvs"
     return "opaque"
+
+
+def _tree_kind(host) -> str:
+    """Durability classification of a host engine state."""
+    app = getattr(host, "app", None)
+    if app is not None:
+        return _app_kind(app)
+    decode = getattr(host, "decode", None)
+    if decode is not None and hasattr(decode, "k_pages"):
+        return "lm"  # paged LM pool: page-granular dirty diff
+    return "opaque"
+
+
+def _lm_page_keys(flat) -> list[str]:
+    """Flat keys diffed along the page axis (axis 1) for LM deltas."""
+    out = []
+    for key in flat:
+        if key.endswith(_LM_BIG_SUFFIXES) or key in _COLD_BIG:
+            out.append(key)
+    return out
 
 
 def derive_tx_cfg(app: tx.ReplicaState) -> tx.TxConfig:
@@ -107,88 +159,147 @@ def derive_tx_cfg(app: tx.ReplicaState) -> tx.TxConfig:
     )
 
 
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
 class DurabilityManager:
     """Flush engine state to the host NVM tier; one outstanding flush.
 
     ``flush(state)`` snapshots to host synchronously (so donated device
-    buffers may be reused immediately), picks full-vs-delta from measured
-    dirty bytes, and submits the file write to the checkpointer's single
-    worker thread. ``records`` lists every *submitted* flush (with its
-    payload bytes — the bench's flush-bytes-per-step metric);
-    ``committed`` lists every flush whose atomic rename has completed —
-    the driver releases responses only up to the newest committed
-    coverage. ``wait()`` drains the worker (joining surfaces any write
-    error)."""
+    buffers may be reused immediately) and submits everything else —
+    dirty diff, full-vs-delta decision, snapshot write or streamed WAL
+    append — to the checkpointer's single worker thread. ``records``
+    lists every flush (with its payload bytes once the worker resolves
+    them); ``committed`` lists flushes whose bytes are fsynced — the
+    driver releases responses only up to ``last_committed()`` coverage.
+    ``wait()`` drains the worker *and* forces the trailing group fsync, so
+    after it every submitted flush is durable.
 
-    def __init__(self, cfg: DurabilityConfig):
+    ``budget`` (a ``placement.MemoryBudget``) folds shared-ledger pressure
+    into the adaptive split; ``cold`` (a ``HostColdTier``) pulls the LM
+    host slabs into every flush payload (wrapped as
+    ``{"engine": state, "cold": arrays}``)."""
+
+    def __init__(self, cfg: DurabilityConfig, *, budget=None, cold=None):
         self.cfg = cfg
+        self.budget = budget
+        self.cold = cold
         self._ckpt = ckpt.AsyncCheckpointer(cfg.directory)
+        self._writer = (
+            wal.SegmentWriter(cfg.directory, segment_bytes=cfg.segment_bytes)
+            if cfg.wal == "segment" else None
+        )
         self._base_step: Optional[int] = None
         self._prev_covered: Optional[int] = None
         self._hw: Optional[np.ndarray] = None  # TX per-replica high-water
-        self._shadow: dict[str, np.ndarray] = {}  # KVS big arrays @ last flush
+        self._shadow: dict[str, np.ndarray] = {}  # big arrays @ last flush
         self.records: list[FlushRecord] = []
-        # appended by the worker thread after each atomic commit; reading a
-        # list snapshot from the driver thread is safe under the GIL
+        # appended by the worker thread once durable; reading a list
+        # snapshot from the driver thread is safe under the GIL
         self._committed: list[FlushRecord] = []
+        self._pending: list[FlushRecord] = []  # appended, not yet fsynced
+        # backpressure / amortization stats (the satellite surface)
+        self.flush_wait_us = 0.0
+        self.flushes_skipped = 0
+        self.disk_bytes = 0
+        self.gc_removed = 0
+        self._npz_fsyncs = 0
+        self._npz_records = 0
 
     # -- flush ------------------------------------------------------------
 
     def flush(self, state) -> FlushRecord:
-        """Flush ``state`` (an ``EngineState``); returns the submitted
-        record. The flush is durable once it appears in ``committed``."""
-        host = jax.tree_util.tree_map(
-            np.asarray, jax.device_get(state)
-        )
+        """Flush ``state`` (an engine state); returns the submitted record.
+        The flush is durable once ``committed`` flips (after the snapshot
+        rename / the covering group fsync)."""
+        host = jax.tree_util.tree_map(np.asarray, jax.device_get(state))
         step = int(host.steps)
-        flat = ckpt._flatten(host)
-        # getattr: the LM serving state has no .app field — it flushes as
-        # an opaque tree (always full snapshots; launch/serve.py)
-        kind = _app_kind(getattr(host, "app", None))
+        tree: Any = host
+        if self.cold is not None:
+            tree = {"engine": host, "cold": self.cold.state_arrays()}
+        rec = FlushRecord(
+            step, "pending", 0,
+            host.req.tail.copy(), host.resp.tail.copy(), host.resp.head.copy(),
+        )
+        if self.cfg.skip_busy and self._ckpt.busy():
+            rec.kind = "skipped"
+            self.flushes_skipped += 1
+            self.records.append(rec)
+            return rec
+        t0 = time.perf_counter()
+        self._ckpt.submit(lambda: self._worker_flush(rec, host, tree, step))
+        rec.wait_us = (time.perf_counter() - t0) * 1e6
+        self.flush_wait_us += rec.wait_us
+        self.records.append(rec)
+        return rec
+
+    def _worker_flush(self, rec: FlushRecord, host, tree, step: int) -> None:
+        """Worker-side half: diff, decide, write. Runs on the single
+        checkpointer thread (submit joins the previous one), so the chain
+        bookkeeping below is only ever touched sequentially."""
+        flat = ckpt._flatten(tree)
         full_bytes = sum(int(np.asarray(v).nbytes) for v in flat.values())
+        kind = _tree_kind(host)
         delta = None
         if kind != "opaque" and self.cfg.mode in ("delta", "adaptive"):
             delta = self._build_delta(host, flat, kind, step)
-        use_full = self._decide(step, delta, full_bytes)
-        if use_full:
-            rec = FlushRecord(
-                step, "full", full_bytes,
-                host.req.tail.copy(), host.resp.tail.copy(),
-                host.resp.head.copy(),
-            )
-            directory = self.cfg.directory
-            self._ckpt.submit(
-                lambda: (ckpt.save(directory, step, host),
-                         self._committed.append(rec))
-            )
+        directory = self.cfg.directory
+        if self._decide(step, delta, full_bytes):
+            rec.kind, rec.bytes = "full", full_bytes
+            # commit streamed records *before* the snapshot supersedes them
+            self._sync_pending()
+            ckpt.save(directory, step, tree)
+            self.disk_bytes += _dir_bytes(os.path.join(directory, f"step_{step}"))
             self._base_step = step
-            if kind == "tx":
-                self._hw = np.atleast_1d(np.asarray(host.app.log_tail)).copy()
-            elif kind == "kvs":
-                self._shadow = {
-                    name: flat[f".app/.{name}"]
-                    for name in kvstore.DURABLE_ROW_ARRAYS
-                }
+            if self._writer is not None:
+                self._writer.rotate()
+            removed = wal.gc_covered(directory, step)
+            self.gc_removed += len(removed)
+            rec.committed = True
+            self._committed.append(rec)
         else:
             arrays, meta, nbytes = delta
-            rec = FlushRecord(
-                step, "delta", nbytes,
-                host.req.tail.copy(), host.resp.tail.copy(),
-                host.resp.head.copy(),
-            )
-            directory = self.cfg.directory
-            self._ckpt.submit(
-                lambda: (ckpt.save_delta(directory, step, arrays, meta),
-                         self._committed.append(rec))
-            )
-            if kind == "tx":
-                self._hw = np.atleast_1d(np.asarray(host.app.log_tail)).copy()
-            elif kind == "kvs":
-                for name in kvstore.DURABLE_ROW_ARRAYS:
-                    self._shadow[name] = flat[f".app/.{name}"]
+            rec.kind, rec.bytes = "delta", nbytes
+            self._npz_records += self._writer is None
+            if self._writer is None:  # legacy one-file-one-fsync npz path
+                path = ckpt.save_delta(directory, step, arrays, meta)
+                self._npz_fsyncs += 1
+                self.disk_bytes += os.path.getsize(path)
+                rec.committed = True
+                self._committed.append(rec)
+            else:
+                self.disk_bytes += self._writer.append(step, arrays, meta)
+                self._pending.append(rec)
+                if len(self._pending) >= self.cfg.group_records:
+                    self._sync_pending()
+        # advance the dirty baselines to this flush point
+        if kind == "tx":
+            self._hw = np.atleast_1d(np.asarray(host.app.log_tail)).copy()
+        elif kind == "kvs":
+            for name in kvstore.DURABLE_ROW_ARRAYS:
+                self._shadow[name] = flat[f".app/.{name}"]
+        elif kind == "lm":
+            for key in _lm_page_keys(flat):
+                self._shadow[key] = flat[key]
+        if self.budget is not None:
+            self.budget.note_write(rec.bytes)
         self._prev_covered = step
-        self.records.append(rec)
-        return rec
+
+    def _sync_pending(self) -> None:
+        """Group commit: one fsync covers every pending streamed record.
+        (``writer.pending`` counts only unsynced appends, so records that
+        an auto-rotation already fsynced commit here without a new one.)"""
+        if self._writer is not None:
+            self._writer.sync()
+        for r in self._pending:
+            r.committed = True
+            self._committed.append(r)
+        self._pending.clear()
 
     def _decide(self, step: int, delta, full_bytes: int) -> bool:
         """The adaptive DRAM-vs-NVM split, per flush from measured bytes."""
@@ -199,7 +310,12 @@ class DurabilityManager:
         arrays, meta, nbytes = delta
         if meta.get("lapped", 0):
             return True  # TX ring lapped the high-water mark: window gone
-        if self.cfg.mode == "adaptive" and nbytes > self.cfg.dirty_threshold * full_bytes:
+        threshold = self.cfg.dirty_threshold
+        if self.budget is not None:
+            # unified server-memory view: the fuller the shared pool, the
+            # more the flush policy prefers the smaller delta write
+            threshold = self.budget.durability_threshold(threshold)
+        if self.cfg.mode == "adaptive" and nbytes > threshold * full_bytes:
             return True  # mostly dirty: the delta stopped paying for itself
         return False
 
@@ -210,7 +326,7 @@ class DurabilityManager:
             "step": step,
             "base_step": -1 if self._base_step is None else self._base_step,
             "prev_covered": -1 if self._prev_covered is None else self._prev_covered,
-            "kind": KIND_TX if kind == "tx" else KIND_KVS,
+            "kind": {"tx": KIND_TX, "kvs": KIND_KVS, "lm": KIND_LM}[kind],
             "lapped": 0,
         }
         big: set[str] = set()
@@ -234,7 +350,7 @@ class DurabilityManager:
                 arrays[f"rows{r}"] = rows
                 meta[f"hw{r}"] = int(hw[r])
                 meta[f"tail{r}"] = int(tails[r])
-        else:  # kvs: materialized dirty-row diff against the shadow copy
+        elif kind == "kvs":  # materialized dirty-row diff against the shadow
             for name in kvstore.DURABLE_ROW_ARRAYS:
                 key = f".app/.{name}"
                 big.add(key)
@@ -250,6 +366,19 @@ class DurabilityManager:
                     idx = np.nonzero(dirty)[0].astype(np.int64)
                 arrays[f"di:{name}"] = idx
                 arrays[f"dr:{name}"] = a[idx]
+        else:  # lm: dirty *pages* (axis 1) of the paged pool + cold slabs
+            for key in _lm_page_keys(flat):
+                big.add(key)
+                a = np.asarray(flat[key])
+                prev = self._shadow.get(key)
+                if prev is None or prev.shape != a.shape:
+                    idx = np.arange(a.shape[1], dtype=np.int64)
+                else:
+                    other = tuple(i for i in range(a.ndim) if i != 1)
+                    dirty = np.any(a != prev, axis=other)
+                    idx = np.nonzero(dirty)[0].astype(np.int64)
+                arrays[f"dp:{key}"] = idx
+                arrays[f"pr:{key}"] = a[:, idx]
         # everything that isn't a diffed big array travels verbatim — ring
         # bytes, counters, cursors are small next to the store/log/pool
         for key, v in flat.items():
@@ -270,8 +399,33 @@ class DurabilityManager:
     def flush_bytes(self) -> int:
         return sum(r.bytes for r in self.records)
 
+    @property
+    def fsyncs(self) -> int:
+        w = self._writer
+        return (w.fsyncs if w is not None else 0) + self._npz_fsyncs
+
+    @property
+    def wal_records(self) -> int:
+        w = self._writer
+        return (w.records if w is not None else 0) + self._npz_records
+
+    def stats(self) -> dict[str, Any]:
+        """Backpressure + amortization counters for engine stats surfaces
+        (soak reports, durability bench rows, serve.py's final print)."""
+        return {
+            "flush_wait_us": round(self.flush_wait_us, 3),
+            "flushes_skipped": self.flushes_skipped,
+            "fsyncs": self.fsyncs,
+            "wal_records": self.wal_records,
+            "disk_bytes": self.disk_bytes,
+            "gc_removed": self.gc_removed,
+        }
+
     def wait(self):
+        """Drain the worker and force the trailing group fsync: after this
+        every submitted flush is committed (the soak's crash barrier)."""
         self._ckpt.wait()
+        self._sync_pending()
 
 
 # ---------------------------------------------------------------------------
@@ -279,15 +433,18 @@ class DurabilityManager:
 # ---------------------------------------------------------------------------
 
 def recover(directory: str, like, *, tx_cfg: Optional[tx.TxConfig] = None,
-            use_ref: bool = True):
+            use_ref: bool = True, cold=None):
     """Restart-recover an engine from its durability directory.
 
-    Cleans torn ``.tmp`` leftovers, restores the latest committed full
-    snapshot into the structure of ``like`` (a live-or-fresh
-    ``EngineState`` of identical geometry), then applies the committed WAL
-    deltas in chain order — TX deltas by per-record replay
-    (:func:`transaction.replay_records`; the store re-derives from the
-    log), KVS deltas by dirty-row scatter + verbatim control overwrite.
+    Cleans torn ``.tmp`` leftovers and truncates torn segment tails at the
+    last valid CRC frame, restores the latest committed full snapshot into
+    the structure of ``like`` (a live-or-fresh engine state of identical
+    geometry), then applies committed WAL records in step order — TX
+    deltas by per-record replay (:func:`transaction.replay_records`; the
+    store re-derives from the log), KVS deltas by dirty-row scatter, LM
+    deltas by dirty-page scatter, each followed by the verbatim control
+    overwrite. With ``cold`` (the restarted process's ``HostColdTier``)
+    the recovered cold slabs + allocator bookkeeping are installed on it.
 
     Returns ``(state, covered_step)`` — ``state.steps == covered_step``,
     bit-for-bit the state at the last committed flush. Raises
@@ -297,23 +454,37 @@ def recover(directory: str, like, *, tx_cfg: Optional[tx.TxConfig] = None,
         raise FileNotFoundError(
             f"recover: no committed snapshot under {directory!r}"
         )
-    state, _ = ckpt.restore(directory, base, like)
+    like_tree: Any = like
+    if cold is not None:
+        like_tree = {"engine": like, "cold": cold.zero_arrays()}
+    tree, _ = ckpt.restore(directory, base, like_tree)
     covered = base
-    for s in ckpt.list_deltas(directory):
+    merged = [(s, None) for s in ckpt.list_deltas(directory)]
+    seg_records, _truncated = wal.read_segments(directory, truncate_torn=True)
+    merged += [(s, (arrays, meta)) for s, arrays, meta in seg_records]
+    merged.sort(key=lambda t: t[0])
+    for s, payload in merged:
         if s <= base:
             continue  # superseded by a later full snapshot
-        arrays, meta = ckpt.load_delta(directory, s)
+        arrays, meta = payload if payload is not None else ckpt.load_delta(directory, s)
         if meta["base_step"] != base or meta["prev_covered"] != covered:
             raise ValueError(
-                f"recover: WAL chain break at wal_{s} (base {meta['base_step']}"
+                f"recover: WAL chain break at step {s} (base {meta['base_step']}"
                 f"/{base}, prev {meta['prev_covered']}/{covered})"
             )
         if meta["kind"] == KIND_TX:
-            state = _apply_tx_delta(state, arrays, meta, tx_cfg, use_ref)
+            tree = _apply_tx_delta(tree, arrays, meta, tx_cfg, use_ref)
+        elif meta["kind"] == KIND_KVS:
+            tree = _apply_kvs_delta(tree, arrays)
         else:
-            state = _apply_kvs_delta(state, arrays)
-        state = _overwrite_control(state, arrays)
+            tree = _apply_lm_delta(tree, arrays)
+        tree = _overwrite_control(tree, arrays)
         covered = s
+    if cold is not None:
+        state = tree["engine"]
+        cold.restore_arrays(tree["cold"])
+    else:
+        state = tree
     assert int(jax.device_get(state.steps)) == covered
     return state, covered
 
@@ -362,6 +533,23 @@ def _apply_kvs_delta(state, arrays):
             jnp.asarray(rows)
         )
     return state._replace(app=app._replace(**updates)) if updates else state
+
+
+def _apply_lm_delta(tree, arrays):
+    """Scatter dirty pages (axis 1) back into the paged pool / cold slabs."""
+    flat = ckpt._flatten(tree)
+    for name, idx in arrays.items():
+        if not name.startswith("dp:"):
+            continue
+        key = name[len("dp:"):]
+        if len(idx) == 0:
+            continue
+        rows = arrays["pr:" + key]
+        base = jnp.asarray(flat[key])
+        flat[key] = base.at[:, jnp.asarray(np.asarray(idx))].set(
+            jnp.asarray(np.asarray(rows), dtype=base.dtype)
+        )
+    return ckpt.rebuild(tree, flat)
 
 
 def _overwrite_control(state, arrays):

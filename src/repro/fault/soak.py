@@ -57,8 +57,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import wal
 from repro.core import engine
 from repro.core import kvstore
+from repro.core import placement
+from repro.core import ringbuf as rb
 from repro.core import status as st
 from repro.core import transaction as tx
 from repro.core import tx_app
@@ -164,14 +167,16 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
     # a send is presumed lost (dropped, or its response shed while we
     # waited) after the worst honest round trip: full queue + max delay +
     # suppressed doorbell + scheduling slack (+ group-commit release lag
-    # when responses wait for a covering flush to commit)
+    # when responses wait for a covering flush to *fsync* — streamed WAL
+    # records commit one group fsync late, so the lag scales with the
+    # group size too)
     resend_after = capacity + 4 + 2 + 10
     if durability is not None:
-        resend_after += 3 * durability.every
+        group = durability.group_records if durability.wal == "segment" else 1
+        resend_after += (3 + group) * durability.every
 
     mgr = frec.DurabilityManager(durability) if durability is not None else None
-    flush_recs = []  # submit order; all but the last are committed (the
-    #                  manager's submit joins the previous worker first)
+    flush_recs = []  # submit order; committed once their bytes are fsynced
     all_flush_recs = []  # cumulative across a crash (mgr is re-created)
     cov = None  # (Q,) committed production coverage; None = nothing durable
     held = {q: collections.deque() for q in range(num_queues)}  # (pos, row)
@@ -285,11 +290,25 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
             with open(twal, "wb") as f:
                 f.write(b"torn delta")
             torn = [tdir, twal]
+        # the kill also tears the streaming WAL mid-append: a frame header
+        # claiming more payload than made it to disk. Recovery must
+        # truncate the segment back to the last valid CRC frame — keeping
+        # every record the group fsync covered — not discard the segment.
+        torn_seg = None
+        segs = wal.list_segments(durability.directory)
+        if torn_flush and segs:
+            torn_seg = segs[-1][1]
+            seg_size = os.path.getsize(torn_seg)
+            with open(torn_seg, "ab") as f:
+                f.write(wal.MAGIC + b"\x40\x00\x00\x00\x00\x00\x00\x00\xde\xad")
         # restart: a fresh process recovers from the NVM tier alone
         like = engine.make(ecfg, tx.make_chain(tx_cfg))
         state, covered = frec.recover(durability.directory, like)
         for p in torn:
             assert not os.path.exists(p), f"torn artifact survived: {p}"
+        if torn_seg is not None:
+            assert os.path.getsize(torn_seg) == seg_size, \
+                "recover did not truncate the torn segment tail"
         # capture the pure recover() output NOW — the control twin compares
         # against this, before wire reconciliation re-rings doorbells and
         # post-flush chain events are re-imposed
@@ -346,6 +365,7 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
             wall_step=now, covered=int(covered), wiped=len(wiped),
             wiped_resubmitted=wiped_resubmitted,
             torn_cleaned=bool(torn),
+            torn_segment_truncated=torn_seg is not None,
             recovered_state=recovered_host,
         )
         # release the durably-popped held rows the recovered coverage spans
@@ -409,11 +429,12 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
                 np.asarray, jax.device_get(state)
             )
         if mgr is not None and engine_now % durability.every == 0:
-            rec = mgr.flush(state)  # submit joins the previous flush, so
-            if flush_recs:          # everything before it is now committed
-                cov = flush_recs[-1].resp_tail
+            rec = mgr.flush(state)
             flush_recs.append(rec)
             all_flush_recs.append(rec)
+            lc = mgr.last_committed()  # release gates on the fsync point,
+            if lc is not None:         # not on submit order
+                cov = lc.resp_tail
         sync_landed()
         drain()
         deliver()
@@ -455,6 +476,7 @@ def _drive(seed: int, steps: int, kill, revive, *, num_queues=3,
         "monitor_events": list(monitor.events),
         "flush_records": list(all_flush_recs),
         "flush_bytes": sum(r.bytes for r in all_flush_recs),
+        "durability_stats": mgr.stats() if mgr is not None else None,
         "crash": crash_info or None,
         "capture": capture.get("state"),
         "config": {"tx": tx_cfg, "engine": ecfg},
@@ -581,6 +603,10 @@ def run_crash_soak(seed: int = 11, steps: int = 80, *, crash_at=None,
         main["responses"], main["counters"])
     assert main["requests"] > 0
     assert main["crash"]["torn_cleaned"] == torn_flush
+    if torn_flush and mode != "full" and dmain.wal == "segment":
+        # streamed deltas existed, so the kill also tore a segment tail —
+        # recovery must have truncated it at the last valid CRC frame
+        assert main["crash"]["torn_segment_truncated"]
     assert main["crash"]["wiped_resubmitted"] <= main["crash"]["wiped"]
     # -- fault & failover coverage still holds under durability ------------
     for c in finj.FAULT_CLASSES:
@@ -677,10 +703,11 @@ def run_durability(seed: int = 0, steps: int = 160, *, app: str = "tx",
 
     def flush_step():
         nonlocal flush_prev, cov
-        rec = mgr.flush(state)  # joins (commits) the previous flush
-        if flush_prev is not None:
-            cov = flush_prev.resp_tail
+        rec = mgr.flush(state)
         flush_prev = rec
+        lc = mgr.last_committed()  # release gates on the fsync point
+        if lc is not None:
+            cov = lc.resp_tail
 
     def drain_and_deliver(now):
         nonlocal state, responses
@@ -742,8 +769,8 @@ def run_durability(seed: int = 0, steps: int = 160, *, app: str = "tx",
             # barrier: flush at the final state, join the worker, release
             if not flushed:
                 flush_step()
-            mgr.wait()
-            cov = np.asarray(flush_prev.resp_tail).copy()
+            mgr.wait()  # drains the worker AND forces the group fsync
+            cov = np.asarray(mgr.last_committed().resp_tail).copy()
             drain_and_deliver(now)
     if mgr is not None:
         mgr.wait()
@@ -766,6 +793,14 @@ def run_durability(seed: int = 0, steps: int = 160, *, app: str = "tx",
         "flush_bytes_per_step": fbytes / max(steps_run, 1),
         "mode": durability.mode if durability else "off",
         "every": durability.every if durability else 0,
+        "wal": durability.wal if durability else "off",
+        # backpressure + amortization counters (bench row satellites)
+        **(mgr.stats() if mgr else {
+            "flush_wait_us": 0.0, "flushes_skipped": 0, "fsyncs": 0,
+            "wal_records": 0, "disk_bytes": 0, "gc_removed": 0,
+        }),
+        "disk_bytes_per_step": (mgr.stats()["disk_bytes"] if mgr else 0)
+        / max(steps_run, 1),
     }
 
 
@@ -842,3 +877,359 @@ def run_overload(seed: int = 0, steps: int = 240, shed: bool = True, *,
         "rejected": rejected, "final_backlog": backlog,
         "steps": steps, "deadline": deadline,
     }
+
+
+# ---------------------------------------------------------------------------
+# LM crash soak: paged decode + host cold tier in the persistence domain
+# ---------------------------------------------------------------------------
+
+_COMPILED_LM = {}
+
+
+def _compiled_lm(model_seed: int, ecfg: engine.LMEngineConfig):
+    """Shared (cfg, ctx, params, step) per config — the step is a pure
+    function of the donated state, so control/main/post-crash twins reuse
+    one compilation."""
+    key = (model_seed, ecfg)
+    if key not in _COMPILED_LM:
+        # lazy: launch.serve imports repro.fault (circular otherwise)
+        from repro.configs import get_config, reduced
+        from repro.launch.serve import build_engine
+        from repro.models import init_params
+        from repro.parallel.sharding import local_context
+
+        cfg = reduced(get_config("qwen1.5-0.5b")).replace(dtype="float32")
+        ctx = local_context()
+        params = init_params(jax.random.key(model_seed), cfg, ctx)
+        step, _state0 = build_engine(cfg, ctx, ecfg, params)
+        _COMPILED_LM[key] = (cfg, ctx, step)
+    return _COMPILED_LM[key]
+
+
+def _drive_lm(seed: int, steps: int, *, ecfg: engine.LMEngineConfig,
+              durability: frec.DurabilityConfig, n_requests: int,
+              crash: bool = False, crash_at: Optional[int] = None,
+              control_capture=None, torn_flush: bool = True):
+    """One LM serving timeline with durable flushes; optionally crash once.
+
+    The client half mirrors ``_drive``'s release discipline: a response row
+    is *delivered* only once a committed flush covers its ring position
+    (``cov`` gates on ``mgr.last_committed().resp_tail``), so both twins
+    pop rings identically and the recovered engine state is bit-for-bit
+    the control twin's state at the covered step. Rows that re-surface
+    after the crash rewind (position below the delivered high-water mark)
+    must be byte-identical to the first delivery — exactly-once.
+    """
+    cfg, ctx, step_fn = _compiled_lm(seed, ecfg)
+
+    def fresh_state():
+        # leaf-copy: the jitted step donates its input, so every twin
+        # must own unaliased buffers
+        return jax.tree_util.tree_map(
+            lambda x: jnp.array(x, copy=True),
+            engine.lm_make_paged(ecfg, cfg, ctx))
+
+    budget = None
+    swap = None
+    cold = None
+    if ecfg.host_pages:
+        pcfg = engine.lm_paged_kv_config(ecfg, cfg, ctx)
+        page_b = (2 * pcfg.layers * pcfg.page_size * pcfg.kv_heads
+                  * pcfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        budget = placement.MemoryBudget(
+            dram_bytes=ecfg.host_pages * page_b, nvm_bytes=1 << 30)
+        # the tier object survives the crash below: recover() restores the
+        # parked slabs into it from the snapshot+WAL stream
+        swap, cold, _ = engine.make_swap_service(
+            ecfg, cfg, ctx, budget=budget, cold=None)
+    mgr = frec.DurabilityManager(durability, budget=budget, cold=cold)
+    stats_acc = {"flush_wait_us": 0.0, "flushes_skipped": 0, "fsyncs": 0,
+                 "wal_records": 0, "disk_bytes": 0, "gc_removed": 0}
+
+    def acc_stats():
+        s = mgr.stats()
+        for k in stats_acc:
+            stats_acc[k] += s[k]
+
+    nq = ecfg.num_queues
+    wl = np.random.default_rng(seed + 1000)
+    prompts = wl.integers(
+        1, cfg.vocab_size, size=(n_requests, ecfg.prompt_len)).astype(np.int32)
+    caps = wl.integers(1, ecfg.gen_len + 1, size=n_requests).astype(np.int32)
+    arrive = np.sort(wl.integers(0, max(steps // 3, 1), size=n_requests))
+    queue_of = np.arange(n_requests) % nq
+    target = {q: int((queue_of == q).sum()) for q in range(nq)}
+
+    pend = {q: collections.deque() for q in range(nq)}
+    sent = {q: [] for q in range(nq)}  # rids in ring order (abs position)
+    delivered = {q: {} for q in range(nq)}  # abs ring position -> row copy
+    state = fresh_state()
+    engine_now = 0
+    next_arrival = 0
+    cov = None
+    flush_recs = []
+    capture = {}
+    crash_info = {}
+
+    def inject(t):
+        nonlocal state, next_arrival
+        while next_arrival < n_requests and arrive[next_arrival] <= t:
+            pend[int(queue_of[next_arrival])].append(next_arrival)
+            next_arrival += 1
+        free = np.asarray(jax.device_get(rb.free_slots(state.req)))
+        qids, rows, cs = [], [], []
+        for q in range(nq):
+            if pend[q] and free[q] > 0:
+                r = pend[q].popleft()
+                qids.append(q)
+                rows.append(prompts[r])
+                cs.append(int(caps[r]))
+                sent[q].append(r)
+        if qids:
+            state = engine.lm_inject(
+                state, jnp.asarray(qids, I32),
+                jnp.asarray(np.stack(rows), I32),
+                gen_caps=jnp.asarray(cs, I32))
+
+    def deliver():
+        nonlocal state
+        if cov is None:
+            return
+        heads = np.asarray(jax.device_get(state.resp.head))
+        avail = np.asarray(jax.device_get(rb.available(state.resp)))
+        counts = np.zeros(nq, np.int64)
+        for q in range(nq):
+            lim = max(0, min(int(avail[q]), int(cov[q]) - int(heads[q])))
+            for j in range(lim):
+                ent = np.asarray(rb.peek(
+                    state.resp, jnp.asarray([q], I32),
+                    jnp.asarray([j], I32)))[0].copy()
+                pos = int(heads[q]) + j
+                if pos in delivered[q]:
+                    # replayed after the crash rewind: byte-identical or bust
+                    assert np.array_equal(delivered[q][pos], ent), (
+                        f"queue {q} pos {pos}: replayed response diverged")
+                else:
+                    delivered[q][pos] = ent
+            counts[q] = lim
+        if counts.sum():
+            state = state._replace(resp=rb.pop(
+                state.resp, jnp.arange(nq, dtype=I32),
+                jnp.asarray(counts, I32)))
+
+    def tick(t):
+        nonlocal state, engine_now, cov
+        inject(t)
+        state = step_fn(state)
+        if swap is not None:
+            state = swap(state)
+        engine_now += 1
+        if control_capture is not None and engine_now == control_capture \
+                and not capture:
+            # same site as the flush's device_get: post-step, post-swap,
+            # pre-delivery — what recover() must reproduce bit-for-bit
+            capture["engine"] = jax.tree_util.tree_map(
+                np.asarray, jax.device_get(state))
+            if cold is not None:
+                capture["cold"] = cold.state_arrays()
+        if engine_now % durability.every == 0:
+            rec = mgr.flush(state)
+            flush_recs.append(rec)
+            lc = mgr.last_committed()
+            if lc is not None:
+                cov = np.asarray(lc.resp_tail).copy()
+        deliver()
+
+    def do_crash():
+        nonlocal state, mgr, cov, engine_now
+        mgr.wait()
+        d = durability.directory
+        # SIGKILL artifacts: a torn snapshot attempt and a torn segment tail
+        tdir = os.path.join(d, f"step_{engine_now + 1}.tmp")
+        os.makedirs(tdir, exist_ok=True)
+        with open(os.path.join(tdir, "host0.npz"), "wb") as f:
+            f.write(b"torn snapshot bytes")
+        torn_seg = None
+        seg_size = None
+        segs = wal.list_segments(d)
+        if torn_flush and segs:
+            torn_seg = segs[-1][1]
+            seg_size = os.path.getsize(torn_seg)
+            with open(torn_seg, "ab") as f:
+                f.write(wal.MAGIC + b"\x40\x00\x00\x00\x00\x00\x00\x00\xde")
+        acc_stats()
+        like = engine.lm_make_paged(ecfg, cfg, ctx)
+        state2, covered = frec.recover(d, like, cold=cold)
+        assert not os.path.exists(tdir), "recover left the torn .tmp behind"
+        if torn_seg is not None:
+            assert os.path.getsize(torn_seg) == seg_size, (
+                "recover did not truncate the torn segment tail")
+        crash_info["covered"] = int(covered)
+        crash_info["torn_segment_truncated"] = torn_seg is not None
+        crash_info["recovered_engine"] = jax.tree_util.tree_map(
+            np.asarray, jax.device_get(state2))
+        if cold is not None:
+            crash_info["recovered_cold"] = cold.state_arrays()
+        state = jax.tree_util.tree_map(
+            lambda x: jnp.array(x, copy=True), state2)
+        engine_now = int(covered)
+        mgr = frec.DurabilityManager(durability, budget=budget, cold=cold)
+        # client reconciliation against the rewound rings: requests past
+        # the recovered req tail were wiped — re-queue them, in order,
+        # ahead of arrivals not yet injected
+        req_tail = np.asarray(jax.device_get(state.req.tail))
+        for q in range(nq):
+            wiped = sent[q][int(req_tail[q]):]
+            sent[q] = sent[q][:int(req_tail[q])]
+            for r in reversed(wiped):
+                pend[q].appendleft(r)
+        cov = np.asarray(jax.device_get(state.resp.tail)).copy()
+        deliver()
+
+    t = 0
+    limit = steps + n_requests * (ecfg.gen_len + 24)
+    while any(len(delivered[q]) < target[q] for q in range(nq)):
+        assert t < limit, (
+            f"LM soak failed to drain: {[len(delivered[q]) for q in range(nq)]}"
+            f" of {target}")
+        tick(t)
+        tails = np.asarray(jax.device_get(state.resp.tail))
+        if crash and not crash_info:
+            # fire by wall tick when pinned, else once half the requests
+            # have *completed* (response enqueued) — guaranteed mid-decode
+            # whatever the delivery pacing, since coverage (and therefore
+            # delivery) trails completion by up to a full commit group
+            fire = (t == crash_at) if crash_at is not None else (
+                int(tails.sum()) >= max(1, n_requests // 2))
+            if fire:
+                do_crash()
+                crash_info["tick"] = t
+                tails = np.asarray(jax.device_get(state.resp.tail))
+        if all(int(tails[q]) >= target[q] for q in range(nq)) \
+                and any(len(delivered[q]) < target[q] for q in range(nq)):
+            # all responses exist in the rings; force the trailing group
+            # commit so coverage catches up and the rings drain
+            rec = mgr.flush(state)
+            flush_recs.append(rec)
+            mgr.wait()
+            cov = np.asarray(mgr.last_committed().resp_tail).copy()
+            deliver()
+        t += 1
+    mgr.wait()
+    acc_stats()
+
+    return {
+        "delivered": delivered,
+        "target": target,
+        "capture": capture or None,
+        "crash": crash_info or None,
+        "flush_records": flush_recs,
+        "durability_stats": stats_acc,
+        "evictions": int(cold.evictions) if cold is not None else 0,
+        "restores": int(cold.restores) if cold is not None else 0,
+        "budget_refusals": int(cold.budget_refusals) if cold is not None else 0,
+        "dir_entries": sorted(os.listdir(durability.directory)),
+        "wall_ticks": t,
+    }
+
+
+def run_lm_crash_soak(seed: int = 3, steps: int = 36, *,
+                      crash_at: Optional[int] = None, directory=None,
+                      every: int = 2, snapshot_every: int = 32,
+                      mode: str = "delta", group_records: int = 4,
+                      n_requests: int = 10, torn_flush: bool = True):
+    """Crash soak for the paged LM engine with a host cold tier.
+
+    The acceptance arm ISSUE 10 adds: SIGKILL-equivalent teardown
+    mid-decode (torn snapshot .tmp + torn streaming-WAL segment tail),
+    recovery replays snapshot + WAL deltas — including dirty KV pages and
+    the cold tier's parked slabs — to the covered step, and the surviving
+    timeline must match a never-crashed control twin:
+
+    - recovered engine state (page pool, rings, slots) and cold-tier
+      arrays are **bit-for-bit** the control twin's state at the covered
+      step;
+    - per-queue delivered token rows are the same multiset, byte-exact
+      (post-crash completion *order* may differ — replayed admissions
+      interleave differently — but every request's token stream is
+      identical and delivered exactly once);
+    - the torn segment tail was truncated at the last valid CRC frame;
+    - group commit did its job: strictly fewer fsyncs than WAL records.
+    """
+    import tempfile
+
+    ecfg = engine.LMEngineConfig(
+        num_queues=2, capacity=8, prompt_len=4, gen_len=6, slots=3,
+        admit_per_step=2, cache_len=16, paged=True, page_size=2,
+        num_pages=8, host_pages=10, expected_gen_len=3,
+        kernel_backend="ref")
+    tmp = None
+    if directory is None:
+        tmp = tempfile.TemporaryDirectory(prefix="orca_lm_soak_")
+        directory = tmp.name
+    try:
+        dmain = frec.DurabilityConfig(
+            os.path.join(directory, "main"), every=every,
+            snapshot_every=snapshot_every, mode=mode,
+            group_records=group_records)
+        dctrl = frec.DurabilityConfig(
+            os.path.join(directory, "ctrl"), every=every,
+            snapshot_every=snapshot_every, mode=mode,
+            group_records=group_records)
+        main = _drive_lm(seed, steps, ecfg=ecfg, durability=dmain,
+                         n_requests=n_requests, crash=True,
+                         crash_at=crash_at, torn_flush=torn_flush)
+        assert main["crash"] is not None, "crash arm never fired"
+        covered = main["crash"]["covered"]
+        ctrl = _drive_lm(seed, steps, ecfg=ecfg, durability=dctrl,
+                         n_requests=n_requests, control_capture=covered)
+
+        # 1) recovery lands exactly on the control twin's covered state
+        assert ctrl["capture"], "control twin never reached the covered step"
+        ce = jax.tree_util.tree_leaves(ctrl["capture"]["engine"])
+        re_ = jax.tree_util.tree_leaves(main["crash"]["recovered_engine"])
+        assert len(ce) == len(re_)
+        for a, b in zip(ce, re_):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                "recovered LM engine state diverged from the control twin "
+                "at the covered step")
+        if "recovered_cold" in main["crash"]:
+            cc = ctrl["capture"]["cold"]
+            rc = main["crash"]["recovered_cold"]
+            assert set(cc) == set(rc)
+            for k in cc:
+                assert np.array_equal(cc[k], rc[k]), (
+                    f"recovered cold-tier array {k!r} diverged")
+        if torn_flush and mode != "full" and dmain.wal == "segment":
+            assert main["crash"]["torn_segment_truncated"], (
+                "crash never left a torn segment tail to truncate")
+
+        # 2) per-queue token streams: same multiset, byte-exact, exactly once
+        for q in range(ecfg.num_queues):
+            assert len(main["delivered"][q]) == main["target"][q]
+            assert len(ctrl["delivered"][q]) == main["target"][q]
+            ms = sorted(tuple(int(x) for x in row)
+                        for row in main["delivered"][q].values())
+            cs_ = sorted(tuple(int(x) for x in row)
+                         for row in ctrl["delivered"][q].values())
+            assert ms == cs_, (
+                f"queue {q}: delivered token rows diverged from control")
+
+        # 3) group commit amortized durability: fewer fsyncs than records
+        st_main = main["durability_stats"]
+        if mode != "full" and dmain.wal == "segment":
+            assert st_main["wal_records"] >= group_records
+            assert st_main["fsyncs"] < st_main["wal_records"], (
+                f"group commit missing: {st_main['fsyncs']} fsyncs for "
+                f"{st_main['wal_records']} WAL records")
+
+        # 4) the cold tier actually took part (mid-decode oversubscription)
+        assert main["evictions"] >= 1, "soak never exercised the cold tier"
+
+        return {"main": main, "ctrl": ctrl, "covered": covered,
+                "ecfg": ecfg._asdict(),
+                "crash_at": main["crash"].get("tick", crash_at),
+                "stats": st_main}
+    finally:
+        if tmp is not None:
+            tmp.cleanup()

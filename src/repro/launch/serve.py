@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import engine as eng
+from repro.core import placement
 from repro.core import ringbuf as rb
 from repro.fault import (
     DurabilityConfig, DurabilityManager, FaultConfig, FaultInjector,
@@ -108,6 +109,12 @@ def main(argv=None):
                          "thread, overlapping the jitted step)")
     ap.add_argument("--snapshot-every", type=int, default=16,
                     help="engine ticks between snapshot flushes")
+    ap.add_argument("--durability-mode", default="full",
+                    choices=("full", "delta", "adaptive"),
+                    help="flush policy: full snapshots, streaming WAL "
+                         "deltas (group-fsynced segment log), or adaptive "
+                         "(measured dirty fraction + MemoryBudget "
+                         "pressure pick per flush)")
     ap.add_argument("--recover", action="store_true",
                     help="restore the latest committed snapshot from "
                          "--snapshot-dir before serving (crash-restart "
@@ -116,15 +123,6 @@ def main(argv=None):
 
     if args.recover and args.snapshot_dir is None:
         ap.error("--recover requires --snapshot-dir")
-    if args.snapshot_dir is not None and args.paged and args.host_pages:
-        # the host cold tier lives OUTSIDE LMEngineState (pages already
-        # evicted to host DRAM are invisible to the snapshot), so a
-        # restore would resurrect slots whose cold pages are gone —
-        # refuse instead of silently corrupting (engine.EngineState's
-        # durability classification)
-        ap.error("--snapshot-dir is incompatible with --host-pages: the "
-                 "host cold tier is outside the snapshot's persistence "
-                 "domain")
 
     cfg = reduced(get_config(args.arch)).replace(dtype="float32")
     ctx = local_context()
@@ -142,20 +140,31 @@ def main(argv=None):
     step, state = build_engine(cfg, ctx, ecfg, params)
     swap = None
     cold = None
+    budget = None
     if ecfg.paged and ecfg.host_pages:
-        swap, cold, _ = eng.make_swap_service(ecfg, cfg, ctx)
+        # one ledger for both consumers of host memory: cold-tier slabs
+        # reserve DRAM against it, and the durability tier reads its
+        # pressure when splitting full-vs-delta flushes
+        pcfg = eng.lm_paged_kv_config(ecfg, cfg, ctx)
+        page_b = (2 * pcfg.layers * pcfg.page_size * pcfg.kv_heads
+                  * pcfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+        budget = placement.MemoryBudget(
+            dram_bytes=2 * ecfg.host_pages * page_b, nvm_bytes=1 << 34)
+        swap, cold, _ = eng.make_swap_service(ecfg, cfg, ctx, budget=budget)
 
     mgr = None
     recovered_step = None
     if args.snapshot_dir is not None:
         mgr = DurabilityManager(DurabilityConfig(
-            args.snapshot_dir, every=args.snapshot_every, mode="full",
-        ))
+            args.snapshot_dir, every=args.snapshot_every,
+            mode=args.durability_mode,
+        ), budget=budget, cold=cold)
     if args.recover:
         # fresh state is the geometry template; the restored tree replaces
         # it (copy per leaf: the jit step donates its input, so recovered
-        # buffers must be owned)
-        state, recovered_step = recover(args.snapshot_dir, state)
+        # buffers must be owned). With a cold tier attached the parked
+        # slabs + residency maps restore into it from the same stream.
+        state, recovered_step = recover(args.snapshot_dir, state, cold=cold)
         state = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True),
                                        state)
         print(f"recovered engine state at step {recovered_step} from "
@@ -267,6 +276,15 @@ def main(argv=None):
         committed = mgr.committed()
         print(f"  snapshots: {len(committed)} committed to "
               f"{args.snapshot_dir} ({mgr.flush_bytes()} bytes flushed)")
+        s = mgr.stats()
+        print(f"  durability: {s['fsyncs']} fsyncs / {s['wal_records']} WAL "
+              f"records, {s['disk_bytes']} bytes on disk, "
+              f"{s['gc_removed']} artifacts GC'd, flush wait "
+              f"{s['flush_wait_us']:.0f}us, {s['flushes_skipped']} skipped")
+        if budget is not None:
+            print(f"  budget: dram {budget.used('dram')}/"
+                  f"{budget.capacity['dram']}B used, "
+                  f"{budget.bytes_written['nvm']}B written to the NVM tier")
     if cold is not None:
         print(f"  cold tier: {cold.evictions} evictions, "
               f"{cold.restores} restores, {cold.pages_used} pages stranded")

@@ -361,9 +361,18 @@ class HostColdTier:
     reads. All movement across the tier boundary is explicit:
     ``store`` does ``jax.device_get`` on :func:`swap_out`'s buffers,
     ``load`` hands back numpy buffers for ``jax.device_put`` into
-    :func:`swap_in`."""
+    :func:`swap_in`.
 
-    def __init__(self, cfg: PagedKVConfig, host_pages: int, dtype=np.float32):
+    When a ``placement.MemoryBudget`` is attached, every store reserves
+    ``cold:<slot>`` on the shared DRAM ledger and every drop releases it —
+    the same budget the durability tier reads, so KV eviction and
+    flush-placement decisions see one pool (paper's unified server-memory
+    view). The tier is part of the persistence domain: ``state_arrays`` /
+    ``restore_arrays`` round-trip the slabs and allocator bookkeeping
+    through the durability snapshot+WAL path (``fault.recovery``)."""
+
+    def __init__(self, cfg: PagedKVConfig, host_pages: int, dtype=np.float32,
+                 budget=None):
         self.cfg = cfg
         self.host_pages = int(host_pages)
         shape = (cfg.layers, self.host_pages, cfg.page_size, cfg.kv_heads,
@@ -375,6 +384,14 @@ class HostColdTier:
         self.order: list[int] = []  # eviction order (FIFO restore)
         self.evictions = 0
         self.restores = 0
+        self.budget = budget
+        self.budget_refusals = 0
+
+    @property
+    def page_bytes(self) -> int:
+        """Host bytes one parked page costs (k + v slabs)."""
+        c = self.cfg
+        return 2 * c.layers * c.page_size * c.kv_heads * c.head_dim * self.k.dtype.itemsize
 
     @property
     def free_pages(self) -> int:
@@ -387,6 +404,17 @@ class HostColdTier:
     def can_store(self, n_pages: int) -> bool:
         return n_pages <= len(self.free)
 
+    def can_accept(self, slot: int, n_pages: int) -> bool:
+        """Full admission check — free pages AND budget headroom — without
+        reserving. The swap service must call this *before* ``swap_out``
+        frees device pages: a refusal after the free would lose the KV."""
+        if int(slot) in self.slot_pages or not self.can_store(n_pages):
+            return False
+        if self.budget is not None and \
+                self.budget.free("dram") < n_pages * self.page_bytes:
+            return False
+        return True
+
     def has(self, slot: int) -> bool:
         return slot in self.slot_pages
 
@@ -395,6 +423,11 @@ class HostColdTier:
         ``slot``. device_get happens here — the tier boundary crossing."""
         slot, n_pages = int(slot), int(n_pages)
         if slot in self.slot_pages or not self.can_store(n_pages):
+            return False
+        if self.budget is not None and not self.budget.reserve(
+            f"cold:{slot}", n_pages * self.page_bytes
+        ):
+            self.budget_refusals += 1
             return False
         kd, vd = jax.device_get(k), jax.device_get(v)
         ids = [self.free.pop() for _ in range(n_pages)]
@@ -428,11 +461,84 @@ class HostColdTier:
         ids = self.slot_pages.pop(slot, None)
         if ids is None:
             return
+        if self.budget is not None:
+            self.budget.release(f"cold:{slot}")
         self.free.extend(ids)
         if slot in self.order:
             self.order.remove(slot)
         if restored:
             self.restores += 1
+
+    # -- persistence-domain serialization (fault.recovery flush/recover) ----
+
+    def state_arrays(self) -> dict[str, np.ndarray]:
+        """Snapshot the tier as fixed-shape arrays (flush payload).
+
+        Variable-length allocator state is padded with -1 sentinels, with
+        list *order preserved* — the free list is a stack popped from the
+        end and ``order`` drives FIFO restore, so recovery must reproduce
+        both exactly for the restarted allocator to stay deterministic."""
+        hp = self.host_pages
+        slot_of = np.full((hp,), -1, np.int64)
+        rank_of = np.zeros((hp,), np.int64)
+        for slot, ids in self.slot_pages.items():
+            for r, p in enumerate(ids):
+                slot_of[p] = slot
+                rank_of[p] = r
+        free = np.full((hp,), -1, np.int64)
+        if self.free:
+            free[: len(self.free)] = np.asarray(self.free, np.int64)
+        order = np.full((hp,), -1, np.int64)
+        if self.order:
+            order[: len(self.order)] = np.asarray(self.order, np.int64)
+        return {
+            "k": self.k.copy(),
+            "v": self.v.copy(),
+            "slot_of_page": slot_of,
+            "rank_of_page": rank_of,
+            "free_list": free,
+            "order": order,
+            "counters": np.asarray([self.evictions, self.restores], np.int64),
+        }
+
+    def zero_arrays(self) -> dict[str, np.ndarray]:
+        """A zeroed ``state_arrays`` tree — the restore template a fresh
+        process hands to ``checkpoint.restore`` before replay."""
+        hp = self.host_pages
+        return {
+            "k": np.zeros_like(self.k),
+            "v": np.zeros_like(self.v),
+            "slot_of_page": np.zeros((hp,), np.int64),
+            "rank_of_page": np.zeros((hp,), np.int64),
+            "free_list": np.zeros((hp,), np.int64),
+            "order": np.zeros((hp,), np.int64),
+            "counters": np.zeros((2,), np.int64),
+        }
+
+    def restore_arrays(self, arrays) -> None:
+        """Rebuild slabs + allocator from a recovered ``state_arrays`` tree."""
+        self.k = np.array(jax.device_get(arrays["k"]), dtype=self.k.dtype)
+        self.v = np.array(jax.device_get(arrays["v"]), dtype=self.v.dtype)
+        slot_of = np.asarray(jax.device_get(arrays["slot_of_page"]))
+        rank_of = np.asarray(jax.device_get(arrays["rank_of_page"]))
+        free = np.asarray(jax.device_get(arrays["free_list"]))
+        order = np.asarray(jax.device_get(arrays["order"]))
+        ev, rs = np.asarray(jax.device_get(arrays["counters"]))
+        by_slot: dict[int, list[tuple[int, int]]] = {}
+        for p in range(self.host_pages):
+            s = int(slot_of[p])
+            if s >= 0:
+                by_slot.setdefault(s, []).append((int(rank_of[p]), p))
+        self.slot_pages = {
+            s: [p for _r, p in sorted(v)] for s, v in by_slot.items()
+        }
+        self.free = [int(p) for p in free if p >= 0]
+        self.order = [int(s) for s in order if s >= 0]
+        self.evictions, self.restores = int(ev), int(rs)
+        if self.budget is not None:
+            self.budget.release_prefix("cold:")
+            for s, ids in self.slot_pages.items():
+                self.budget.reserve(f"cold:{s}", len(ids) * self.page_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -195,13 +195,13 @@ def test_snapshot_every_bounds_replay_chain():
     with tempfile.TemporaryDirectory() as d:
         mgr = frec.DurabilityManager(frec.DurabilityConfig(
             d, mode="delta", snapshot_every=2))
-        kinds = []
+        recs = []
         for _ in range(6):
             state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
-            kinds.append(mgr.flush(state).kind)
-        mgr.wait()
+            recs.append(mgr.flush(state))
+        mgr.wait()  # kinds resolve on the worker — read after the drain
         # every=1 flushes: full at step1, delta at 2, full at 3 (gap==2)...
-        assert kinds == ["full", "delta"] * 3
+        assert [r.kind for r in recs] == ["full", "delta"] * 3
 
 
 def test_tx_log_lap_forces_full_snapshot():

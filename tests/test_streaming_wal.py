@@ -1,0 +1,294 @@
+"""Log-structured streaming WAL (checkpoint.wal) + the shared MemoryBudget.
+
+Framing round-trips, group-commit fsync accounting, the torn-tail property
+(truncation at the last valid CRC never loses a record the cut didn't
+reach), GC keeping the durability directory bounded over a long soak, and
+the budget's pressure signal steering the adaptive full-vs-delta split
+plus flush backpressure stats.
+"""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import wal
+from repro.core import placement
+from repro.fault import recovery as frec
+from tests.test_recovery import (
+    _assert_tree_equal, _kvs_steps, _mk_kvs, _mk_tx, _tx_steps,
+)
+
+I32 = jnp.int32
+
+
+# ------------------------------ framing -------------------------------------
+
+def _sample_arrays():
+    return {
+        "f32": np.arange(12, dtype=np.float32).reshape(3, 4) * 0.5,
+        "i32": np.asarray([[7, -3], [0, 2 ** 30]], np.int32),
+        "i64_scalar": np.asarray(41, np.int64),  # 0-d must stay 0-d
+        "bool": np.asarray([True, False, True]),
+        "bf16": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) * 0.25,
+        "empty": np.zeros((0, 3), np.float32),
+    }
+
+
+def test_pack_unpack_roundtrip():
+    arrays = _sample_arrays()
+    meta = {"step": 17, "kind": 2, "neg": -9}
+    out, meta2 = wal.unpack_record(wal.pack_record(arrays, meta))
+    assert meta2 == meta
+    assert set(out) == set(arrays)
+    for k, a in arrays.items():
+        b = out[k]
+        assert np.asarray(a).shape == b.shape, k
+        assert np.asarray(a).dtype == b.dtype, k
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_frame_crc_rejects_corruption():
+    payload = wal.pack_record({"x": np.arange(4, dtype=np.int32)}, {"step": 0})
+    buf = bytearray(wal.frame(payload))
+    buf[-2] ^= 0xFF  # flip a payload byte: CRC must catch it
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "seg_0.log")
+        with open(path, "wb") as f:
+            f.write(bytes(buf))
+        records, valid_end, torn = wal.scan_segment(path)
+        assert records == [] and valid_end == 0 and torn
+
+
+# --------------------------- group commit -----------------------------------
+
+def test_group_fsync_one_per_group():
+    with tempfile.TemporaryDirectory() as d:
+        w = wal.SegmentWriter(d)
+        for i in range(8):
+            w.append(i, {"x": np.asarray([i], np.int64)}, {"step": i})
+            if (i + 1) % 4 == 0:
+                w.sync()
+        assert w.records == 8
+        assert w.fsyncs == 2  # one fsync covered each group of 4
+        w.sync()  # no pending records: must not fsync again
+        assert w.fsyncs == 2
+        w.close()
+        records, truncated = wal.read_segments(d)
+        assert [r[0] for r in records] == list(range(8))
+        assert truncated == []
+
+
+def test_rotation_opens_new_segment_and_gc_reaps_covered():
+    with tempfile.TemporaryDirectory() as d:
+        w = wal.SegmentWriter(d)
+        w.append(0, {"x": np.zeros(4, np.int64)}, {"step": 0})
+        w.rotate()
+        w.append(1, {"x": np.ones(4, np.int64)}, {"step": 1})
+        w.rotate()
+        assert len(wal.list_segments(d)) == 2
+        removed = wal.gc_covered(d, 0)
+        assert len(removed) == 1 and removed[0].endswith("seg_0.log")
+        assert [s for s, _ in wal.list_segments(d)] == [1]
+
+
+# ------------------------- torn-tail property --------------------------------
+
+def _write_records(d, n, sync_every):
+    """n framed records via the writer; returns cumulative frame ends."""
+    w = wal.SegmentWriter(d, segment_bytes=1 << 30)
+    ends = []
+    off = 0
+    for i in range(n):
+        arrays = {"x": np.arange(3 + i, dtype=np.int64) * (i + 1),
+                  "s": np.asarray(i, np.int32)}
+        off += w.append(i, arrays, {"step": i})
+        ends.append(off)
+        if (i + 1) % sync_every == 0:
+            w.sync()
+    w.close()
+    return ends
+
+
+@settings(max_examples=40, deadline=None)
+@given(cut=st.integers(0, 10 ** 9), n=st.integers(1, 7),
+       sync_every=st.integers(1, 3))
+def test_torn_tail_truncates_at_last_valid_frame(cut, n, sync_every):
+    with tempfile.TemporaryDirectory() as d:
+        ends = _write_records(d, n, sync_every)
+        total = ends[-1]
+        cut = cut % (total + 1)
+        (_, path), = wal.list_segments(d)
+        with open(path, "r+b") as f:
+            f.truncate(cut)
+        survivors = sum(1 for e in ends if e <= cut)
+        records, truncated = wal.read_segments(d, truncate_torn=True)
+        # every record wholly below the cut survives — in particular every
+        # record a group fsync covered (the cut can only land at or past
+        # the last synced offset in a real crash)
+        assert [r[0] for r in records] == list(range(survivors))
+        assert os.path.getsize(path) == (ends[survivors - 1] if survivors
+                                         else 0)
+        assert bool(truncated) == (cut not in (0, *ends))
+        # idempotent: a second recovery scan sees a clean log
+        records2, truncated2 = wal.read_segments(d, truncate_torn=True)
+        assert [r[0] for r in records2] == list(range(survivors))
+        assert truncated2 == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(garbage=st.integers(1, 64))
+def test_torn_tail_with_trailing_garbage(garbage):
+    with tempfile.TemporaryDirectory() as d:
+        ends = _write_records(d, 3, 2)
+        (_, path), = wal.list_segments(d)
+        with open(path, "ab") as f:
+            f.write(b"\xde\xad" * garbage)
+        records, truncated = wal.read_segments(d, truncate_torn=True)
+        assert [r[0] for r in records] == [0, 1, 2]
+        assert truncated == [path]
+        assert os.path.getsize(path) == ends[-1]
+
+
+def test_kvs_torn_segment_tail_recovers_covered_prefix():
+    """The KVS leg of the acceptance triple: dirty-row deltas streamed to
+    a segment, a crash tears the tail, recovery truncates at the last
+    valid CRC and replays every group-fsync-covered record bit-for-bit."""
+    kcfg, ecfg, state, step, drain = _mk_kvs()
+    rng = np.random.default_rng(4)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, every=1, snapshot_every=1000, mode="delta", group_records=2))
+        for _ in range(6):
+            state = _kvs_steps(state, step, drain, rng, kcfg, ecfg, 1)
+            mgr.flush(state)
+        mgr.wait()  # the trailing group fsync: all 6 records are covered
+        assert mgr.fsyncs < mgr.wal_records
+        segs = wal.list_segments(d)
+        assert segs, "delta mode must stream segments"
+        path = segs[-1][1]
+        clean = os.path.getsize(path)
+        with open(path, "ab") as f:
+            f.write(wal.MAGIC + b"\x99\x00\x00\x00\xab\xcd\xee")
+        recovered, covered = frec.recover(d, state)
+        assert os.path.getsize(path) == clean, "torn tail not truncated"
+        assert covered == int(np.asarray(jax.device_get(state.steps)))
+        _assert_tree_equal(jax.device_get(state), jax.device_get(recovered))
+
+
+# ------------------------ GC over a long soak --------------------------------
+
+def test_gc_bounds_directory_over_long_run():
+    """20+ flushes with a short full-snapshot period: superseded segments,
+    legacy npz deltas, and old step_<N> dirs must be reaped, the directory
+    staying O(snapshot period), while recovery still lands bit-for-bit."""
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        cfg = frec.DurabilityConfig(d, every=1, snapshot_every=4,
+                                    mode="adaptive", dirty_threshold=0.35,
+                                    group_records=2)
+        mgr = frec.DurabilityManager(cfg)
+        for _ in range(24):
+            state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 1)
+            mgr.flush(state)
+        mgr.wait()
+        assert mgr.gc_removed > 0, "GC never reaped a covered artifact"
+        entries = os.listdir(d)
+        # at most: the covering snapshot, one older not-yet-covered one,
+        # and the live segment(s) of the current chain
+        assert len(entries) <= 6, entries
+        steps_dirs = [e for e in entries if e.startswith("step_")]
+        assert len(steps_dirs) <= 2, entries
+        recovered, covered = frec.recover(d, state, tx_cfg=tx_cfg)
+        assert covered == int(state.steps)
+        _assert_tree_equal(jax.device_get(state), jax.device_get(recovered))
+
+
+# ------------------------- MemoryBudget -------------------------------------
+
+def test_memory_budget_ledger():
+    b = placement.MemoryBudget(dram_bytes=100, nvm_bytes=50)
+    assert b.reserve("a", 60)
+    assert not b.reserve("a", 10), "duplicate name must be refused"
+    assert not b.reserve("b", 50), "overflow must be refused"
+    assert b.reserve("b", 40)
+    assert b.free("dram") == 0 and b.free_frac("dram") == 0.0
+    b.release("a")
+    assert b.used("dram") == 40
+    assert b.reserve("c1", 10) and b.reserve("c2", 10)
+    b.release_prefix("c")
+    assert b.used("dram") == 40
+    b.note_write(33)
+    assert b.bytes_written["nvm"] == 33
+
+
+def test_budget_pressure_raises_durability_threshold():
+    b = placement.MemoryBudget(dram_bytes=100, nvm_bytes=100)
+    assert b.durability_threshold(0.4) == 0.4  # empty: base threshold
+    b.reserve("half", 50)
+    assert 0.4 < b.durability_threshold(0.4) < 1.0
+    b.reserve("rest", 50)
+    assert b.durability_threshold(0.4) == 1.0  # full: always prefer delta
+
+
+def test_budget_steers_adaptive_split_to_delta():
+    """dirty_threshold=0 normally forces full every flush; a saturated
+    DRAM budget must override it to the smaller delta writes."""
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(1)
+
+    def run(budget):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = frec.DurabilityManager(
+                frec.DurabilityConfig(d, every=1, snapshot_every=1000,
+                                      mode="adaptive", dirty_threshold=0.0),
+                budget=budget)
+            recs = []
+            s2 = state
+            r = np.random.default_rng(1)
+            for _ in range(4):
+                s2 = _tx_steps(s2, step, drain, r, tx_cfg, ecfg, 1)
+                recs.append(mgr.flush(s2))
+            mgr.wait()
+            return [rec.kind for rec in recs]
+
+    kinds_free = run(None)
+    assert kinds_free == ["full"] * 4  # threshold 0: everything dirty wins
+
+    full = placement.MemoryBudget(dram_bytes=10, nvm_bytes=1 << 20)
+    full.reserve("pinned", 10)
+    kinds_pressured = run(full)
+    assert kinds_pressured[0] == "full"  # no base yet: full is mandatory
+    assert kinds_pressured[1:] == ["delta"] * 3
+
+
+# ------------------------- flush backpressure --------------------------------
+
+def test_flush_skip_busy_and_wait_stats():
+    tx_cfg, ecfg, state, step, drain = _mk_tx()
+    rng = np.random.default_rng(2)
+    state = _tx_steps(state, step, drain, rng, tx_cfg, ecfg, 2)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, every=1, mode="full", skip_busy=True))
+        mgr._ckpt.submit(lambda: time.sleep(0.25))  # wedge the worker
+        rec = mgr.flush(state)
+        assert rec.kind == "skipped" and not rec.committed
+        assert mgr.stats()["flushes_skipped"] == 1
+        mgr.wait()
+        rec2 = mgr.flush(state)
+        mgr.wait()
+        assert rec2.kind == "full" and rec2.committed
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = frec.DurabilityManager(frec.DurabilityConfig(
+            d, every=1, mode="full"))  # no skip: flush waits and records it
+        mgr._ckpt.submit(lambda: time.sleep(0.2))
+        rec = mgr.flush(state)
+        mgr.wait()
+        assert rec.kind == "full" and rec.committed
+        assert mgr.stats()["flush_wait_us"] >= 0.1e6
